@@ -1,0 +1,79 @@
+"""Paper Fig. 2: relative error of Adasum vs synchronous-SGD Sum against
+the exact-Hessian sequential emulation, on a small NLL model (the
+paper uses LeNet-5/MNIST; we use multinomial logistic regression where
+the Fisher approximation H ~ g gT the derivation assumes holds exactly
+in expectation, and jax.hessian is cheap)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit
+
+
+def make_problem(d=12, c=4, n=512, seed=0):
+    rng = np.random.default_rng(seed)
+    w_true = rng.standard_normal((d, c))
+    X = rng.standard_normal((n, d))
+    y = np.argmax(X @ w_true + 0.5 * rng.standard_normal((n, c)), axis=1)
+    return jnp.asarray(X, jnp.float32), jnp.asarray(y)
+
+
+def nll(w, X, y):
+    logits = X @ w.reshape(12, 4)
+    return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(len(y)), y])
+
+
+def run_regime(lr_scale: float, steps: int = 25, nodes: int = 8):
+    """lr = lr_scale / ||g||^2. The paper's LeNet-5 setup (§3.7/§5.4) uses
+    a deliberately AGGRESSIVE schedule ('barely reaches the target
+    accuracy'); the sequential-emulation advantage of Adasum lives in that
+    regime (the Hessian correction alpha*H*g is O(1) there). At small lr
+    the exact emulation degenerates to a plain sum and Sum trivially
+    matches it."""
+    from repro.core.adasum import adasum_tree_reduce, sum_reduce
+    X, y = make_problem()
+    w = jnp.zeros((48,))
+    grad = jax.jit(jax.grad(nll))
+    hess = jax.jit(jax.hessian(nll))
+    per = len(y) // nodes
+    errs_ada, errs_sum = [], []
+    for step in range(steps):
+        gs = [grad(w, X[i * per:(i + 1) * per], y[i * per:(i + 1) * per])
+              for i in range(nodes)]
+        H = hess(w, X, y)
+        gn = np.mean([float(jnp.vdot(g, g)) for g in gs])
+        lr = lr_scale / (gn + 1e-12)
+
+        def emulate(g1, g2):
+            c12 = g2 - lr * H @ g1          # g2 evaluated after g1's step
+            c21 = g1 - lr * H @ g2
+            return 0.5 * ((g1 + c12) + (g2 + c21))
+
+        items = list(gs)
+        while len(items) > 1:
+            items = [emulate(items[2 * i], items[2 * i + 1])
+                     for i in range(len(items) // 2)]
+        g_exact = items[0]
+        g_ada = adasum_tree_reduce([{"w": g} for g in gs])["w"]
+        g_sum = sum_reduce([{"w": g} for g in gs])["w"]
+        nrm = float(jnp.linalg.norm(g_exact)) + 1e-12
+        errs_ada.append(float(jnp.linalg.norm(g_ada - g_exact)) / nrm)
+        errs_sum.append(float(jnp.linalg.norm(g_sum - g_exact)) / nrm)
+        w = w - lr * g_exact
+    return float(np.mean(errs_ada)), float(np.mean(errs_sum))
+
+
+def main():
+    ada_a, sum_a = run_regime(2.0)    # aggressive (the paper's regime)
+    ada_c, sum_c = run_regime(0.1)    # conservative (honest ablation)
+    emit("fig2_emulation_relerr_aggressive_lr", 0.0,
+         f"adasum={ada_a:.4f};sum={sum_a:.4f};adasum_better={ada_a < sum_a}")
+    emit("fig2_emulation_relerr_conservative_lr", 0.0,
+         f"adasum={ada_c:.4f};sum={sum_c:.4f};adasum_better={ada_c < sum_c}")
+    return ada_a, sum_a
+
+
+if __name__ == "__main__":
+    main()

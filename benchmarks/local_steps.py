@@ -1,0 +1,54 @@
+"""Paper Table 2 (§5.2): local optimizer steps before communicating.
+Reports time/step and loss after a fixed token budget for k=1 vs k=4
+local steps — the slow-interconnect trade (fewer syncs, slightly worse
+algorithmic efficiency, better wall clock)."""
+from __future__ import annotations
+
+from .common import emit, run_devices
+
+CODE = r"""
+import time, numpy as np, jax, jax.numpy as jnp
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+from repro.parallel import make_runtime
+from repro.parallel.policy import RunPolicy
+from repro.data import DataConfig, make_source
+
+cfg = ModelConfig("bench", "dense", 2, 64, 4, 2, 128, 257, head_dim=16)
+model = build_model(cfg, attn_chunk=32)
+mesh = jax.make_mesh((8, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+TOKENS = 64 * 32 * 40          # fixed data budget
+for k in (1, 4):
+    rows = 32
+    rpol = RunPolicy(span=8, backend="gspmd_tree", optimizer="momentum",
+                     combine_op="adasum", local_steps=k)
+    rt = make_runtime(model, mesh, rpol, lr=0.3)
+    state = rt.init_state(jax.random.key(0))
+    src = make_source(DataConfig(seq_len=64, global_batch=rows * k,
+                                 vocab_size=cfg.vocab_size, seed=5), cfg)
+    step_fn = jax.jit(rt.train_step, donate_argnums=(0,))
+    n_steps = TOKENS // (64 * rows * k)
+    b = {kk: jnp.asarray(v) for kk, v in src.batch(0).items()}
+    state, mets = step_fn(state, b)      # compile
+    t0 = time.perf_counter()
+    loss = None
+    for step in range(1, n_steps):
+        b = {kk: jnp.asarray(v) for kk, v in src.batch(step).items()}
+        state, mets = step_fn(state, b)
+        loss = float(mets["loss"])
+    dt = (time.perf_counter() - t0) / max(n_steps - 1, 1)
+    print(f"RESULT {k} {dt*1e6:.1f} {loss:.4f} {n_steps}")
+"""
+
+
+def main():
+    out = run_devices(CODE, devices=8, timeout=1200)
+    for line in out.splitlines():
+        if line.startswith("RESULT"):
+            _, k, us, loss, steps = line.split()
+            emit(f"tab2_local_steps_k{k}", float(us),
+                 f"loss_after_budget={loss};sync_rounds={steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Fig. 1: per-layer gradient orthogonality over training — starts
+near 1/n (parallel gradients) and climbs toward 1 (orthogonal) as
+training proceeds."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit
+
+
+def main(nodes: int = 8, steps: int = 60):
+    from repro.configs.base import ModelConfig
+    from repro.models import build_model
+    from repro.core.orthogonality import per_layer_orthogonality
+    from repro.core.adasum import adasum_tree_reduce
+    from repro.data import DataConfig, make_source
+
+    cfg = ModelConfig("bench", "dense", 2, 64, 4, 2, 128, 257, head_dim=16)
+    model = build_model(cfg, attn_chunk=32)
+    params = model.init(jax.random.key(0))
+    src = make_source(DataConfig(seq_len=64, global_batch=nodes * 4,
+                                 vocab_size=cfg.vocab_size, seed=3), cfg)
+    grad = jax.jit(jax.grad(lambda p, b: model.loss(p, b)[0]))
+    traj = []
+    for step in range(steps):
+        b = {k: jnp.asarray(v) for k, v in src.batch(step).items()}
+        lanes = [{kk: v[i::nodes] for kk, v in b.items()} for i in range(nodes)]
+        gs = [grad(params, lb) for lb in lanes]
+        o = per_layer_orthogonality(gs)
+        traj.append(float(o["__mean__"]))
+        combined = adasum_tree_reduce(gs)
+        params = jax.tree.map(
+            lambda p, g: p - 0.3 * g.astype(p.dtype), params, combined)
+    early = float(np.mean(traj[:5]))
+    late = float(np.mean(traj[-5:]))
+    emit("fig1_orthogonality", 0.0,
+         f"early={early:.3f};late={late:.3f};rises={late > early};"
+         f"floor={1.0 / nodes:.3f}")
+    return traj
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Roofline report: reads results/dryrun/*.json (produced by
+repro.launch.dryrun) and emits the per-cell three-term roofline."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from .common import emit
+
+
+def main(pattern: str = "results/dryrun/*.json"):
+    files = sorted(glob.glob(pattern))
+    if not files:
+        emit("roofline_missing", 0.0, "run repro.launch.dryrun first")
+        return
+    n_ok = n_skip = n_fail = 0
+    for f in files:
+        r = json.loads(Path(f).read_text())
+        tag = Path(f).stem
+        if r["status"] == "SKIP":
+            n_skip += 1
+            continue
+        if r["status"] != "OK":
+            n_fail += 1
+            emit(f"roofline_{tag}", 0.0, "FAILED")
+            continue
+        n_ok += 1
+        rf = r["roofline"]
+        dom_s = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        emit(f"roofline_{tag}", dom_s * 1e6,
+             f"dom={rf['dominant']};compute_s={rf['compute_s']:.4f};"
+             f"memory_s={rf['memory_s']:.4f};"
+             f"collective_s={rf['collective_s']:.4f};"
+             f"useful={rf.get('useful_ratio', 0):.3f};"
+             f"hbm_GiB={r['memory'].get('total_hbm_bytes', 0) / 2**30:.2f}")
+    emit("roofline_summary", 0.0, f"ok={n_ok};skip={n_skip};fail={n_fail}")
+
+
+if __name__ == "__main__":
+    main()

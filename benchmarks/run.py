@@ -1,0 +1,57 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV. Mapping to the paper:
+    fig1  orthogonality during training          (§3.6)
+    fig2  exact-Hessian emulation error          (§3.7)
+    fig4  ADASUMRVH vs sum-allreduce latency     (§4.2.3)
+    fig6  Sum-vs-Adasum convergence vs batch     (§5.4 / §5.1.2)
+    tab1  partitioned Adasum + optimizer state   (§4.3)
+    tab2  local steps before communicating       (§5.2)
+    tab3  Adam/LAMB x Sum/Adasum convergence     (§5.3)
+    roofline  dry-run roofline terms per cell    (EXPERIMENTS.md §Roofline)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (algorithmic_efficiency, hessian_emulation, lm_convergence,
+               local_steps, orthogonality, partitioned_adasum, roofline,
+               rvh_latency)
+
+BENCHES = {
+    "fig1_orthogonality": orthogonality.main,
+    "fig2_hessian_emulation": hessian_emulation.main,
+    "fig4_rvh_latency": rvh_latency.main,
+    "fig6_algorithmic_efficiency": algorithmic_efficiency.main,
+    "tab1_partitioned_adasum": partitioned_adasum.main,
+    "tab2_local_steps": local_steps.main,
+    "tab3_lm_convergence": lm_convergence.main,
+    "roofline": roofline.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in BENCHES.items():
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn()
+        except Exception as e:
+            failed.append(name)
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

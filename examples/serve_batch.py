@@ -1,0 +1,18 @@
+"""Batched serving example: prefill a batch of prompts and greedy-decode
+continuations from a reduced assigned architecture (rwkv6 by default —
+constant-memory decode state).
+
+    PYTHONPATH=src python examples/serve_batch.py [arch]
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import main as serve_main
+
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "rwkv6-7b"
+    serve_main(["--arch", arch, "--reduced", "--batch", "4",
+                "--prompt-len", "16", "--gen", "16"])

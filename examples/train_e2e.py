@@ -1,0 +1,87 @@
+"""End-to-end training example: a multi-layer LM trained for a few
+hundred steps with Adasum DP, checkpointing, and fault-tolerant resume.
+
+Default: ~5M params x 300 steps (CPU-friendly). `--big` switches to a
+~100M-param model (10L x 640d, 50k vocab) on the same code path — the
+configuration the paper-scale run would use; budget hours on a 1-core
+CPU container, minutes on a real accelerator.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python examples/train_e2e.py [--big] [--steps N]
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model, count_params
+from repro.parallel import make_runtime
+from repro.parallel.policy import RunPolicy
+from repro.data import DataConfig, make_source
+from repro.checkpoint import CheckpointManager
+from repro.runtime import StepMonitor
+from repro.launch.mesh import make_local_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--big", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="runs/train_e2e")
+    args = ap.parse_args()
+
+    if args.big:
+        cfg = ModelConfig("e2e-100m", "dense", n_layers=10, d_model=640,
+                          n_heads=10, n_kv_heads=5, d_ff=2560,
+                          vocab_size=50_000, head_dim=64)
+    else:
+        cfg = ModelConfig("e2e-5m", "dense", n_layers=4, d_model=128,
+                          n_heads=4, n_kv_heads=2, d_ff=512,
+                          vocab_size=8_192, head_dim=32)
+    model = build_model(cfg, attn_chunk=min(128, args.seq))
+    print(f"[e2e] {cfg.name}: {count_params(cfg)/1e6:.1f}M params")
+
+    n = len(jax.devices())
+    mesh = make_local_mesh(max(1, n // 1), 1)
+    rpol = RunPolicy(span=0, backend="rvh" if n > 1 else "gspmd_tree",
+                     optimizer="adam", combine_op="adasum")
+    rt = make_runtime(model, mesh, rpol, lr=1e-3)
+    state = rt.init_state(jax.random.key(0))
+
+    ckpt = CheckpointManager(args.ckpt, keep=2)
+    start = 0
+    if ckpt.latest_step() is not None:
+        state = ckpt.restore(state)
+        start = int(jax.device_get(state["step"]))
+        print(f"[e2e] resumed at step {start}")
+
+    src = make_source(DataConfig(seq_len=args.seq, global_batch=args.batch,
+                                 vocab_size=cfg.vocab_size, seed=11), cfg)
+    step_fn = jax.jit(rt.train_step, donate_argnums=(0,))
+    mon = StepMonitor()
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in src.batch(step).items()}
+        mon.start()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        mon.stop()
+        if step % 25 == 0 or step == args.steps - 1:
+            print(f"[e2e] step {step:4d} loss {loss:.4f} "
+                  f"({(time.time()-t0)/max(step-start+1,1):.2f}s/step avg)")
+        if (step + 1) % 100 == 0:
+            ckpt.save(step + 1, state)
+    ckpt.save(args.steps, state)
+    print(f"[e2e] done. monitor={mon.summary()}")
+
+
+if __name__ == "__main__":
+    main()

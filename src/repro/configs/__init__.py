@@ -1,0 +1,2 @@
+"""Assigned architecture configs (+ registry)."""
+from .base import ModelConfig, ARCH_IDS, get_config, get_reduced, canonical, all_configs

@@ -1,0 +1,13 @@
+"""Core Adasum library (the paper's primary contribution).
+
+- adasum:        the pairwise combiner + reference tree/linear reductions
+- rvh:           ADASUMRVH (Algorithm 1) over TPU mesh axes via shard_map
+- fusion:        tensor fusion with per-layer boundary bookkeeping (§4.4.3)
+- orthogonality: the per-layer orthogonality metric (§3.6, Fig. 1)
+- combine:       CombineConfig + gradient-combination dispatch
+- dist_opt:      DistributedOptimizer (pre/post-optimizer Adasum, ZeRO-1)
+"""
+from .adasum import (adasum_pair, adasum_pair_pytree, adasum_tree_reduce,
+                     adasum_linear_reduce, adasum_scalars, sum_reduce, EPS)
+from .orthogonality import per_layer_orthogonality
+from . import fusion, rvh

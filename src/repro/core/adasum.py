@@ -1,0 +1,127 @@
+"""Adasum: the paper's adaptive gradient combiner (Section 3).
+
+Pairwise op, reference recursive-tree reduction, and per-layer pytree
+application. These are the *reference* (non-distributed) forms; the
+distributed AdasumRVH lives in :mod:`repro.core.rvh`.
+
+All dot products / norms accumulate in a configurable high precision
+(paper 4.4.1 uses double on CPU/GPU; on TPU fp32 is the idiomatic
+equivalent — see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+# Guard against division by zero for all-zero gradients (e.g. untouched
+# MoE experts). With EPS in the denominator the combiner degrades to a
+# plain sum, which is the correct limit: a zero gradient is orthogonal
+# to everything.
+EPS = 1e-30
+
+PyTree = Any
+
+
+def _flat_dot(a: jnp.ndarray, b: jnp.ndarray, acc_dtype: jnp.dtype) -> jnp.ndarray:
+    """Dot product of two equally-shaped arrays, accumulated in acc_dtype."""
+    a = a.astype(acc_dtype).reshape(-1)
+    b = b.astype(acc_dtype).reshape(-1)
+    return jnp.dot(a, b)
+
+
+def adasum_scalars(dot: jnp.ndarray, n1sq: jnp.ndarray, n2sq: jnp.ndarray):
+    """The two Adasum coefficients given dot = g1·g2, n1sq = ‖g1‖², n2sq = ‖g2‖².
+
+    Returns (s1, s2) with  Adasum(g1,g2) = s1*g1 + s2*g2:
+        s1 = 1 - dot / (2‖g1‖²),   s2 = 1 - dot / (2‖g2‖²).
+    """
+    s1 = 1.0 - dot / (2.0 * n1sq + EPS)
+    s2 = 1.0 - dot / (2.0 * n2sq + EPS)
+    return s1, s2
+
+
+def adasum_pair(g1: jnp.ndarray, g2: jnp.ndarray, *, acc_dtype=jnp.float32) -> jnp.ndarray:
+    """Adasum of two gradient arrays (whole-tensor granularity)."""
+    dot = _flat_dot(g1, g2, acc_dtype)
+    n1 = _flat_dot(g1, g1, acc_dtype)
+    n2 = _flat_dot(g2, g2, acc_dtype)
+    s1, s2 = adasum_scalars(dot, n1, n2)
+    out = s1.astype(g1.dtype) * g1 + s2.astype(g2.dtype) * g2
+    return out
+
+
+def adasum_pair_pytree(t1: PyTree, t2: PyTree, *, per_layer: bool = True,
+                       acc_dtype=jnp.float32) -> PyTree:
+    """Adasum of two gradient pytrees.
+
+    per_layer=True (paper §3.6): each leaf (parameter tensor) gets its own
+    dot/norms — this is the per-layer variant the paper found superior.
+    per_layer=False: a single dot/norm over the concatenation of all leaves
+    (whole-model granularity), matching the "apply to the whole gradient"
+    baseline discussed in §3.6.
+    """
+    if per_layer:
+        return jax.tree.map(
+            functools.partial(adasum_pair, acc_dtype=acc_dtype), t1, t2)
+    l1, treedef = jax.tree.flatten(t1)
+    l2 = treedef.flatten_up_to(t2)
+    dot = sum(_flat_dot(a, b, acc_dtype) for a, b in zip(l1, l2))
+    n1 = sum(_flat_dot(a, a, acc_dtype) for a in l1)
+    n2 = sum(_flat_dot(b, b, acc_dtype) for b in l2)
+    s1, s2 = adasum_scalars(dot, n1, n2)
+    out = [s1.astype(a.dtype) * a + s2.astype(b.dtype) * b for a, b in zip(l1, l2)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def adasum_tree_reduce(grads: Sequence[PyTree] | PyTree, *, per_layer: bool = True,
+                       acc_dtype=jnp.float32) -> PyTree:
+    """Reference recursive binary-tree Adasum over N gradients (§3.4).
+
+    `grads` is either a list of pytrees or a single pytree whose leaves have
+    a leading axis of (power-of-two) length N. The recursion
+    Adasum(g[0,n]) = Adasum(Adasum(g[0,n/2)), Adasum(g[n/2,n])) pairs
+    *adjacent* leaves at the bottom of the tree — the same tree shape
+    ADASUMRVH (Algorithm 1) builds with its distance-1-first exchanges.
+    """
+    if not isinstance(grads, (list, tuple)):
+        n = jax.tree.leaves(grads)[0].shape[0]
+        grads = [jax.tree.map(lambda x, i=i: x[i], grads) for i in range(n)]
+    grads = list(grads)
+    n = len(grads)
+    assert n & (n - 1) == 0, f"Adasum tree reduce needs power-of-two inputs, got {n}"
+    while len(grads) > 1:
+        grads = [
+            adasum_pair_pytree(grads[2 * i], grads[2 * i + 1],
+                               per_layer=per_layer, acc_dtype=acc_dtype)
+            for i in range(len(grads) // 2)
+        ]
+    return grads[0]
+
+
+def adasum_linear_reduce(grads: Sequence[PyTree], *, per_layer: bool = True,
+                         acc_dtype=jnp.float32) -> PyTree:
+    """Linear (ring-order) recursive application (§3.4 first recursion):
+    Adasum(g[0,n+1]) = Adasum(Adasum(g[0,n]), g[n+1]).
+
+    Implemented for the ablation against the tree order; the paper found the
+    tree ("recursive halving") form faster and uses it in ADASUMRVH.
+    """
+    acc = grads[0]
+    for g in grads[1:]:
+        acc = adasum_pair_pytree(acc, g, per_layer=per_layer, acc_dtype=acc_dtype)
+    return acc
+
+
+def sum_reduce(grads: Sequence[PyTree] | PyTree, mean: bool = False) -> PyTree:
+    """Baseline synchronous-SGD combiner (Horovod Sum/Average)."""
+    if not isinstance(grads, (list, tuple)):
+        n = jax.tree.leaves(grads)[0].shape[0]
+        op = (lambda x: jnp.mean(x, axis=0)) if mean else (lambda x: jnp.sum(x, axis=0))
+        return jax.tree.map(op, grads)
+    acc = jax.tree.map(lambda *xs: sum(xs), *grads)
+    if mean:
+        acc = jax.tree.map(lambda x: x / len(grads), acc)
+    return acc

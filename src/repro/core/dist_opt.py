@@ -1,0 +1,91 @@
+"""DistributedOptimizer — the Horovod integration point (paper §4.1).
+
+    opt = hvd.DistributedOptimizer(opt, op=hvd.Adasum)
+
+becomes
+
+    dopt = DistributedOptimizer(opt, combine_cfg, combiner)
+
+Semantics (paper §4.1 + Fig. 3):
+  * pre-optimizer  ('pre'):  combined = Combine(per-lane gradients);
+        then ONE optimizer step with the combined gradient. This is the
+        mode for SGD/Momentum (and the Sum baseline for everything).
+  * post-optimizer ('post'): each lane steps its OWN optimizer on its
+        local gradient; the *effective gradients* (deltas) are combined
+        and applied to the shared parameters. Required for adaptive
+        optimizers (Adam/LAMB) because Adasum must not inflate the
+        minibatch the optimizer logic sees. Per-lane optimizer states
+        stay consistent because every lane sees its own gradient stream
+        (as in Horovod, where each node owns its optimizer state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .combine import CombineConfig
+from ..optim.optimizers import Optimizer
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributedOptimizer:
+    opt: Optimizer
+    cfg: CombineConfig
+    combiner: Callable[[PyTree], PyTree]
+    span: int = 1
+    # optional sharding pins (GSPMD can otherwise replicate the full-model
+    # per-lane deltas — catastrophic at MoE scale): applied to the stacked
+    # per-lane deltas and to the combined delta respectively.
+    lane_constraint: Optional[Callable[[PyTree], PyTree]] = None
+    delta_constraint: Optional[Callable[[PyTree], PyTree]] = None
+
+    @property
+    def point(self) -> str:
+        if self.cfg.op in ("sum", "mean"):
+            return "pre"   # classic synchronous SGD: reduce, then step
+        if self.cfg.point == "auto":
+            return self.opt.default_combine_point
+        return self.cfg.point
+
+    def init(self, params: PyTree) -> Dict[str, PyTree]:
+        if self.point == "post" and self.span > 1:
+            # one optimizer state per lane (Horovod: per-node state)
+            inner = self.opt.init(params)
+            state = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (self.span,) + x.shape), inner)
+        else:
+            state = self.opt.init(params)
+        return {"inner": state, "step": jnp.zeros((), jnp.int32)}
+
+    def update(self, stacked_grads: PyTree, state: Dict[str, PyTree],
+               params: PyTree) -> Tuple[PyTree, Dict[str, PyTree]]:
+        """stacked_grads: leaves [span, *shape]. Returns (delta, new_state)."""
+        step = state["step"]
+        if self.point == "pre":
+            combined = self.combiner(stacked_grads)
+            delta, inner = self.opt.update(combined, state["inner"], params, step)
+        else:
+            if self.span > 1:
+                def lane_update(g, s):
+                    return self.opt.update(g, s, params, step)
+                deltas, inner = jax.vmap(lane_update)(stacked_grads,
+                                                      state["inner"])
+                if self.lane_constraint is not None:
+                    deltas = self.lane_constraint(deltas)
+                delta = self.combiner(deltas)
+            else:
+                g = jax.tree.map(lambda x: x[0], stacked_grads)
+                delta, inner = self.opt.update(g, state["inner"], params, step)
+        if self.delta_constraint is not None:
+            delta = self.delta_constraint(delta)
+        return delta, {"inner": inner, "step": step + 1}
+
+    def apply(self, params: PyTree, delta: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
+            params, delta)

@@ -1,0 +1,122 @@
+"""Tensor fusion with per-layer boundary bookkeeping (paper §4.4.3).
+
+Horovod fuses many small tensors into one buffer before an allreduce, and
+Adasum additionally tracks the per-tensor boundaries inside the fused buffer
+so per-layer dot products (§3.6) survive fusion. On TPU the fusion layout is
+*static* (chosen at trace time — XLA compiles a fixed schedule), which plays
+the role of HOROVOD_FUSION_THRESHOLD bookkeeping.
+
+The layout is identical on every device because local (post-sharding) leaf
+shapes are identical per SPMD semantics; boundaries are therefore consistent
+across all data-parallel ranks, which is requirement (1)+(2) of §4.4.3.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionLayout:
+    """Static layout of the fused flat buffer.
+
+    Attributes:
+      shapes:    local leaf shapes in flatten order.
+      dtypes:    leaf dtypes.
+      offsets:   start offset of each leaf in the fused buffer.
+      sizes:     element count of each leaf.
+      padded_len: total buffer length, padded to a multiple of `align`.
+      num_segments: number of real segments (== number of leaves); the
+        padding tail is segment `num_segments` (a dummy layer).
+      treedef:   pytree structure for unpacking.
+    """
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    offsets: Tuple[int, ...]
+    sizes: Tuple[int, ...]
+    padded_len: int
+    num_segments: int
+    treedef: Any
+
+    def segment_ids(self) -> np.ndarray:
+        """int32 [padded_len] mapping each element to its layer index."""
+        seg = np.full((self.padded_len,), self.num_segments, dtype=np.int32)
+        for i, (off, sz) in enumerate(zip(self.offsets, self.sizes)):
+            seg[off:off + sz] = i
+        return seg
+
+
+def make_layout(tree: PyTree, *, align: int = 1, leaf_align: int = 1
+                ) -> FusionLayout:
+    """Builds a FusionLayout for a pytree of (local) arrays or ShapeDtypeStructs.
+
+    `align`: pad the buffer total to a multiple of this (RVH needs
+    2**rounds · leaf_align so every halving slice stays aligned).
+    `leaf_align`: start every leaf at a multiple of this (the Pallas
+    kernel contract: one layer per kernel block)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes, dtypes, offsets, sizes = [], [], [], []
+    off = 0
+    for leaf in leaves:
+        if leaf_align > 1:
+            off = ((off + leaf_align - 1) // leaf_align) * leaf_align
+        shapes.append(tuple(leaf.shape))
+        dtypes.append(leaf.dtype)
+        sz = int(np.prod(leaf.shape)) if leaf.shape else 1
+        offsets.append(off)
+        sizes.append(sz)
+        off += sz
+    align = max(align, 1) * max(leaf_align, 1)
+    padded = ((off + align - 1) // align) * align
+    padded = max(padded, align)
+    return FusionLayout(tuple(shapes), tuple(dtypes), tuple(offsets),
+                        tuple(sizes), padded, len(leaves), treedef)
+
+
+def pack(tree: PyTree, layout: FusionLayout, dtype=None) -> jnp.ndarray:
+    """Flattens + concatenates leaves into the fused buffer (zero padded,
+    including alignment gaps between leaves)."""
+    leaves = layout.treedef.flatten_up_to(tree)
+    dtype = dtype or jnp.result_type(*layout.dtypes)
+    parts: List[jnp.ndarray] = []
+    pos = 0
+    for leaf, off, sz in zip(leaves, layout.offsets, layout.sizes):
+        if off > pos:
+            parts.append(jnp.zeros((off - pos,), dtype))
+        parts.append(leaf.astype(dtype).reshape(-1))
+        pos = off + sz
+    if layout.padded_len > pos:
+        parts.append(jnp.zeros((layout.padded_len - pos,), dtype))
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def unpack(buf: jnp.ndarray, layout: FusionLayout) -> PyTree:
+    """Splits the fused buffer back into the original pytree."""
+    leaves = []
+    for shape, dtype, off, sz in zip(layout.shapes, layout.dtypes,
+                                     layout.offsets, layout.sizes):
+        leaves.append(jax.lax.dynamic_slice_in_dim(buf, off, sz, 0)
+                      .reshape(shape).astype(dtype))
+    return jax.tree.unflatten(layout.treedef, leaves)
+
+
+def bucketize(layout: FusionLayout, bucket_bytes: int, itemsize: int = 4
+              ) -> List[Tuple[int, int]]:
+    """Splits the layout into buckets of ~bucket_bytes, never splitting a
+    layer across buckets (Horovod's fusion threshold). Returns a list of
+    (leaf_start, leaf_end) index ranges."""
+    buckets: List[Tuple[int, int]] = []
+    start, acc = 0, 0
+    for i, sz in enumerate(layout.sizes):
+        if acc > 0 and (acc + sz) * itemsize > bucket_bytes:
+            buckets.append((start, i))
+            start, acc = i, 0
+        acc += sz
+    buckets.append((start, len(layout.sizes)))
+    return buckets

@@ -1,0 +1,44 @@
+"""Per-layer gradient orthogonality metric (paper §3.6, Fig. 1).
+
+orthogonality(g_1..g_n) = ‖Adasum(g_[1,n])‖² / Σ_i ‖g_i‖²
+
+Value 1 ⇒ gradients mutually orthogonal (Adasum sums them);
+value 1/n ⇒ gradients parallel with equal norm (Adasum averages).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .adasum import adasum_tree_reduce, EPS
+
+PyTree = Any
+
+
+def per_layer_orthogonality(grads: Sequence[PyTree] | PyTree,
+                            acc_dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    """Returns {layer_path: orthogonality scalar} plus '__mean__' (Fig. 1 red line).
+
+    `grads` as in adasum_tree_reduce: list of pytrees or stacked leading axis.
+    """
+    if not isinstance(grads, (list, tuple)):
+        n = jax.tree.leaves(grads)[0].shape[0]
+        grads = [jax.tree.map(lambda x, i=i: x[i], grads) for i in range(n)]
+    combined = adasum_tree_reduce(grads, per_layer=True, acc_dtype=acc_dtype)
+
+    flat_c = jax.tree.flatten_with_path(combined)[0]
+    flat_gs = [jax.tree.leaves(g) for g in grads]
+
+    out: Dict[str, jnp.ndarray] = {}
+    vals = []
+    for i, (path, c) in enumerate(flat_c):
+        num = jnp.sum(c.astype(acc_dtype) ** 2)
+        den = sum(jnp.sum(g[i].astype(acc_dtype) ** 2) for g in flat_gs)
+        o = num / (den + EPS)
+        key = jax.tree_util.keystr(path)
+        out[key] = o
+        vals.append(o)
+    out["__mean__"] = jnp.mean(jnp.stack(vals))
+    return out

@@ -1,0 +1,303 @@
+"""ADASUMRVH — the paper's Algorithm 1 (recursive vector halving with
+Adasum) mapped onto TPU ICI via shard_map.
+
+Mapping from the MPI formulation (DESIGN.md §2):
+  * SEND/RECV of buffer halves with the neighbor at distance d
+        -> `lax.ppermute` with the XOR-pairing permutation,
+  * ALLREDUCE of partial dots over the 2d-sized rank group (line 17)
+        -> `lax.psum` with `axis_index_groups`,
+  * per-layer dot products on the fused buffer (paper §3.6 + §4.4.3)
+        -> segment reduction over the static FusionLayout segment ids,
+  * fp64 dot accumulation (§4.4.1)
+        -> configurable acc_dtype (fp32 default on TPU, fp64 for CPU tests).
+
+Multi-axis trees: `dp_axes` lists (axis_name, size) innermost-first, e.g.
+[('data',16), ('pod',2)] — rounds 0..3 pair data-neighbors inside a pod,
+round 4 pairs across pods, which is exactly the paper's hierarchical
+NVLink-inside / IB-across layout transposed to ICI-inside / DCI-across.
+
+Tensor-parallel shards: each layer may be sharded over `model`-like axes;
+full-layer dots are finished by an extra psum over those axes, with a
+static per-segment replication-correction for layers that are *not*
+sharded over a given axis (so replicas are not double counted).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .adasum import EPS
+from . import fusion
+
+PyTree = Any
+
+
+def segment_dots(a: jnp.ndarray, b: jnp.ndarray, seg: jnp.ndarray,
+                 num_segments: int, acc_dtype=jnp.float32,
+                 use_pallas: bool = False) -> jnp.ndarray:
+    """Fused per-segment [a·b, a·a, b·b] -> [num_segments, 3] in acc_dtype.
+
+    The single-pass three-dot reduction is the compute hot loop the paper
+    hand-vectorizes (§4.4.2); `use_pallas` switches to the Pallas TPU kernel.
+    """
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.adasum_segment_dots(a, b, seg, num_segments,
+                                        acc_dtype=acc_dtype)
+    af = a.astype(acc_dtype)
+    bf = b.astype(acc_dtype)
+    prods = jnp.stack([af * bf, af * af, bf * bf], axis=-1)  # [n, 3]
+    return jax.ops.segment_sum(prods, seg, num_segments=num_segments)
+
+
+def combine_halves(a: jnp.ndarray, b: jnp.ndarray, v: jnp.ndarray,
+                   seg: jnp.ndarray, use_pallas: bool = False) -> jnp.ndarray:
+    """x' = a·(1 - v0/(2 v1)) + b·(1 - v0/(2 v2)) with per-segment scalars
+    (Algorithm 1 line 18, per-layer per §3.6)."""
+    s1 = 1.0 - v[:, 0] / (2.0 * v[:, 1] + EPS)
+    s2 = 1.0 - v[:, 0] / (2.0 * v[:, 2] + EPS)
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.adasum_combine(a, b, s1, s2, seg)
+    return (s1[seg].astype(a.dtype) * a + s2[seg].astype(b.dtype) * b)
+
+
+def _xor_perm(size: int, d: int) -> List[Tuple[int, int]]:
+    return [(r, r ^ d) for r in range(size)]
+
+
+# --------------------------------------------------- wire compression (int8)
+# Beyond-paper (the paper cites 1-bit SGD / PowerSGD as the orthogonal
+# communication-reduction axis, §6): the RVH half-exchanges can carry
+# int8 payloads with per-128-block absmax scales (4.25 bits of mantissa
+# on the wire per fp32 value => ~3.7x fewer wire bytes). Dots/combine
+# still run on dequantized fp32 values, so Adasum's precision guarantees
+# (§4.4.1) apply to the combination itself.
+_QBLOCK = 128
+
+
+def _quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    n = x.shape[0]
+    assert n % _QBLOCK == 0, n
+    xb = x.reshape(n // _QBLOCK, _QBLOCK).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xb), axis=1, keepdims=True) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(n), scale[:, 0]
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    n = q.shape[0]
+    xb = q.reshape(n // _QBLOCK, _QBLOCK).astype(jnp.float32) * scale[:, None]
+    return xb.reshape(n).astype(dtype)
+
+
+def _exchange(send: jnp.ndarray, ax: str, perm, compress: str):
+    if compress == "int8":
+        q, s = _quantize(send)
+        q = jax.lax.ppermute(q, ax, perm)
+        s = jax.lax.ppermute(s, ax, perm)
+        return _dequantize(q, s, send.dtype)
+    return jax.lax.ppermute(send, ax, perm)
+
+
+def _round_schedule(dp_axes: Sequence[Tuple[str, int]]):
+    """Yields (axis, local_distance, done_axes, group_block) per tree round."""
+    done: List[str] = []
+    for ax, size in dp_axes:
+        n = int(math.log2(size))
+        assert 2 ** n == size, f"dp axis {ax} size {size} not a power of two"
+        for j in range(n):
+            yield ax, size, 2 ** j, tuple(done), 2 ** (j + 1)
+        done.append(ax)
+
+
+def _groups(size: int, block: int) -> List[List[int]]:
+    return [list(range(s, s + block)) for s in range(0, size, block)]
+
+
+def adasum_rvh_local(buf: jnp.ndarray, seg: jnp.ndarray,
+                     dp_axes: Sequence[Tuple[str, int]],
+                     num_segments: int,
+                     seg_scale: Optional[jnp.ndarray] = None,
+                     model_axes: Sequence[str] = (),
+                     acc_dtype=jnp.float32,
+                     use_pallas: bool = False,
+                     allgather_result: bool = True,
+                     compress: str = "none") -> jnp.ndarray:
+    """Algorithm 1 body. Must run inside shard_map manual over dp_axes (and
+    model_axes if any layer is TP-sharded).
+
+    buf:  local fused gradient buffer [padded_len] (padding zeroed);
+          padded_len must be divisible by prod(dp sizes).
+    seg:  int32 [padded_len] segment (layer) ids; padding -> num_segments.
+    seg_scale: [num_segments+1] static per-segment dot correction
+          1/replication_factor over model_axes (see module docstring).
+    allgather_result: run lines 22-24; if False, returns the owned
+          1/N slice (fused into ZeRO-1 — the allgather phase is elided
+          and replaced by the parameter allgather downstream).
+    """
+    total = 1
+    for _, s in dp_axes:
+        total *= s
+    if total == 1:
+        return buf
+    assert buf.shape[0] % total == 0, (buf.shape, total)
+
+    trace: List[Tuple[str, int, int]] = []
+    # ---- reduce-scatter + combine phase (lines 2-21) ----
+    for ax, size, d, done_axes, block in _round_schedule(dp_axes):
+        mid = buf.shape[0] // 2
+        idx = jax.lax.axis_index(ax)
+        is_left = (idx // d) % 2 == 0
+        lo, hi = buf[:mid], buf[mid:]
+        slo, shi = seg[:mid], seg[mid:]
+        keep = jnp.where(is_left, lo, hi)
+        send = jnp.where(is_left, hi, lo)
+        seg = jnp.where(is_left, slo, shi)
+        recv = _exchange(send, ax, _xor_perm(size, d),
+                         compress if buf.shape[0] % (2 * _QBLOCK) == 0
+                         else "none")
+        a = jnp.where(is_left, keep, recv)   # lower-rank contribution
+        b = jnp.where(is_left, recv, keep)   # higher-rank contribution
+        v = segment_dots(a, b, seg, num_segments + 1, acc_dtype, use_pallas)
+        if seg_scale is not None:
+            v = v * seg_scale[:, None].astype(v.dtype)
+        # finish the dots (line 17): full psum over already-scattered axes,
+        # grouped psum over the current axis, full psum over TP axes.
+        for dax in done_axes:
+            v = jax.lax.psum(v, dax)
+        if block < size:
+            v = jax.lax.psum(v, ax, axis_index_groups=_groups(size, block))
+        else:
+            v = jax.lax.psum(v, ax)
+        for max_ in model_axes:
+            v = jax.lax.psum(v, max_)
+        buf = combine_halves(a, b, v, seg, use_pallas)
+        trace.append((ax, size, d))
+
+    if not allgather_result:
+        return buf
+
+    # ---- allgather phase (lines 22-24) ----
+    for ax, size, d in reversed(trace):
+        idx = jax.lax.axis_index(ax)
+        is_left = (idx // d) % 2 == 0
+        other = _exchange(buf, ax, _xor_perm(size, d),
+                          compress if buf.shape[0] % _QBLOCK == 0
+                          else "none")
+        buf = jnp.where(is_left,
+                        jnp.concatenate([buf, other]),
+                        jnp.concatenate([other, buf]))
+    return buf
+
+
+def _leaf_replication_factors(leaf_specs, mesh_axis_sizes, model_axes):
+    """Per-leaf dot correction: 1/(product of model-axis sizes the leaf is
+    NOT sharded over). Sharded leaves contribute disjoint slices (correct
+    under psum); replicated leaves would be counted size(axis) times."""
+    factors = []
+    for spec in leaf_specs:
+        used = set()
+        for entry in (spec or ()):  # PartitionSpec entries
+            if entry is None:
+                continue
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                used.add(ax)
+        f = 1
+        for ax in model_axes:
+            if ax not in used:
+                f *= mesh_axis_sizes[ax]
+        factors.append(1.0 / f)
+    return factors
+
+
+def adasum_rvh_pytree(stacked: PyTree, mesh: jax.sharding.Mesh,
+                      dp_axes: Sequence[str],
+                      leaf_specs: Optional[PyTree] = None,
+                      *, per_layer: bool = True, acc_dtype=jnp.float32,
+                      use_pallas: bool = False,
+                      compress: str = "none") -> PyTree:
+    """Applies ADASUMRVH to a stacked gradient pytree.
+
+    stacked: pytree with leaves [n_lanes, *shape]; the lane axis is sharded
+      over `dp_axes` (innermost-first order, e.g. ('data','pod')) with one
+      lane per DP rank.
+    leaf_specs: optional pytree of PartitionSpecs describing how *shape is
+      sharded over the TP axes (without the lane dim). None => replicated.
+    Returns the combined pytree [*shape] (no lane dim), replicated over dp.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_sizes = [(ax, sizes[ax]) for ax in dp_axes]
+    n_lanes = 1
+    for _, s in dp_sizes:
+        n_lanes *= s
+    leaves, treedef = jax.tree.flatten(stacked)
+    assert all(l.shape[0] == n_lanes for l in leaves), (
+        f"lane dim must equal prod(dp axes)={n_lanes}")
+
+    if leaf_specs is None:
+        specs = [P() for _ in leaves]
+    else:
+        specs = treedef.flatten_up_to(leaf_specs)
+    model_axes = [ax for ax in mesh.axis_names if ax not in dp_axes]
+    # Only psum dots over model axes actually used by some leaf.
+    used_model_axes = []
+    for spec in specs:
+        for entry in (spec or ()):
+            if entry is None:
+                continue
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                if ax in model_axes and ax not in used_model_axes:
+                    used_model_axes.append(ax)
+    factors = _leaf_replication_factors(specs, sizes, used_model_axes)
+
+    lane_spec = tuple(reversed(dp_axes))  # outermost axis major in the index
+    in_specs = jax.tree.unflatten(
+        treedef, [P(lane_spec, *(s or ())) for s in specs])
+    out_specs = jax.tree.unflatten(treedef, [P(*(s or ())) for s in specs])
+
+    def body(tree):
+        tree = jax.tree.map(lambda x: x.reshape(x.shape[1:]), tree)  # drop lane
+        # Pallas kernel contract: leaves block-aligned so each kernel block
+        # maps to exactly one layer; alignment survives every RVH halving
+        # because the total stays a multiple of n_lanes * leaf_align.
+        leaf_align = 1
+        if use_pallas:
+            from repro.kernels import ops as kops
+            leaf_align = kops.BLOCK_ELEMS
+        layout = fusion.make_layout(tree, align=n_lanes, leaf_align=leaf_align)
+        if not per_layer:
+            # whole-model granularity: one segment for everything. With TP
+            # axes this needs a uniform replication factor (heterogeneous
+            # factors cannot be corrected on a single collapsed dot).
+            assert len(set(factors)) <= 1, (
+                "per_layer=False requires uniform TP sharding across leaves")
+            seg_np = np.zeros((layout.padded_len,), np.int32)
+            tail = layout.padded_len - sum(layout.sizes)
+            if tail:
+                seg_np[-tail:] = 1
+            seg = jnp.asarray(seg_np)
+            nseg = 1
+            scale = (jnp.asarray([factors[0], 1.0]).astype(acc_dtype)
+                     if used_model_axes else None)
+        else:
+            seg = jnp.asarray(layout.segment_ids())
+            nseg = layout.num_segments
+            scale = (jnp.asarray(factors + [1.0]).astype(acc_dtype)
+                     if used_model_axes else None)
+        buf = fusion.pack(tree, layout, dtype=jnp.result_type(*layout.dtypes))
+        out = adasum_rvh_local(buf, seg, dp_sizes, nseg, seg_scale=scale,
+                               model_axes=used_model_axes,
+                               acc_dtype=acc_dtype, use_pallas=use_pallas,
+                               compress=compress)
+        return fusion.unpack(out, layout)
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(in_specs,),
+                       out_specs=out_specs, check_vma=False)
+    return fn(stacked)

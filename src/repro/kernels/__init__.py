@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the Adasum compute hot-spots (paper §4.4.2):
+fused per-block three-dot reduction and fused scale-combine."""
+from . import ops, ref
+from .adasum_dots import block_dots
+from .adasum_combine import block_combine

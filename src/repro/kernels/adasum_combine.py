@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: fused Adasum combine x' = s1·a + s2·b with
+per-block (per-layer) scalars — Algorithm 1 line 18.
+
+One pass over both buffers, one FMA each — the write-side counterpart of
+the fused dot kernel. Scalars arrive as per-block arrays (one layer per
+block by FusionLayout alignment), staged through SMEM-sized [1] blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .adasum_dots import LANES, SUBLANES
+
+
+def _combine_kernel(s1_ref, s2_ref, a_ref, b_ref, o_ref):
+    s1 = s1_ref[0].astype(jnp.float32)
+    s2 = s2_ref[0].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[...] = (s1 * a + s2 * b).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_elems", "interpret"))
+def block_combine(a: jnp.ndarray, b: jnp.ndarray, s1b: jnp.ndarray,
+                  s2b: jnp.ndarray, *, block_elems: int = 8192,
+                  interpret: bool = True) -> jnp.ndarray:
+    """(n,), (n,), (nblk,), (nblk,) -> (n,) fused scale-add."""
+    n = a.shape[0]
+    assert n % block_elems == 0, (n, block_elems)
+    assert block_elems % (SUBLANES * LANES) == 0, block_elems
+    rows = block_elems // LANES
+    nblk = n // block_elems
+    a2 = a.reshape(nblk * rows, LANES)
+    b2 = b.reshape(nblk * rows, LANES)
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((1,), lambda i: (i,)),
+                  pl.BlockSpec((1,), lambda i: (i,)),
+                  pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+                  pl.BlockSpec((rows, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblk * rows, LANES), a.dtype),
+        interpret=interpret,
+    )(s1b.astype(jnp.float32), s2b.astype(jnp.float32), a2, b2)
+    return out.reshape(n)

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: fused single-pass per-block [a·b, a·a, b·b].
+
+This is the compute hot-spot the paper hand-vectorizes on CPU/GPU
+(§4.4.2): Adasum needs three reductions over the same two gradient
+buffers, and reading the buffers once (instead of three times) makes the
+operation bandwidth-optimal. Higher-precision accumulation (§4.4.1) is
+float32 here (TPU-idiomatic; the paper uses double on CPU — see
+DESIGN.md §2).
+
+TPU adaptation: the fused buffer is viewed as (rows, 128) — the VPU lane
+width — and the grid walks row-blocks. Each grid step reduces one block
+to a [1,3] partial in fp32; per-layer (segment) dots are recovered
+outside by a tiny segment-sum over blocks, which is valid because the
+FusionLayout aligns every layer to a block multiple (segment boundaries
+never cross a block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128      # TPU VPU lane width
+SUBLANES = 8     # fp32 sublane tile
+
+
+def _dots_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    o_ref[0, 0] = jnp.sum(a * b)
+    o_ref[0, 1] = jnp.sum(a * a)
+    o_ref[0, 2] = jnp.sum(b * b)
+
+
+@functools.partial(jax.jit, static_argnames=("block_elems", "interpret"))
+def block_dots(a: jnp.ndarray, b: jnp.ndarray, *, block_elems: int = 8192,
+               interpret: bool = True) -> jnp.ndarray:
+    """(n,) x2 -> (n//block_elems, 3) fp32 partial dots.
+
+    n must be a multiple of block_elems; block_elems a multiple of
+    SUBLANES*LANES (=1024)."""
+    n = a.shape[0]
+    assert n % block_elems == 0, (n, block_elems)
+    assert block_elems % (SUBLANES * LANES) == 0, block_elems
+    rows = block_elems // LANES
+    nblk = n // block_elems
+    a2 = a.reshape(nblk * rows, LANES)
+    b2 = b.reshape(nblk * rows, LANES)
+    return pl.pallas_call(
+        _dots_kernel,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+                  pl.BlockSpec((rows, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblk, 3), jnp.float32),
+        interpret=interpret,
+    )(a2, b2)

@@ -1,0 +1,48 @@
+"""Jit'd wrappers exposing the Pallas kernels at the granularity the core
+library consumes (per-SEGMENT dots / per-element combine with per-segment
+scalars), built on the block kernels + FusionLayout alignment.
+
+`interpret` defaults: True off-TPU (CPU validation per the brief), False
+on real TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .adasum_dots import block_dots
+from .adasum_combine import block_combine
+
+# Alignment contract with repro.core.fusion: every layer starts at a
+# multiple of BLOCK_ELEMS in the fused buffer, so each kernel block maps
+# to exactly one layer (paper §4.4.3 boundary bookkeeping, made static).
+BLOCK_ELEMS = 8192
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def adasum_segment_dots(a: jnp.ndarray, b: jnp.ndarray, seg: jnp.ndarray,
+                        num_segments: int, acc_dtype=jnp.float32,
+                        block_elems: int = BLOCK_ELEMS) -> jnp.ndarray:
+    """[n] x2 + seg[n] -> [num_segments, 3] per-segment [a·b,a·a,b·b].
+
+    Requires the FusionLayout block-alignment contract (each block is a
+    single segment)."""
+    blocks = block_dots(a, b, block_elems=block_elems,
+                        interpret=_interpret_default())
+    block_seg = seg[::block_elems]
+    out = jax.ops.segment_sum(blocks, block_seg, num_segments=num_segments)
+    return out.astype(acc_dtype)
+
+
+def adasum_combine(a: jnp.ndarray, b: jnp.ndarray, s1: jnp.ndarray,
+                   s2: jnp.ndarray, seg: jnp.ndarray,
+                   block_elems: int = BLOCK_ELEMS) -> jnp.ndarray:
+    """x' = s1[seg]·a + s2[seg]·b via the fused combine kernel."""
+    block_seg = seg[::block_elems]
+    s1b = s1[block_seg]
+    s2b = s2[block_seg]
+    return block_combine(a, b, s1b, s2b, block_elems=block_elems,
+                         interpret=_interpret_default())

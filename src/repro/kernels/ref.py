@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels (the reference the kernels are
+allclose-validated against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_dots_ref(a: jnp.ndarray, b: jnp.ndarray, block_elems: int,
+                   acc_dtype=jnp.float32) -> jnp.ndarray:
+    """Per-block [a·b, a·a, b·b]: (n,) x2 -> (n//block_elems, 3)."""
+    n = a.shape[0]
+    assert n % block_elems == 0, (n, block_elems)
+    af = a.astype(acc_dtype).reshape(n // block_elems, block_elems)
+    bf = b.astype(acc_dtype).reshape(n // block_elems, block_elems)
+    return jnp.stack([jnp.sum(af * bf, -1), jnp.sum(af * af, -1),
+                      jnp.sum(bf * bf, -1)], axis=-1)
+
+
+def combine_ref(a: jnp.ndarray, b: jnp.ndarray, s1b: jnp.ndarray,
+                s2b: jnp.ndarray, block_elems: int) -> jnp.ndarray:
+    """x' = s1[blk]*a + s2[blk]*b with per-block scalars: (n,) -> (n,)."""
+    n = a.shape[0]
+    nb = n // block_elems
+    a2 = a.reshape(nb, block_elems)
+    b2 = b.reshape(nb, block_elems)
+    out = (s1b[:, None].astype(a.dtype) * a2
+           + s2b[:, None].astype(b.dtype) * b2)
+    return out.reshape(n)
+
+
+def segment_dots_ref(a, b, seg, num_segments, acc_dtype=jnp.float32):
+    """Direct per-segment dots (oracle for ops.adasum_segment_dots)."""
+    af = a.astype(acc_dtype)
+    bf = b.astype(acc_dtype)
+    prods = jnp.stack([af * bf, af * af, bf * bf], axis=-1)
+    return jax.ops.segment_sum(prods, seg, num_segments=num_segments)

@@ -1,0 +1,146 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch x shape x mesh), all PER-DEVICE quantities (the
+compiled module is the per-device SPMD program):
+
+    compute_s    = device_FLOPs / peak_FLOPs            (197 TFLOP/s bf16)
+    memory_s     = device_HBM_bytes / HBM_bw            (819 GB/s)
+    collective_s = device_collective_bytes / link_bw    (~50 GB/s/link)
+
+collective_bytes comes from parsing the optimized HLO: the sum of operand
+sizes of all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute ops (start/done fusions included).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional
+
+# v5e-class hardware constants (from the brief)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective kind: op count + operand bytes summed."""
+    stats: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        # operand shapes: everything after the op's opening paren
+        tail = line[m.end():]
+        opnd = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(tail))
+        if opnd == 0:   # fall back to output shape(s) before the '='
+            head = line[:m.start()]
+            opnd = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+        st = stats.setdefault(kind, {"count": 0, "bytes": 0.0})
+        st["count"] += 1
+        st["bytes"] += opnd
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # per-device
+    hbm_bytes: float              # per-device
+    collective_bytes: float       # per-device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    collectives: Dict[str, Dict[str, float]]
+    model_flops_global: float = 0.0
+    useful_ratio: float = 0.0     # MODEL_FLOPS / (device_FLOPs * chips)
+    xla_flops_once: float = 0.0   # raw cost_analysis (loop bodies once)
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(compiled, hlo_text: str, *, n_chips: int,
+            model_flops_global: float = 0.0) -> Roofline:
+    # Trip-count-aware HLO analysis (XLA's cost_analysis counts while
+    # bodies once — see hlo_cost.py). xla_flops is kept for reference.
+    from . import hlo_cost
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):   # older API returned [dict]
+        cost = cost[0]
+    hc = hlo_cost.analyze_text(hlo_text)
+    flops = hc.flops
+    hbm = hc.bytes
+    colls = hc.colls
+    # wire-byte convention: what actually crosses links per rank (the
+    # operand-size sum is kept alongside in `collectives`)
+    cbytes = hc.coll_wire_bytes
+    terms = {
+        "compute": flops / PEAK_FLOPS,
+        "memory": hbm / HBM_BW,
+        "collective": cbytes / LINK_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    useful = (model_flops_global / (flops * n_chips)
+              if flops > 0 and model_flops_global else 0.0)
+    r = Roofline(flops, hbm, cbytes, terms["compute"], terms["memory"],
+                 terms["collective"], dominant, colls,
+                 model_flops_global, useful)
+    r.xla_flops_once = float(cost.get("flops", 0.0))
+    return r
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:          # pragma: no cover
+        return {"error": str(e)}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    out["total_hbm_bytes"] = (out.get("argument_size_in_bytes", 0)
+                              + out.get("output_size_in_bytes", 0)
+                              + out.get("temp_size_in_bytes", 0)
+                              - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def model_flops(cfg, cell) -> float:
+    """MODEL_FLOPS: 6·N·D for training (N=params — active for MoE), 2·N·D
+    for prefill, 2·N per token for decode."""
+    from repro.models.api import count_params
+    n = count_params(cfg, active_only=bool(cfg.n_experts))
+    if cfg.is_encoder_decoder or cfg.frontend == "vision":
+        tokens = cell.global_batch * cell.seq_len   # budget across enc+dec
+    else:
+        tokens = cell.global_batch * cell.seq_len
+    if cell.kind == "train":
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        return 2.0 * n * tokens
+    return 2.0 * n * cell.global_batch      # one token per sequence

@@ -1,0 +1,176 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+the production meshes with ShapeDtypeStruct inputs (no allocation), print
+memory_analysis + cost_analysis, and dump the roofline terms to JSON.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+        --shape train_4k [--multi-pod] [--out results/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Exit code != 0 on any failed cell — failures (sharding mismatch, OOM at
+compile, unsupported collective) are bugs in the system.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, get_config, canonical, \
+    pad_heads_for_tp
+from repro.models import build_model
+from repro.parallel import make_runtime, get_policy, make_serve_step
+from repro.parallel.sharding import batch_specs, cache_specs, param_specs, \
+    ShardingPolicy
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as SP
+from repro.launch import analysis as AN
+
+
+def _shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape: str, mesh, *, rpol=None, attn_chunk=None):
+    """Lower one cell; returns (lowered, aux_info)."""
+    cfg = get_config(arch)
+    cell = SP.SHAPES[shape]
+    ok, why = SP.cell_supported(cfg, cell)
+    if not ok:
+        return None, {"status": "SKIP", "reason": why}
+    rpol = rpol or get_policy(arch)
+    if attn_chunk:
+        rpol = dataclasses.replace(rpol, attn_chunk=attn_chunk)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if rpol.pad_heads:
+        cfg = pad_heads_for_tp(cfg, sizes.get("model", 1))
+    model = build_model(cfg, attn_chunk=rpol.attn_chunk,
+                        param_dtype=jnp.dtype(rpol.param_dtype),
+                        moe_shards=sizes.get("data", 1))
+    dp_axes = tuple(a for a in mesh.axis_names if a != "model")
+    dp_total = int(np.prod([sizes[a] for a in dp_axes]))
+
+    if cell.kind == "train":
+        rt = make_runtime(model, mesh, rpol)
+        bspecs = SP.train_batch_specs(cfg, cell)
+        bshard = batch_specs(bspecs, dp_axes)
+        state_sh = _shardings(mesh, rt.state_specs)
+        fn = jax.jit(rt.train_step,
+                     in_shardings=(state_sh, _shardings(mesh, bshard)),
+                     donate_argnums=(0,))
+        lowered = fn.lower(rt.state_shapes, bspecs)
+        return lowered, {"status": "OK", "kind": "train", "span": rt.span}
+
+    spol = ShardingPolicy("model", "data" if rpol.fsdp else None,
+                          sizes.get("model", 1), sizes.get("data", 1))
+    pshapes = jax.eval_shape(model.init, jax.random.key(0))
+    pspecs = param_specs(cfg, pshapes, spol)
+    psh = _shardings(mesh, pspecs)
+
+    if cell.kind == "prefill":
+        bspecs = SP.prefill_batch_specs(cfg, cell)
+        bshard = _shardings(mesh, batch_specs(bspecs, dp_axes))
+        fn = jax.jit(model.prefill, in_shardings=(psh, bshard))
+        lowered = fn.lower(pshapes, bspecs)
+        return lowered, {"status": "OK", "kind": "prefill"}
+
+    # decode
+    pshapes2, tok_spec, cshapes = SP.decode_input_specs(model, cfg, cell)
+    csh = _shardings(mesh, cache_specs(cshapes, cfg, spol, dp_axes,
+                                       cell.global_batch, dp_total))
+    tsh = NamedSharding(mesh, P(dp_axes if cell.global_batch % dp_total == 0
+                                else None, None))
+    serve = make_serve_step(model)
+    fn = jax.jit(serve, in_shardings=(psh, tsh, csh), donate_argnums=(2,))
+    lowered = fn.lower(pshapes2, tok_spec, cshapes)
+    return lowered, {"status": "OK", "kind": "decode"}
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: Path,
+             keep_hlo: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{canonical(arch)}__{shape}__{mesh_name}"
+    res = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = int(np.prod(mesh.devices.shape))
+        lowered, info = lower_cell(arch, shape, mesh)
+        res.update(info)
+        if info["status"] == "SKIP":
+            print(f"[dryrun] {tag}: SKIP ({info['reason']})")
+            return res
+        compiled = lowered.compile()
+        res["compile_s"] = time.time() - t0
+        res["memory"] = AN.memory_summary(compiled)
+        hlo = compiled.as_text()
+        cfg = get_config(arch)
+        cell = SP.SHAPES[shape]
+        roof = AN.analyze(compiled, hlo, n_chips=n_chips,
+                          model_flops_global=AN.model_flops(cfg, cell))
+        res["roofline"] = roof.to_json()
+        if keep_hlo:
+            (out_dir / f"{tag}.hlo.txt").write_text(hlo)
+        print(f"[dryrun] {tag}: OK compile={res['compile_s']:.1f}s "
+              f"hbm/dev={res['memory'].get('total_hbm_bytes', 0)/2**30:.2f}GiB "
+              f"flops/dev={roof.flops:.3e} coll/dev={roof.collective_bytes:.3e}B "
+              f"dominant={roof.dominant}")
+    except Exception as e:
+        res["status"] = "FAIL"
+        res["error"] = f"{type(e).__name__}: {e}"
+        res["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {tag}: FAIL {res['error']}")
+    finally:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{tag}.json").write_text(json.dumps(res, indent=1))
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+    out = Path(args.out)
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SP.SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "pod2x16x16" if mp else "pod16x16"
+                f = out / f"{canonical(arch)}__{shape}__{mesh_name}.json"
+                if args.skip_done and f.exists():
+                    prev = json.loads(f.read_text())
+                    if prev.get("status") in ("OK", "SKIP"):
+                        print(f"[dryrun] {f.stem}: cached {prev['status']}")
+                        continue
+                r = run_cell(arch, shape, multi_pod=mp, out_dir=out,
+                             keep_hlo=args.keep_hlo)
+                failures += r["status"] == "FAIL"
+    print(f"[dryrun] done, failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,282 @@
+"""Mini HLO cost analyzer — trip-count-aware FLOPs / HBM bytes /
+collective bytes from optimized HLO text.
+
+Why: XLA's `compiled.cost_analysis()` counts a while-loop body ONCE, so a
+scan-over-layers train step under-reports FLOPs by ~n_layers and misses
+all in-loop collective traffic. This analyzer parses the partitioned HLO
+module, recovers loop trip counts from the loop-condition compare
+constants (JAX scans always run 0..N step 1), and recursively weights
+while bodies by their trips.
+
+Costs per instruction:
+  * dot: exact — 2 x |output| x |contracted dims| (from operand shapes +
+    lhs_contracting_dims),
+  * convolution: 2 x |output| x |kernel| (unused by our models),
+  * fusions / elementwise / reduce: approx 1 flop per output element,
+  * HBM bytes: operands + output for compute ops (fusion internals are
+    on-chip traffic and deliberately excluded),
+  * collectives: operand bytes (summed separately per kind).
+
+All quantities are PER-DEVICE (the module is the SPMD per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_TOKEN = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPNDS = re.compile(r"%([\w.\-]+)")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ops whose operands/outputs we do NOT count as HBM traffic.
+# NOTE "convert": XLA:CPU promotes bf16 compute to f32, inserting
+# whole-tensor converts that DO NOT EXIST on the bf16-native TPU target —
+# counting them would inflate the memory term ~2-5x (validated on the
+# mixtral/llava cells). Real dtype conversions on TPU fuse into their
+# consumers.
+_FREE_OPS = {"get-tuple-element", "tuple", "bitcast", "parameter",
+             "constant", "partition-id", "replica-id", "after-all",
+             "copy-start", "copy-done", "convert", "copy"}
+
+
+def _shape_info(typestr: str) -> Tuple[int, int]:
+    """(total elements, total bytes) over all shape tokens in a type
+    string (handles tuple types)."""
+    elems = 0
+    bts = 0
+    for dt, dims in _SHAPE_TOKEN.findall(typestr):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bts += n * _DTYPE_BYTES[dt]
+    return elems, bts
+
+
+def _first_shape_dims(typestr: str) -> Optional[List[int]]:
+    m = _SHAPE_TOKEN.search(typestr)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0       # operand-size convention (the brief)
+    coll_wire_bytes: float = 0.0  # bytes actually crossing links per rank
+    colls: Dict[str, Dict[str, float]] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        self.coll_wire_bytes += other.coll_wire_bytes * mult
+        for k, v in other.colls.items():
+            st = self.colls.setdefault(k, {"count": 0.0, "bytes": 0.0,
+                                           "wire_bytes": 0.0})
+            st["count"] += v["count"] * mult
+            st["bytes"] += v["bytes"] * mult
+            st["wire_bytes"] += v.get("wire_bytes", 0.0) * mult
+
+
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_IOTA.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST.search(rest)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return 2
+
+
+def _wire_bytes(kind: str, operand: float, output: float, n: int) -> float:
+    """Per-rank bytes crossing links for a bandwidth-optimal algorithm."""
+    if n <= 1:
+        return 0.0
+    f = (n - 1) / n
+    if kind == "all-reduce":
+        return 2.0 * operand * f
+    if kind == "all-gather":
+        return max(output, operand) * f
+    if kind == "reduce-scatter":
+        return operand * f
+    if kind == "all-to-all":
+        return operand * f
+    return operand        # collective-permute: exact
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Tuple[str, str]]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._memo: Dict[str, Cost] = {}
+
+    def _parse(self, text: str):
+        cur = None
+        for line in text.splitlines():
+            stripped = line.strip()
+            m = re.match(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->.*{", line)
+            if m and not line.startswith(" "):
+                cur = m.group(2)
+                self.computations[cur] = []
+                if m.group(1):
+                    self.entry = cur
+                continue
+            if stripped == "}":
+                continue
+            if cur is None:
+                continue
+            im = _INSTR.match(line)
+            if im:
+                self.computations[cur].append((im.group(1), im.group(2)))
+
+    # ------------------------------------------------------------- helpers
+    def _types_in(self, comp: str) -> Dict[str, str]:
+        table = {}
+        for name, rest in self.computations.get(comp, []):
+            table[name] = rest.split(" ")[0] if rest else ""
+            # the type is everything before the op name; safer: first
+            # shape-ish prefix — store full rest, _shape_info scans tokens
+            table[name] = rest
+        return table
+
+    def _out_type(self, rest: str) -> str:
+        """The output type part of an instruction body (before op name)."""
+        # e.g. "f32[4,64]{1,0} dot(%a, %b), ..." or "(f32[..], f32[..]) while(...)"
+        m = re.match(r"^(\([^)]*\)|\S+)\s", rest)
+        return m.group(1) if m else rest
+
+    def _trip_count(self, cond_comp: str) -> float:
+        """Loop bound from the condition's compare constant (JAX scans
+        iterate 0..N-1)."""
+        best = 1.0
+        for name, rest in self.computations.get(cond_comp, []):
+            for c in re.findall(r"constant\((\d+)\)", rest):
+                best = max(best, float(c))
+        # the cond may call a wrapped fusion computation
+        for name, rest in self.computations.get(cond_comp, []):
+            cm = re.search(r"calls=%([\w.\-]+)", rest)
+            if cm:
+                for _, r2 in self.computations.get(cm.group(1), []):
+                    for c in re.findall(r"constant\((\d+)\)", r2):
+                        best = max(best, float(c))
+        return best
+
+    # ------------------------------------------------------------ costing
+    def cost_of(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        total = Cost()
+        self._memo[comp] = total      # guards cycles
+        types = {}
+        for name, rest in self.computations.get(comp, []):
+            types[name] = self._out_type(rest)
+        for name, rest in self.computations.get(comp, []):
+            out_type = self._out_type(rest)
+            body = rest[len(out_type):].lstrip()
+            op = body.split("(")[0].strip()
+            out_elems, out_bytes = _shape_info(out_type)
+
+            if op == "while":
+                bm = re.search(r"body=%([\w.\-]+)", rest)
+                cm = re.search(r"condition=%([\w.\-]+)", rest)
+                if bm:
+                    trip = self._trip_count(cm.group(1)) if cm else 1.0
+                    sub = Cost()
+                    sub.add(self.cost_of(bm.group(1)))
+                    if cm:
+                        sub.add(self.cost_of(cm.group(1)))
+                    total.add(sub, trip)
+                continue
+            if op in ("conditional", "call", "async-start"):
+                for cn in re.findall(r"(?:calls|branch_computations)=\{?%?"
+                                     r"([\w.\-]+)", rest):
+                    total.add(self.cost_of(cn))
+                continue
+
+            base = op.replace("-start", "").replace("-done", "")
+            opnd_names = _OPNDS.findall(body[body.find("("):]) if "(" in body \
+                else []
+            opnd_bytes = 0
+            opnd_types = []
+            for o in opnd_names:
+                t = types.get(o)
+                if t is None:
+                    continue
+                ot = self._out_type(t)
+                opnd_types.append((o, ot))
+                opnd_bytes += _shape_info(ot)[1]
+
+            if base in _COLLECTIVES:
+                if op.endswith("-done"):
+                    continue   # counted at -start
+                cb = opnd_bytes or out_bytes
+                wire = _wire_bytes(base, cb, out_bytes, _group_size(rest))
+                st = total.colls.setdefault(
+                    base, {"count": 0.0, "bytes": 0.0, "wire_bytes": 0.0})
+                st["count"] += 1
+                st["bytes"] += cb
+                st["wire_bytes"] += wire
+                total.coll_bytes += cb
+                total.coll_wire_bytes += wire
+                total.bytes += opnd_bytes + out_bytes
+                continue
+
+            if op in _FREE_OPS:
+                continue
+
+            if op == "dot":
+                lhs_dims = None
+                if opnd_types:
+                    lhs_dims = _first_shape_dims(opnd_types[0][1])
+                contract = 1
+                cm2 = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
+                if cm2 and lhs_dims:
+                    for d in cm2.group(1).split(","):
+                        if d:
+                            contract *= lhs_dims[int(d)]
+                total.flops += 2.0 * out_elems * contract
+                total.bytes += opnd_bytes + out_bytes
+                continue
+            if op == "convolution":
+                kernel = _first_shape_dims(opnd_types[1][1]) \
+                    if len(opnd_types) > 1 else [1]
+                total.flops += 2.0 * out_elems * \
+                    (math.prod(kernel[:-1]) if kernel else 1)
+                total.bytes += opnd_bytes + out_bytes
+                continue
+            # fusions / elementwise / reduce / scatter / gather ...
+            if "calls=%wrapped_convert" in rest or \
+                    "calls=%wrapped_copy" in rest:
+                continue       # CPU bf16-promotion artifact (see _FREE_OPS)
+            total.flops += out_elems
+            total.bytes += opnd_bytes + out_bytes
+        return total
+
+    def total(self) -> Cost:
+        assert self.entry, "no ENTRY computation found"
+        return self.cost_of(self.entry)
+
+
+def analyze_text(hlo_text: str) -> Cost:
+    return HloModule(hlo_text).total()

@@ -1,0 +1,81 @@
+"""Batched serving driver: prefill a batch of prompts, then greedy-decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --reduced \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config, get_reduced
+from repro.models import build_model
+from repro.parallel import make_serve_step
+from repro.launch.mesh import make_local_mesh
+
+
+def generate(model, params, prompts, gen_len: int, max_len: int,
+             frontend_embeds=None):
+    """prompts: [B, T] int32. Returns [B, T+gen_len]."""
+    B, T = prompts.shape
+    cfg = model.cfg
+    if cfg.is_encoder_decoder:
+        cache = model.init_cache(params, B, max_len,
+                                 frontend_embeds=frontend_embeds)
+    else:
+        cache = model.init_cache(params, B, max_len)
+    step = jax.jit(make_serve_step(model), donate_argnums=(2,))
+    # prefill by stepping tokens (cache-exact; a fused prefill is the
+    # prefill_32k dry-run path)
+    tok = prompts[:, :1]
+    out = [prompts]
+    for t in range(T):
+        nxt, cache = step(params, prompts[:, t:t + 1], cache)
+    cur = nxt
+    gen = []
+    for _ in range(gen_len):
+        gen.append(cur)
+        cur, cache = step(params, cur, cache)
+    return jnp.concatenate([prompts] + gen, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--data-mesh", type=int, default=0)
+    ap.add_argument("--model-mesh", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    model = build_model(cfg, attn_chunk=64)
+    mesh = make_local_mesh(args.data_mesh or 1, args.model_mesh)
+    params = model.init(jax.random.key(0))
+    prompts = jax.random.randint(jax.random.key(1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    fe = None
+    if cfg.frontend != "none":
+        ft = cfg.frontend_tokens or args.prompt_len
+        fe = jnp.zeros((args.batch, ft, cfg.frontend_dim), jnp.float32)
+    t0 = time.perf_counter()
+    out = generate(model, params, prompts,
+                   args.gen, args.prompt_len + args.gen + 1,
+                   frontend_embeds=fe)
+    dt = time.perf_counter() - t0
+    toks = args.batch * args.gen
+    print(f"[serve] generated {out.shape} in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s incl. prefill+compile)")
+    print(out[:, args.prompt_len:])
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Assigned input-shape cells and their ShapeDtypeStruct stand-ins.
+
+Shapes (per the assignment):
+    train_4k     seq_len=4096   global_batch=256   (training step)
+    prefill_32k  seq_len=32768  global_batch=32    (inference prefill)
+    decode_32k   seq_len=32768  global_batch=128   (one-token decode w/ cache)
+    long_500k    seq_len=524288 global_batch=1     (long-context decode)
+
+long_500k requires sub-quadratic attention: it RUNS for rwkv6 (attn-free),
+hymba (SWA+SSM) and mixtral (SWA); it's a SKIP cell for the pure
+full-attention archs (see DESIGN.md §Arch-applicability).
+
+VLM/audio cells: the modality frontend is a stub — specs deliver
+precomputed patch/frame embeddings. For the enc-dec arch the sequence
+budget is split half encoder frames / half decoder tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, get_config
+from repro.models.api import Model
+
+S = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+}
+
+
+def cell_supported(cfg: ModelConfig, cell: ShapeCell) -> Tuple[bool, str]:
+    if cell.name == "long_500k" and not cfg.subquadratic:
+        return False, "full-attention arch: 500k decode needs sub-quadratic attention (SKIP per DESIGN.md)"
+    return True, ""
+
+
+def train_batch_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    B, T = cell.global_batch, cell.seq_len
+    if cfg.is_encoder_decoder:
+        half = T // 2
+        return {
+            "frontend_embeds": S((B, half, cfg.frontend_dim), jnp.bfloat16),
+            "tokens": S((B, half), jnp.int32),
+            "labels": S((B, half), jnp.int32),
+        }
+    if cfg.frontend == "vision":
+        t_text = T - cfg.frontend_tokens
+        return {
+            "frontend_embeds": S((B, cfg.frontend_tokens, cfg.frontend_dim),
+                                 jnp.bfloat16),
+            "tokens": S((B, t_text), jnp.int32),
+            "labels": S((B, t_text), jnp.int32),
+        }
+    return {"tokens": S((B, T), jnp.int32), "labels": S((B, T), jnp.int32)}
+
+
+def prefill_batch_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    specs = train_batch_specs(cfg, cell)
+    specs.pop("labels", None)
+    return specs
+
+
+def decode_input_specs(model: Model, cfg: ModelConfig, cell: ShapeCell
+                       ) -> Tuple[Any, Any, Any]:
+    """(params_shapes, tokens_spec, cache_shapes) for a one-token decode
+    step against a cache of cell.seq_len."""
+    B = cell.global_batch
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    tokens = S((B, 1), jnp.int32)
+    if cfg.is_encoder_decoder:
+        enc_len = cell.seq_len // 2
+        enc_out = S((B, enc_len, cfg.d_model), jnp.bfloat16)
+        cache = jax.eval_shape(
+            lambda p, e: model.init_cache(p, B, cell.seq_len // 2, enc_out=e),
+            params, enc_out)
+    else:
+        cache = jax.eval_shape(
+            lambda p: model.init_cache(p, B, cell.seq_len), params)
+    return params, tokens, cache
+
+
+def input_specs(arch: str, shape: str, model: Optional[Model] = None):
+    """Public entry: ShapeDtypeStruct stand-ins for every model input of the
+    (arch x shape) cell."""
+    from repro.models import build_model
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    model = model or build_model(cfg)
+    if cell.kind == "train":
+        return train_batch_specs(cfg, cell)
+    if cell.kind == "prefill":
+        return prefill_batch_specs(cfg, cell)
+    return decode_input_specs(model, cfg, cell)

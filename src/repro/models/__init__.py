@@ -1,0 +1,2 @@
+"""Pure-JAX model zoo: dense / MoE / SSM / hybrid / VLM / audio backbones."""
+from .api import Model, build_model, count_params

@@ -1,0 +1,135 @@
+"""Unified model API over all families.
+
+    model = build_model(cfg)
+    params = model.init(key)
+    loss, metrics = model.loss(params, batch)
+    cache = model.init_cache(params, batch_size, max_len, frontier...)
+    logits, cache = model.decode_step(params, cache, tokens)
+
+The API is what the distributed train/serve steps and the dry-run lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from . import transformer as TF
+from . import encdec as ED
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable            # (params, batch) -> (scalar, metrics)
+    forward: Callable         # (params, batch) -> logits
+    prefill: Callable         # (params, batch) -> last-position logits
+    init_cache: Callable      # (params, batch, max_len) -> cache
+    decode_step: Callable     # (params, tokens, cache) -> (logits, cache)
+
+
+def build_model(cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
+                param_dtype=jnp.float32, attn_chunk: int = 512,
+                remat: bool = True, moe_shards: int = 1) -> Model:
+    if cfg.is_encoder_decoder:
+        def init(key):
+            return ED.init_params(cfg, key, param_dtype)
+
+        def loss(params, batch):
+            return ED.encdec_loss(params, cfg, batch, compute_dtype,
+                                  attn_chunk, remat)
+
+        def forward(params, batch):
+            enc = ED.encode(params, cfg, batch["frontend_embeds"],
+                            compute_dtype, attn_chunk, remat)
+            return ED.decode_train(params, cfg, enc, batch["tokens"],
+                                   compute_dtype, attn_chunk, remat)
+
+        def init_cache(params, batch, max_len, enc_out=None,
+                       frontend_embeds=None):
+            if enc_out is None:
+                assert frontend_embeds is not None
+                enc_out = ED.encode(params, cfg, frontend_embeds,
+                                    compute_dtype, attn_chunk, remat=False)
+            return ED.init_cache(params, cfg, enc_out, max_len)
+
+        def decode_step(params, tokens, cache):
+            return ED.decode_step(params, cfg, tokens, cache, compute_dtype)
+
+        def prefill(params, batch):
+            enc = ED.encode(params, cfg, batch["frontend_embeds"],
+                            compute_dtype, attn_chunk, remat)
+            return ED.decode_train(params, cfg, enc, batch["tokens"],
+                                   compute_dtype, attn_chunk, remat,
+                                   last_only=True)
+
+        return Model(cfg, init, loss, forward, prefill, init_cache,
+                     decode_step)
+
+    def init(key):
+        return TF.init_params(cfg, key, param_dtype)
+
+    def loss(params, batch):
+        return TF.lm_loss(params, cfg, batch, compute_dtype, attn_chunk,
+                          remat=remat, moe_shards=moe_shards)
+
+    def forward(params, batch):
+        logits, _ = TF.forward(params, cfg, batch["tokens"],
+                               batch.get("frontend_embeds"), compute_dtype,
+                               attn_chunk, remat, moe_shards=moe_shards)
+        return logits
+
+    def init_cache(params, batch, max_len, **_):
+        return TF.init_decode_cache(cfg, batch, max_len)
+
+    def decode_step(params, tokens, cache):
+        return TF.decode_step(params, cfg, tokens, cache, compute_dtype)
+
+    def prefill(params, batch):
+        # use_flash routes through the Pallas flash kernel (forward-only,
+        # no VJP needed). Default OFF for the dry-run: interpret-mode
+        # pallas lowers to unrepresentative HLO on CPU; the kernel's TPU
+        # behaviour is modeled in EXPERIMENTS.md Perf (scores stay in
+        # VMEM). Enabled automatically on real TPU backends.
+        logits, _ = TF.forward(params, cfg, batch["tokens"],
+                               batch.get("frontend_embeds"), compute_dtype,
+                               attn_chunk, remat, last_only=True,
+                               moe_shards=moe_shards,
+                               use_flash=(cfg.attn_type == "gqa"
+                                          and jax.default_backend() == "tpu"))
+        return logits
+
+    return Model(cfg, init, loss, forward, prefill, init_cache, decode_step)
+
+
+# --------------------------------------------------------------- accounting
+@functools.lru_cache(maxsize=64)
+def _param_shapes(cfg: ModelConfig):
+    model = build_model(cfg)
+    key = jax.random.key(0)
+    return jax.eval_shape(model.init, key)
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    shapes = _param_shapes(cfg)
+    total = 0
+    expert_total = 0
+    for path, leaf in jax.tree.flatten_with_path(shapes)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = jax.tree_util.keystr(path)
+        if "moe" in keys and ("w_gate" in keys or "w_up" in keys
+                              or "w_down" in keys):
+            expert_total += n
+    if active_only and cfg.n_experts:
+        active_frac = cfg.n_experts_per_tok / cfg.n_experts
+        total = total - expert_total + int(expert_total * active_frac)
+    return total

@@ -1,0 +1,321 @@
+"""Attention variants: GQA/MQA/MHA (+qk-norm, sliding window), and MLA
+(multi-head latent attention, minicpm3) with absorbed-latent decode.
+
+Memory strategy: training/prefill attention is *query-chunked* — each
+chunk materialises scores of shape [B, H, chunk, S] only (exact softmax,
+no online rescaling needed since the full key axis is present per chunk).
+For sliding-window attention the key axis is additionally sliced to
+[window + chunk], keeping FLOPs O(T·window) instead of O(T²).
+
+KV caches are fixed-capacity; sliding-window caches are rolling buffers
+(slot = position mod window) with RoPE applied at write time.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ params
+def gqa_init(key, cfg: ModelConfig, dtype) -> PyTree:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = L.split_keys(key, 4)
+    wo = L.dense_init(ks[3], (h * dh, d), dtype)
+    if cfg.orig_heads and cfg.orig_heads < h:
+        # TP head padding (pad_heads_for_tp): padded q heads contribute
+        # exactly nothing — zero their wo rows.
+        mask = (jnp.arange(h) < cfg.orig_heads).astype(dtype)
+        wo = wo * jnp.repeat(mask, dh)[:, None]
+    p = {
+        "wq": L.dense_init(ks[0], (d, h * dh), dtype),
+        "wk": L.dense_init(ks[1], (d, kv * dh), dtype),
+        "wv": L.dense_init(ks[2], (d, kv * dh), dtype),
+        "wo": wo,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dtype)
+        p["k_norm"] = jnp.ones((dh,), dtype)
+    return p
+
+
+def mla_init(key, cfg: ModelConfig, dtype) -> PyTree:
+    d, h = cfg.d_model, cfg.n_heads
+    qk_n, qk_r, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = L.split_keys(key, 6)
+    return {
+        "q_down": L.dense_init(ks[0], (d, cfg.q_lora_rank), dtype),
+        "q_up": L.dense_init(ks[1], (cfg.q_lora_rank, h * (qk_n + qk_r)), dtype),
+        "kv_down": L.dense_init(ks[2], (d, cfg.kv_lora_rank + qk_r), dtype),
+        "kv_up": L.dense_init(ks[3], (cfg.kv_lora_rank, h * (qk_n + vh)), dtype),
+        "wo": L.dense_init(ks[4], (h * vh, d), dtype),
+        "q_norm": L.rmsnorm_init(cfg.q_lora_rank, dtype),
+        "kv_norm": L.rmsnorm_init(cfg.kv_lora_rank, dtype),
+    }
+
+
+def convert_gqa_params(p: PyTree, cfg: ModelConfig, cfg_pad: ModelConfig,
+                       dtype=jnp.float32) -> PyTree:
+    """Exact weight conversion for pad_heads_for_tp: kv heads are
+    block-duplicated f = kv2/kv times; REAL q heads are placed grouped by
+    their original kv head (r-th real head of group j at position
+    j*(h2/kv) + r) so the GQA q->kv mapping is preserved; padded q
+    positions get zero wo rows (exactly no contribution)."""
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    h2, kv2 = cfg_pad.n_heads, cfg_pad.n_kv_heads
+    f = kv2 // kv
+    G, G2 = h // kv, h2 // kv2
+    assert kv2 == kv * f and h2 == kv * f * G2 and G <= f * G2
+    d = p["wq"].shape[0]
+
+    def q_slot(i):
+        j, r = divmod(i, G)
+        return j * (f * G2) + r
+
+    wq3 = p["wq"].reshape(d, h, dh)
+    wo3 = p["wo"].reshape(h, dh, -1)
+    slots = jnp.asarray([q_slot(i) for i in range(h)])
+    wq2 = jnp.zeros((d, h2, dh), dtype).at[:, slots].set(wq3.astype(dtype))
+    wo2 = jnp.zeros((h2, dh, wo3.shape[-1]), dtype) \
+        .at[slots].set(wo3.astype(dtype))
+
+    def dup(w):
+        return jnp.repeat(w.reshape(d, kv, dh), f, axis=1).reshape(d, -1)
+
+    out = dict(p, wq=wq2.reshape(d, h2 * dh), wk=dup(p["wk"]),
+               wv=dup(p["wv"]), wo=wo2.reshape(h2 * dh, -1))
+    return out
+
+
+# ------------------------------------------------------- chunked core attn
+def _chunked_attention(q, k, v, positions_q, positions_k, *, causal: bool,
+                       window: int, chunk: int) -> jnp.ndarray:
+    """q: [B,T,H,Dh], k/v: [B,S,KV,Dh] -> [B,T,H,Dh].
+
+    H must be a multiple of KV (GQA groups). positions_*: [T]/[S] absolute
+    positions for masking (RoPE already applied)."""
+    B, T, H, Dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]            # may differ from Dh (MLA)
+    G = H // KV
+    scale = 1.0 / math.sqrt(Dh)
+    chunk = min(chunk, T)
+    while T % chunk != 0:       # largest divisor <= requested chunk
+        chunk -= 1
+    n_chunks = T // chunk
+
+    qc = q.reshape(B, n_chunks, chunk, KV, G, Dh)
+
+    def do_chunk(i):
+        qi = jax.lax.dynamic_slice_in_dim(qc, i, 1, axis=1)[:, 0]  # [B,c,KV,G,Dh]
+        pos_qi = jax.lax.dynamic_slice_in_dim(positions_q, i * chunk, chunk)
+        if window > 0 and S > window + chunk:
+            # banded attention: only the [q_start - window, q_end) key slice
+            start = jnp.clip(i * chunk - window, 0, S - (window + chunk))
+            ki = jax.lax.dynamic_slice_in_dim(k, start, window + chunk, axis=1)
+            vi = jax.lax.dynamic_slice_in_dim(v, start, window + chunk, axis=1)
+            pos_ki = jax.lax.dynamic_slice_in_dim(positions_k, start,
+                                                  window + chunk)
+        else:
+            ki, vi, pos_ki = k, v, positions_k
+        scores = jnp.einsum("bckgd,bskd->bkgcs", qi.astype(jnp.float32),
+                            ki.astype(jnp.float32)) * scale
+        mask = jnp.ones((chunk, pos_ki.shape[0]), bool)
+        if causal:
+            mask &= pos_ki[None, :] <= pos_qi[:, None]
+        if window > 0:
+            mask &= pos_ki[None, :] > pos_qi[:, None] - window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(vi.dtype)
+        out = jnp.einsum("bkgcs,bskd->bckgd", probs, vi)
+        return out.reshape(B, chunk, H, Dv)
+
+    if n_chunks == 1:
+        return do_chunk(0)
+    outs = jax.lax.map(do_chunk, jnp.arange(n_chunks))   # [n,B,c,H,Dv]
+    return jnp.moveaxis(outs, 0, 1).reshape(B, T, H, Dv)
+
+
+# ------------------------------------------------------------- GQA forward
+def gqa_forward(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
+                positions: jnp.ndarray, compute_dtype=jnp.bfloat16,
+                chunk: int = 512, use_flash: bool = False) -> jnp.ndarray:
+    """Training / prefill forward. x: [B,T,D]; positions: [T].
+
+    use_flash: route the core through the Pallas flash-attention kernel
+    (forward-only: serving/prefill; score tiles never reach HBM)."""
+    B, T, D = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    x = x.astype(compute_dtype)
+    q = (x @ params["wq"].astype(compute_dtype)).reshape(B, T, h, dh)
+    k = (x @ params["wk"].astype(compute_dtype)).reshape(B, T, kv, dh)
+    v = (x @ params["wv"].astype(compute_dtype)).reshape(B, T, kv, dh)
+    if cfg.qk_norm:
+        q = L.headwise_rmsnorm(params["q_norm"], q)
+        k = L.headwise_rmsnorm(params["k_norm"], k)
+    q = L.apply_rope(q, positions[None, :], cfg.rope_theta)
+    k = L.apply_rope(k, positions[None, :], cfg.rope_theta)
+    if use_flash and T % 512 == 0:
+        from repro.kernels.flash_attention import flash_attention
+        out = flash_attention(q, k, v, causal=True,
+                              window=cfg.sliding_window,
+                              interpret=jax.default_backend() != "tpu")
+    else:
+        out = _chunked_attention(q, k, v, positions, positions, causal=True,
+                                 window=cfg.sliding_window, chunk=chunk)
+    return out.reshape(B, T, h * dh) @ params["wo"].astype(compute_dtype)
+
+
+# --------------------------------------------------------------- KV caches
+class KVCache(NamedTuple):
+    k: jnp.ndarray      # [B, cap, KV, Dh] (RoPE'd at write)
+    v: jnp.ndarray      # [B, cap, KV, Dh]
+    pos: jnp.ndarray    # scalar int32: #tokens seen
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    cap = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    kv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    return KVCache(jnp.zeros((batch, cap, kv, dh), dtype),
+                   jnp.zeros((batch, cap, kv, dh), dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def gqa_decode_step(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
+                    cache: KVCache, compute_dtype=jnp.bfloat16
+                    ) -> Tuple[jnp.ndarray, KVCache]:
+    """One-token decode. x: [B,1,D]."""
+    B = x.shape[0]
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    cap = cache.k.shape[1]
+    pos = cache.pos
+    x = x.astype(compute_dtype)
+    q = (x @ params["wq"].astype(compute_dtype)).reshape(B, 1, h, dh)
+    k = (x @ params["wk"].astype(compute_dtype)).reshape(B, 1, kvh, dh)
+    v = (x @ params["wv"].astype(compute_dtype)).reshape(B, 1, kvh, dh)
+    if cfg.qk_norm:
+        q = L.headwise_rmsnorm(params["q_norm"], q)
+        k = L.headwise_rmsnorm(params["k_norm"], k)
+    posv = pos[None].astype(jnp.float32)
+    q = L.apply_rope(q, posv[None, :], cfg.rope_theta)
+    k = L.apply_rope(k, posv[None, :], cfg.rope_theta)
+    slot = jnp.where(cfg.sliding_window > 0, pos % cap, jnp.minimum(pos, cap - 1))
+    knew = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype),
+                                               slot, axis=1)
+    vnew = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype),
+                                               slot, axis=1)
+    # absolute position held by each slot (rolling for SWA, linear otherwise)
+    idx = jnp.arange(cap)
+    if cfg.sliding_window:
+        slot_pos = pos - ((pos - idx) % cap)     # most recent pos with p%cap==idx
+    else:
+        slot_pos = idx
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, kvh, h // kvh, dh)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        knew.astype(jnp.float32)) * scale
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(vnew.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, vnew).reshape(B, 1, h * dh)
+    out = out.astype(compute_dtype) @ params["wo"].astype(compute_dtype)
+    return out, KVCache(knew, vnew, pos + 1)
+
+
+# ---------------------------------------------------------------- MLA path
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray    # [B, cap, kv_lora]
+    k_rope: jnp.ndarray  # [B, cap, qk_rope]
+    pos: jnp.ndarray
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+                    jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+                    jnp.zeros((), jnp.int32))
+
+
+def _mla_qkv(params, cfg, x, positions, compute_dtype):
+    B, T, _ = x.shape
+    h = cfg.n_heads
+    qk_n, qk_r = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = L.rmsnorm(params["q_norm"], x @ params["q_down"].astype(compute_dtype),
+                   cfg.norm_eps)
+    q = (cq @ params["q_up"].astype(compute_dtype)).reshape(B, T, h, qk_n + qk_r)
+    q_nope, q_rope = q[..., :qk_n], q[..., qk_n:]
+    q_rope = L.apply_rope(q_rope, positions[None, :], cfg.rope_theta)
+    ckv_full = x @ params["kv_down"].astype(compute_dtype)
+    c_kv = L.rmsnorm(params["kv_norm"], ckv_full[..., :cfg.kv_lora_rank],
+                     cfg.norm_eps)
+    k_rope = ckv_full[..., cfg.kv_lora_rank:][:, :, None, :]   # 1 shared head
+    k_rope = L.apply_rope(k_rope, positions[None, :], cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
+                positions: jnp.ndarray, compute_dtype=jnp.bfloat16,
+                chunk: int = 512) -> jnp.ndarray:
+    """Training/prefill MLA: materialize k/v from the latent (naive path)."""
+    B, T, _ = x.shape
+    h = cfg.n_heads
+    qk_n, vh = cfg.qk_nope_head_dim, cfg.v_head_dim
+    x = x.astype(compute_dtype)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x, positions,
+                                            compute_dtype)
+    kv = (c_kv @ params["kv_up"].astype(compute_dtype)).reshape(
+        B, T, h, qk_n + vh)
+    k_nope, v = kv[..., :qk_n], kv[..., qk_n:]
+    # fold the shared rope-key into per-head keys by concatenation
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope[:, :, None, :], (B, T, h, cfg.qk_rope_head_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = _chunked_attention(q, k, v, positions, positions, causal=True,
+                             window=0, chunk=chunk)
+    return out.reshape(B, T, h * vh) @ params["wo"].astype(compute_dtype)
+
+
+def mla_decode_step(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
+                    cache: MLACache, compute_dtype=jnp.bfloat16
+                    ) -> Tuple[jnp.ndarray, MLACache]:
+    """Absorbed-latent decode: attention runs in the kv_lora space, so the
+    cache stays compressed (the MLA memory win)."""
+    B = x.shape[0]
+    h = cfg.n_heads
+    qk_n, qk_r, vh, r = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                         cfg.v_head_dim, cfg.kv_lora_rank)
+    pos = cache.pos
+    x = x.astype(compute_dtype)
+    posv = pos[None].astype(jnp.float32)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x, posv, compute_dtype)
+    cnew = jax.lax.dynamic_update_slice_in_dim(
+        cache.c_kv, c_kv.astype(cache.c_kv.dtype), pos, axis=1)
+    rnew = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rope, k_rope.astype(cache.k_rope.dtype), pos, axis=1)
+    kv_up = params["kv_up"].astype(compute_dtype).reshape(r, h, qk_n + vh)
+    w_k = kv_up[..., :qk_n]                  # [r, h, qk_n]
+    w_v = kv_up[..., qk_n:]                  # [r, h, vh]
+    # absorb: q_eff[b,h,r] = q_nope[b,1,h,n] · w_k[r,h,n]
+    q_eff = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], w_k)
+    scores = (jnp.einsum("bhr,bsr->bhs", q_eff.astype(jnp.float32),
+                         cnew.astype(jnp.float32))
+              + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
+                           rnew.astype(jnp.float32)))
+    scores = scores / math.sqrt(qk_n + qk_r)
+    valid = jnp.arange(cnew.shape[1]) <= pos
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    lat = jnp.einsum("bhs,bsr->bhr", probs.astype(cnew.dtype), cnew)
+    out = jnp.einsum("bhr,rhv->bhv", lat, w_v).reshape(B, 1, h * vh)
+    out = out.astype(compute_dtype) @ params["wo"].astype(compute_dtype)
+    return out, MLACache(cnew, rnew, pos + 1)

@@ -1,0 +1,220 @@
+"""Encoder-decoder assembly (seamless-m4t-large-v2 backbone).
+
+The speech frontend is a STUB per the brief: `input_specs()` delivers
+precomputed frame embeddings [B, S, frontend_dim]; a linear projector maps
+them into the encoder. Decoder = causal self-attention + cross-attention +
+MLP; decode uses a self KV-cache plus cross K/V computed once at encode
+time.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import attention as ATT
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+
+def _xattn_init(key, cfg: ModelConfig, dtype) -> PyTree:
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+    ks = L.split_keys(key, 4)
+    return {
+        "wq": L.dense_init(ks[0], (d, h * dh), dtype),
+        "wk": L.dense_init(ks[1], (d, h * dh), dtype),
+        "wv": L.dense_init(ks[2], (d, h * dh), dtype),
+        "wo": L.dense_init(ks[3], (h * dh, d), dtype),
+    }
+
+
+def _enc_block_init(key, cfg, dtype):
+    ks = L.split_keys(key, 2)
+    return {
+        "norm1": L.rmsnorm_init(cfg.d_model, dtype),
+        "attn": ATT.gqa_init(ks[0], cfg, dtype),
+        "norm2": L.rmsnorm_init(cfg.d_model, dtype),
+        "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _dec_block_init(key, cfg, dtype):
+    ks = L.split_keys(key, 3)
+    return {
+        "norm1": L.rmsnorm_init(cfg.d_model, dtype),
+        "attn": ATT.gqa_init(ks[0], cfg, dtype),
+        "norm_x": L.rmsnorm_init(cfg.d_model, dtype),
+        "xattn": _xattn_init(ks[1], cfg, dtype),
+        "norm2": L.rmsnorm_init(cfg.d_model, dtype),
+        "mlp": L.mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key, param_dtype=jnp.float32) -> PyTree:
+    ks = L.split_keys(key, 6)
+    stack = lambda k, n, f: jax.vmap(f)(jnp.stack(L.split_keys(k, n)))
+    return {
+        "frontend_proj": L.dense_init(ks[0], (cfg.frontend_dim or cfg.d_model,
+                                               cfg.d_model), param_dtype),
+        "enc_blocks": stack(ks[1], cfg.n_encoder_layers,
+                            lambda k: _enc_block_init(k, cfg, param_dtype)),
+        "enc_norm": L.rmsnorm_init(cfg.d_model, param_dtype),
+        "embed": L.embedding_init(ks[2], cfg.vocab_size, cfg.d_model,
+                                  param_dtype),
+        "dec_blocks": stack(ks[3], cfg.n_layers,
+                            lambda k: _dec_block_init(k, cfg, param_dtype)),
+        "final_norm": L.rmsnorm_init(cfg.d_model, param_dtype),
+        "lm_head": L.lm_head_init(ks[4], cfg.d_model, cfg.vocab_size,
+                                  param_dtype),
+    }
+
+
+def _cross_attention(params, cfg, x, kv_k, kv_v, compute_dtype):
+    """x: [B,T,D]; kv_k/kv_v: [B,S,H,Dh] precomputed from encoder output."""
+    B, T, D = x.shape
+    h, dh = cfg.n_heads, cfg.resolved_head_dim
+    q = (x.astype(compute_dtype) @ params["wq"].astype(compute_dtype)
+         ).reshape(B, T, h, dh)
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32),
+                        kv_k.astype(jnp.float32)) * scale
+    probs = jax.nn.softmax(scores, axis=-1).astype(kv_v.dtype)
+    out = jnp.einsum("bhts,bshd->bthd", probs, kv_v).reshape(B, T, h * dh)
+    return out.astype(compute_dtype) @ params["wo"].astype(compute_dtype)
+
+
+def cross_kv(params, cfg, enc_out, compute_dtype):
+    B, S, _ = enc_out.shape
+    h, dh = cfg.n_heads, cfg.resolved_head_dim
+    e = enc_out.astype(compute_dtype)
+    k = (e @ params["wk"].astype(compute_dtype)).reshape(B, S, h, dh)
+    v = (e @ params["wv"].astype(compute_dtype)).reshape(B, S, h, dh)
+    return k, v
+
+
+def encode(params: PyTree, cfg: ModelConfig, frames: jnp.ndarray,
+           compute_dtype=jnp.bfloat16, attn_chunk: int = 512,
+           remat: bool = True) -> jnp.ndarray:
+    """frames: [B,S,frontend_dim] -> encoder states [B,S,D]."""
+    x = frames.astype(compute_dtype) @ params["frontend_proj"].astype(
+        compute_dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.float32)
+
+    def body(bp, y):
+        h = L.rmsnorm(bp["norm1"], y, cfg.norm_eps)
+        # bidirectional: non-causal full attention
+        B, T, D = h.shape
+        hh, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+        hc = h.astype(compute_dtype)
+        q = (hc @ bp["attn"]["wq"].astype(compute_dtype)).reshape(B, T, hh, dh)
+        k = (hc @ bp["attn"]["wk"].astype(compute_dtype)).reshape(B, T, kv, dh)
+        v = (hc @ bp["attn"]["wv"].astype(compute_dtype)).reshape(B, T, kv, dh)
+        q = L.apply_rope(q, positions[None, :], cfg.rope_theta)
+        k = L.apply_rope(k, positions[None, :], cfg.rope_theta)
+        a = ATT._chunked_attention(q, k, v, positions, positions,
+                                   causal=False, window=0, chunk=attn_chunk)
+        y = y + a.reshape(B, T, hh * dh) @ bp["attn"]["wo"].astype(
+            compute_dtype)
+        h = L.rmsnorm(bp["norm2"], y, cfg.norm_eps)
+        return y + L.mlp_apply(bp["mlp"], h, cfg.mlp_type, compute_dtype)
+
+    def step(y, bp):
+        fn = jax.checkpoint(body) if remat else body
+        return fn(bp, y), None
+
+    x, _ = jax.lax.scan(step, x, params["enc_blocks"])
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def decode_train(params: PyTree, cfg: ModelConfig, enc_out: jnp.ndarray,
+                 tokens: jnp.ndarray, compute_dtype=jnp.bfloat16,
+                 attn_chunk: int = 512, remat: bool = True,
+                 last_only: bool = False) -> jnp.ndarray:
+    """Teacher-forced decoder. tokens: [B,T] -> logits [B,T,V]."""
+    x = L.embed(params["embed"], tokens, compute_dtype)
+    T = x.shape[1]
+    positions = jnp.arange(T, dtype=jnp.float32)
+
+    def body(bp, y):
+        h = L.rmsnorm(bp["norm1"], y, cfg.norm_eps)
+        y = y + ATT.gqa_forward(bp["attn"], cfg, h, positions, compute_dtype,
+                                attn_chunk)
+        h = L.rmsnorm(bp["norm_x"], y, cfg.norm_eps)
+        kk, vv = cross_kv(bp["xattn"], cfg, enc_out, compute_dtype)
+        y = y + _cross_attention(bp["xattn"], cfg, h, kk, vv, compute_dtype)
+        h = L.rmsnorm(bp["norm2"], y, cfg.norm_eps)
+        return y + L.mlp_apply(bp["mlp"], h, cfg.mlp_type, compute_dtype)
+
+    def step(y, bp):
+        fn = jax.checkpoint(body) if remat else body
+        return fn(bp, y), None
+
+    x, _ = jax.lax.scan(step, x, params["dec_blocks"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:, :]
+    return L.lm_head(params["lm_head"], x, compute_dtype)
+
+
+def encdec_loss(params: PyTree, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+                compute_dtype=jnp.bfloat16, attn_chunk: int = 512,
+                remat: bool = True):
+    enc = encode(params, cfg, batch["frontend_embeds"], compute_dtype,
+                 attn_chunk, remat)
+    logits = decode_train(params, cfg, enc, batch["tokens"], compute_dtype,
+                          attn_chunk, remat)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss, "aux": jnp.zeros((), jnp.float32)}
+
+
+class EncDecCache(NamedTuple):
+    self_cache: Any          # stacked [L] KVCache
+    cross_k: jnp.ndarray     # [L, B, S, H, Dh]
+    cross_v: jnp.ndarray
+
+
+def init_cache(params: PyTree, cfg: ModelConfig, enc_out: jnp.ndarray,
+               max_len: int, dtype=jnp.bfloat16) -> EncDecCache:
+    B = enc_out.shape[0]
+    selfc = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape),
+        ATT.init_kv_cache(cfg, B, max_len, dtype))
+
+    def layer_kv(bp):
+        return cross_kv(bp["xattn"], cfg, enc_out, jnp.bfloat16)
+
+    ck, cv = jax.vmap(layer_kv)(params["dec_blocks"])
+    return EncDecCache(selfc, ck.astype(dtype), cv.astype(dtype))
+
+
+def decode_step(params: PyTree, cfg: ModelConfig, tokens: jnp.ndarray,
+                cache: EncDecCache, compute_dtype=jnp.bfloat16
+                ) -> Tuple[jnp.ndarray, EncDecCache]:
+    x = L.embed(params["embed"], tokens, compute_dtype)
+
+    def step(y, inp):
+        bp, sc, ck, cv = inp
+        h = L.rmsnorm(bp["norm1"], y, cfg.norm_eps)
+        a, sc = ATT.gqa_decode_step(bp["attn"], cfg, h, sc, compute_dtype)
+        y = y + a
+        h = L.rmsnorm(bp["norm_x"], y, cfg.norm_eps)
+        y = y + _cross_attention(bp["xattn"], cfg, h, ck, cv, compute_dtype)
+        h = L.rmsnorm(bp["norm2"], y, cfg.norm_eps)
+        return y + L.mlp_apply(bp["mlp"], h, cfg.mlp_type, compute_dtype), sc
+
+    x, selfc = jax.lax.scan(step, x, (params["dec_blocks"], cache.self_cache,
+                                      cache.cross_k, cache.cross_v))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.lm_head(params["lm_head"], x, compute_dtype)
+    return logits, EncDecCache(selfc, cache.cross_k, cache.cross_v)

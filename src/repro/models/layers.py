@@ -1,0 +1,121 @@
+"""Shared building blocks: norms, RoPE, embeddings, gated MLPs.
+
+Pure-JAX (pytree params, init/apply function pairs). Compute dtype is
+passed explicitly; params live in param_dtype (fp32 master by default).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------- norm
+def rmsnorm_init(d: int, dtype) -> PyTree:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: PyTree, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def headwise_rmsnorm(scale: jnp.ndarray, x: jnp.ndarray,
+                     eps: float = 1e-6) -> jnp.ndarray:
+    """qk-norm (qwen3): RMS over the head_dim axis of [..., H, Dh]."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10_000.0) -> jnp.ndarray:
+    """x: [..., T, H, Dh]; positions broadcastable to [..., T]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [Dh/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., T, Dh/2]
+    cos = jnp.cos(ang)[..., :, None, :]                 # [..., T, 1, Dh/2]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- mlp
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> PyTree:
+    k1, k2, k3 = split_keys(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def mlp_apply(params: PyTree, x: jnp.ndarray, mlp_type: str = "swiglu",
+              compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    x = x.astype(compute_dtype)
+    g = x @ params["w_gate"].astype(compute_dtype)
+    u = x @ params["w_up"].astype(compute_dtype)
+    if mlp_type == "swiglu":
+        a = jax.nn.silu(g)
+    elif mlp_type == "geglu":
+        a = jax.nn.gelu(g, approximate=True)
+    else:
+        raise KeyError(mlp_type)
+    return (a * u) @ params["w_down"].astype(compute_dtype)
+
+
+# ----------------------------------------------------------------- embedding
+def embedding_init(key, vocab: int, d_model: int, dtype) -> PyTree:
+    return {"table": embed_init(key, (vocab, d_model), dtype)}
+
+
+def embed(params: PyTree, tokens: jnp.ndarray, compute_dtype=jnp.bfloat16):
+    return params["table"].astype(compute_dtype)[tokens]
+
+
+def unembed(params: PyTree, x: jnp.ndarray, compute_dtype=jnp.bfloat16):
+    """Logits in fp32 (loss stability)."""
+    return (x.astype(compute_dtype)
+            @ params["table"].astype(compute_dtype).T).astype(jnp.float32)
+
+
+def lm_head_init(key, d_model: int, vocab: int, dtype) -> PyTree:
+    return {"w": dense_init(key, (d_model, vocab), dtype)}
+
+
+def lm_head(params: PyTree, x: jnp.ndarray, compute_dtype=jnp.bfloat16):
+    return (x.astype(compute_dtype)
+            @ params["w"].astype(compute_dtype)).astype(jnp.float32)

@@ -1,0 +1,316 @@
+"""State-space mixers: Mamba2-style SSD (hymba's parallel SSM heads) and
+RWKV6 "Finch" time/channel mix with data-dependent decay.
+
+TPU adaptation (DESIGN.md §2): both recurrences are evaluated in *chunked*
+form — within a chunk the recurrence is expanded into an attention-like
+score matrix (dense matmuls for the MXU), across chunks a lax.scan carries
+the [heads, state, head_dim] recurrent state. Decode steps use the plain
+O(1) recurrence.
+
+Numerical strategy: decays are kept as (negative) log-decays; all
+within-chunk ratios exp(cum_t - cum_s) are formed from pairwise
+differences (always <= 0, never overflow).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv: x [B,T,C], w [K,C] (K small, unrolled)."""
+    K = w.shape[0]
+    out = x * w[K - 1]
+    for j in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, :-j]
+        out = out + shifted * w[K - 1 - j]
+    return out
+
+
+# =====================================================================
+# Mamba2-style SSD mixer (hymba SSM heads)
+# =====================================================================
+class MambaState(NamedTuple):
+    S: jnp.ndarray          # [B, H, N, P]
+    conv: jnp.ndarray       # [B, K-1, d_inner] trailing inputs
+    pos: jnp.ndarray
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> PyTree:
+    d = cfg.d_model
+    H = cfg.ssm_heads or cfg.n_heads
+    P = d // H
+    N = cfg.ssm_state
+    ks = L.split_keys(key, 7)
+    return {
+        "w_x": L.dense_init(ks[0], (d, H * P), dtype),
+        "w_z": L.dense_init(ks[1], (d, H * P), dtype),
+        "w_B": L.dense_init(ks[2], (d, N), dtype),
+        "w_C": L.dense_init(ks[3], (d, N), dtype),
+        "w_dt": L.dense_init(ks[4], (d, H), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "A_log": jnp.zeros((H,), dtype),          # a = -exp(A_log) = -1 init
+        "D": jnp.ones((H,), dtype),
+        "conv_w": (jnp.ones((cfg.ssm_conv, H * P), jnp.float32)
+                   / cfg.ssm_conv).astype(dtype),
+        "norm": L.rmsnorm_init(H * P, dtype),
+        "w_out": L.dense_init(ks[5], (H * P, d), dtype),
+    }
+
+
+def _mamba_features(params, cfg, x, compute_dtype):
+    B, T, d = x.shape
+    H = cfg.ssm_heads or cfg.n_heads
+    P = d // H
+    x = x.astype(compute_dtype)
+    xs = x @ params["w_x"].astype(compute_dtype)           # [B,T,HP]
+    z = x @ params["w_z"].astype(compute_dtype)
+    Bm = x @ params["w_B"].astype(compute_dtype)           # [B,T,N]
+    Cm = x @ params["w_C"].astype(compute_dtype)
+    dt = jax.nn.softplus((x @ params["w_dt"].astype(compute_dtype))
+                         .astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # [B,T,H]
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))      # [H] < 0
+    return xs, z, Bm, Cm, dt, a, H, P
+
+
+def mamba_forward(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
+                  compute_dtype=jnp.bfloat16, chunk: int = 64) -> jnp.ndarray:
+    B, T, d = x.shape
+    xs, z, Bm, Cm, dt, a, H, P = _mamba_features(params, cfg, x, compute_dtype)
+    xs = _causal_conv(xs, params["conv_w"].astype(compute_dtype))
+    xs = jax.nn.silu(xs)
+    xh = xs.reshape(B, T, H, P)
+    N = Bm.shape[-1]
+
+    llog = dt * a[None, None, :]                           # [B,T,H] log-decay
+    u = xh.astype(jnp.float32) * dt[..., None]             # [B,T,H,P]
+
+    Q = min(chunk, T)
+    assert T % Q == 0, (T, Q)
+    nc = T // Q
+    resh = lambda t, tail: t.reshape((B, nc, Q) + tail)
+    lc = resh(llog, (H,))
+    uc = resh(u, (H, P))
+    Bc = resh(Bm.astype(jnp.float32), (N,))
+    Cc = resh(Cm.astype(jnp.float32), (N,))
+    cum = jnp.cumsum(lc, axis=2)                           # [B,nc,Q,H]
+
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    CB = jnp.einsum("bqtn,bqsn->bqts", Cc, Bc)             # [B,nc,Q,Q]
+
+    def chunk_step(S, inp):
+        cumq, CBq, uq, Bq, Cq = inp                        # per-chunk slices
+        diff = cumq[:, :, None, :] - cumq[:, None, :, :]   # [B,Q,Q,H] t,s
+        M = jnp.where(mask[None, :, :, None], jnp.exp(diff), 0.0)
+        y_intra = jnp.einsum("bts,btsh,bshp->bthp", CBq, M, uq)
+        y_state = jnp.einsum("btn,bth,bhnp->bthp", Cq, jnp.exp(cumq), S)
+        clast = cumq[:, -1:, :]                            # [B,1,H]
+        S_new = (jnp.exp(clast)[:, 0, :, None, None] * S
+                 + jnp.einsum("bsn,bsh,bshp->bhnp", Bq,
+                              jnp.exp(clast - cumq), uq))
+        return S_new, y_intra + y_state
+
+    S0 = jnp.zeros((B, H, N, P), jnp.float32)
+    swap = lambda t: jnp.moveaxis(t, 1, 0)                 # scan over chunks
+    _, ys = jax.lax.scan(chunk_step, S0,
+                         (swap(cum), swap(CB), swap(uc), swap(Bc), swap(Cc)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, P)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(B, T, H * P).astype(compute_dtype) * jax.nn.silu(z)
+    y = L.rmsnorm(params["norm"], y, cfg.norm_eps)
+    return y @ params["w_out"].astype(compute_dtype)
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32
+                     ) -> MambaState:
+    d = cfg.d_model
+    H = cfg.ssm_heads or cfg.n_heads
+    P = d // H
+    return MambaState(jnp.zeros((batch, H, cfg.ssm_state, P), jnp.float32),
+                      jnp.zeros((batch, cfg.ssm_conv - 1, H * P), dtype),
+                      jnp.zeros((), jnp.int32))
+
+
+def mamba_decode_step(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
+                      state: MambaState, compute_dtype=jnp.bfloat16
+                      ) -> Tuple[jnp.ndarray, MambaState]:
+    """x: [B,1,D] -> (out [B,1,D], state)."""
+    B = x.shape[0]
+    xs, z, Bm, Cm, dt, a, H, P = _mamba_features(params, cfg, x, compute_dtype)
+    hist = jnp.concatenate([state.conv, xs], axis=1)       # [B,K,HP]
+    w = params["conv_w"].astype(compute_dtype)
+    xs = jnp.einsum("bkc,kc->bc", hist, w)[:, None]
+    xs = jax.nn.silu(xs)
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    decay = jnp.exp(dt[:, 0] * a[None, :])                 # [B,H]
+    u = xh * dt[:, 0, :, None]
+    S = (decay[:, :, None, None] * state.S
+         + jnp.einsum("bn,bhp->bhnp", Bm[:, 0].astype(jnp.float32), u))
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), S)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, H * P).astype(compute_dtype) * jax.nn.silu(z)
+    y = L.rmsnorm(params["norm"], y, cfg.norm_eps)
+    out = y @ params["w_out"].astype(compute_dtype)
+    return out, MambaState(S, hist[:, 1:], state.pos + 1)
+
+
+# =====================================================================
+# RWKV6 (Finch): time-mix with data-dependent per-channel decay
+# =====================================================================
+class RWKVState(NamedTuple):
+    S: jnp.ndarray        # [B, H, K, V] wkv state
+    x_time: jnp.ndarray   # [B, D] previous token (time-mix shift)
+    x_chan: jnp.ndarray   # [B, D] previous token (channel-mix shift)
+    pos: jnp.ndarray
+
+
+def rwkv_time_init(key, cfg: ModelConfig, dtype) -> PyTree:
+    d = cfg.d_model
+    K = cfg.rwkv_head_dim
+    H = d // K
+    lora = cfg.rwkv_decay_lora
+    ks = L.split_keys(key, 8)
+    return {
+        "mu": 0.5 * jnp.ones((5, d), dtype),      # lerp for r,k,v,w,g
+        "w_r": L.dense_init(ks[0], (d, d), dtype),
+        "w_k": L.dense_init(ks[1], (d, d), dtype),
+        "w_v": L.dense_init(ks[2], (d, d), dtype),
+        "w_g": L.dense_init(ks[3], (d, d), dtype),
+        "decay_base": -6.0 * jnp.ones((d,), dtype),
+        "decay_A": L.dense_init(ks[4], (d, lora), dtype, scale=0.01),
+        "decay_B": L.dense_init(ks[5], (lora, d), dtype, scale=0.01),
+        "bonus": jnp.zeros((H, K), dtype),
+        "ln_x": jnp.ones((d,), dtype),
+        "w_o": L.dense_init(ks[6], (d, d), dtype),
+    }
+
+
+def _rwkv_features(params, cfg, x, x_prev, compute_dtype):
+    """x: [B,T,D]; x_prev: [B,1,D] token before the window."""
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    mu = params["mu"].astype(compute_dtype)
+    mix = lambda i: x + (shifted - x) * mu[i][None, None, :]
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+    r = xr @ params["w_r"].astype(compute_dtype)
+    k = xk @ params["w_k"].astype(compute_dtype)
+    v = xv @ params["w_v"].astype(compute_dtype)
+    g = jax.nn.silu(xg @ params["w_g"].astype(compute_dtype))
+    # data-dependent decay (the Finch contribution): w = exp(-exp(...))
+    dd = jnp.tanh(xw @ params["decay_A"].astype(compute_dtype)) \
+        @ params["decay_B"].astype(compute_dtype)
+    logw = -jnp.exp(jnp.clip(params["decay_base"].astype(jnp.float32)
+                             + dd.astype(jnp.float32), -12.0, 2.0))  # [B,T,D]<0
+    return r, k, v, g, logw
+
+
+def rwkv_time_forward(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
+                      compute_dtype=jnp.bfloat16, chunk: int = 32
+                      ) -> jnp.ndarray:
+    B, T, d = x.shape
+    K = cfg.rwkv_head_dim
+    H = d // K
+    x = x.astype(compute_dtype)
+    x_prev = jnp.zeros((B, 1, d), compute_dtype)
+    r, k, v, g, logw = _rwkv_features(params, cfg, x, x_prev, compute_dtype)
+    hd = lambda t: t.reshape(B, T, H, K).astype(jnp.float32)
+    r, k, v = hd(r), hd(k), hd(v)
+    lw = logw.reshape(B, T, H, K)
+
+    Q = min(chunk, T)
+    assert T % Q == 0, (T, Q)
+    nc = T // Q
+    resh = lambda t: t.reshape(B, nc, Q, H, K)
+    rc, kc, vc, lc = resh(r), resh(k), resh(v), resh(lw)
+    cum = jnp.cumsum(lc, axis=2)                      # inclusive [B,nc,Q,H,K]
+    cprev = cum - lc                                  # exclusive
+    u = params["bonus"].astype(jnp.float32)           # [H,K]
+    mask_lt = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+
+    def chunk_step(S, inp):
+        rq, kq, vq, cq, cpq = inp                     # [B,Q,H,K] each
+        # strict-lower scores: A[t,s] = sum_k r_t k_s exp(cprev_t - c_s)
+        diff = cpq[:, :, None] - cq[:, None, :, :]    # [B,Q,Q,H,K]
+        W = jnp.where(mask_lt[None, :, :, None, None], jnp.exp(diff), 0.0)
+        A = jnp.einsum("bthk,btshk,bshk->bths", rq, W, kq)
+        diag = jnp.einsum("bthk,hk,bthk->bth", rq, u, kq)
+        y = jnp.einsum("bths,bshv->bthv", A, vq) \
+            + diag[..., None] * vq \
+            + jnp.einsum("bthk,bthk,bhkv->bthv", rq, jnp.exp(cpq), S)
+        clast = cum_last = cq[:, -1]                  # [B,H,K]
+        S_new = (jnp.exp(clast)[..., None] * S
+                 + jnp.einsum("bshk,bshk,bshv->bhkv", jnp.exp(
+                     clast[:, None] - cq), kq, vq))
+        return S_new, y
+
+    S0 = jnp.zeros((B, H, K, K), jnp.float32)
+    swap = lambda t: jnp.moveaxis(t, 1, 0)
+    _, ys = jax.lax.scan(chunk_step, S0,
+                         (swap(rc), swap(kc), swap(vc), swap(cum), swap(cprev)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, d)
+    y = L.rmsnorm({"scale": params["ln_x"]}, y.astype(compute_dtype),
+                  cfg.norm_eps)
+    y = y * g
+    return y @ params["w_o"].astype(compute_dtype)
+
+
+def rwkv_chan_init(key, cfg: ModelConfig, dtype) -> PyTree:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = L.split_keys(key, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, d), dtype),
+        "w_r": L.dense_init(ks[0], (d, d), dtype),
+        "w_k": L.dense_init(ks[1], (d, ff), dtype),
+        "w_v": L.dense_init(ks[2], (ff, d), dtype),
+    }
+
+
+def rwkv_chan_forward(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
+                      x_prev: jnp.ndarray, compute_dtype=jnp.bfloat16
+                      ) -> jnp.ndarray:
+    """x: [B,T,D]; x_prev [B,1,D]."""
+    x = x.astype(compute_dtype)
+    shifted = jnp.concatenate([x_prev.astype(compute_dtype), x[:, :-1]], axis=1)
+    mu = params["mu"].astype(compute_dtype)
+    xr = x + (shifted - x) * mu[0][None, None]
+    xk = x + (shifted - x) * mu[1][None, None]
+    r = jax.nn.sigmoid(xr @ params["w_r"].astype(compute_dtype))
+    k = jnp.square(jax.nn.relu(xk @ params["w_k"].astype(compute_dtype)))
+    return r * (k @ params["w_v"].astype(compute_dtype))
+
+
+def rwkv_decode_step(tparams: PyTree, cparams: PyTree, cfg: ModelConfig,
+                     x: jnp.ndarray, state: RWKVState,
+                     compute_dtype=jnp.bfloat16
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, RWKVState]:
+    """One-token time-mix + channel-mix. x: [B,1,D] (pre-norm input for the
+    time mix; the block wires norms). Returns (time_out, chan_fn, state)."""
+    B, _, d = x.shape
+    K = cfg.rwkv_head_dim
+    H = d // K
+    x = x.astype(compute_dtype)
+    r, k, v, g, logw = _rwkv_features(tparams, cfg, x,
+                                      state.x_time[:, None], compute_dtype)
+    hd = lambda t: t.reshape(B, H, K).astype(jnp.float32)
+    r, k, v = hd(r[:, 0]), hd(k[:, 0]), hd(v[:, 0])
+    w = jnp.exp(logw[:, 0]).reshape(B, H, K)
+    u = tparams["bonus"].astype(jnp.float32)
+    wkv = state.S + u[None, :, :, None] * jnp.einsum("bhk,bhv->bhkv", k, v)
+    y = jnp.einsum("bhk,bhkv->bhv", r, wkv).reshape(B, 1, d)
+    S_new = (w[..., None] * state.S
+             + jnp.einsum("bhk,bhv->bhkv", k, v))
+    y = L.rmsnorm({"scale": tparams["ln_x"]}, y.astype(compute_dtype),
+                  cfg.norm_eps)
+    y = y * g
+    time_out = y @ tparams["w_o"].astype(compute_dtype)
+    new_state = RWKVState(S_new, x[:, 0], state.x_chan, state.pos + 1)
+    return time_out, new_state

@@ -1,0 +1,321 @@
+"""Decoder-only LM assembly for every family in the pool.
+
+Block families:
+  dense/moe : x += attn(norm(x));  x += mlp|moe(norm(x))
+  hybrid    : x += attn(norm(x)) + mamba(norm(x))   (hymba parallel heads)
+              x += mlp(norm(x))
+  ssm(rwkv) : x += time_mix(norm(x)); x += channel_mix(norm(x))
+
+Layers are *stacked* [L, ...] and driven by lax.scan (compile time stays
+O(1 layer) even for 64-layer configs) with jax.checkpoint around the block
+body (activation remat). MoE configs may have a dense prefix
+(first_dense_layers) which scans separately.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import attention as ATT
+from . import moe as MOE
+from . import ssm as SSM
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+
+# ------------------------------------------------------------------- blocks
+def block_init(key, cfg: ModelConfig, dtype, moe_block: bool) -> PyTree:
+    ks = L.split_keys(key, 4)
+    p: Dict[str, PyTree] = {}
+    if cfg.family == "ssm":                       # rwkv
+        p["norm1"] = L.rmsnorm_init(cfg.d_model, dtype)
+        p["time"] = SSM.rwkv_time_init(ks[0], cfg, dtype)
+        p["norm2"] = L.rmsnorm_init(cfg.d_model, dtype)
+        p["chan"] = SSM.rwkv_chan_init(ks[1], cfg, dtype)
+        return p
+    p["norm1"] = L.rmsnorm_init(cfg.d_model, dtype)
+    if cfg.attn_type == "mla":
+        p["attn"] = ATT.mla_init(ks[0], cfg, dtype)
+    else:
+        p["attn"] = ATT.gqa_init(ks[0], cfg, dtype)
+    if cfg.family == "hybrid":
+        p["mamba"] = SSM.mamba_init(ks[2], cfg, dtype)
+    p["norm2"] = L.rmsnorm_init(cfg.d_model, dtype)
+    if moe_block:
+        p["moe"] = MOE.moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def block_apply(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
+                positions: jnp.ndarray, moe_block: bool,
+                compute_dtype=jnp.bfloat16, attn_chunk: int = 512,
+                moe_shards: int = 1, use_flash: bool = False
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[B,T,D] -> ([B,T,D], aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
+        x = x + SSM.rwkv_time_forward(params["time"], cfg, h, compute_dtype)
+        h = L.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        prev = jnp.zeros((x.shape[0], 1, x.shape[-1]), h.dtype)
+        x = x + SSM.rwkv_chan_forward(params["chan"], cfg, h, prev,
+                                      compute_dtype)
+        return x, aux
+    h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a = ATT.mla_forward(params["attn"], cfg, h, positions, compute_dtype,
+                            attn_chunk)
+    else:
+        a = ATT.gqa_forward(params["attn"], cfg, h, positions, compute_dtype,
+                            attn_chunk, use_flash)
+    if cfg.family == "hybrid":
+        a = (a + SSM.mamba_forward(params["mamba"], cfg, h, compute_dtype)) * 0.5
+    x = x + a
+    h = L.rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if moe_block:
+        m, aux = MOE.moe_apply(params["moe"], cfg, h, compute_dtype,
+                               moe_shards)
+    else:
+        m = L.mlp_apply(params["mlp"], h, cfg.mlp_type, compute_dtype)
+    return x + m, aux
+
+
+# ------------------------------------------------------------------- params
+def _stack_init(key, n: int, one_init):
+    """Initialise n blocks with different keys, stacked on axis 0."""
+    keys = jnp.stack(L.split_keys(key, n))
+    return jax.vmap(one_init)(keys)
+
+
+def init_params(cfg: ModelConfig, key, param_dtype=jnp.float32) -> PyTree:
+    ks = L.split_keys(key, 6)
+    params: Dict[str, PyTree] = {
+        "embed": L.embedding_init(ks[0], cfg.vocab_size, cfg.d_model,
+                                  param_dtype),
+        "final_norm": L.rmsnorm_init(cfg.d_model, param_dtype),
+    }
+    n_moe = 0
+    if cfg.n_experts:
+        n_dense = cfg.first_dense_layers
+        n_moe = cfg.n_layers - n_dense
+        if n_dense:
+            params["dense_blocks"] = _stack_init(
+                ks[1], n_dense,
+                lambda k: block_init(k, cfg, param_dtype, moe_block=False))
+        params["blocks"] = _stack_init(
+            ks[2], n_moe,
+            lambda k: block_init(k, cfg, param_dtype, moe_block=True))
+    else:
+        params["blocks"] = _stack_init(
+            ks[2], cfg.n_layers,
+            lambda k: block_init(k, cfg, param_dtype, moe_block=False))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.lm_head_init(ks[3], cfg.d_model, cfg.vocab_size,
+                                           param_dtype)
+    if cfg.frontend == "vision":
+        params["projector"] = {
+            "w1": L.dense_init(ks[4], (cfg.frontend_dim, cfg.d_model),
+                               param_dtype),
+            "w2": L.dense_init(ks[5], (cfg.d_model, cfg.d_model), param_dtype),
+        }
+    elif cfg.frontend == "audio":
+        params["projector"] = {
+            "w1": L.dense_init(ks[4], (cfg.frontend_dim, cfg.d_model),
+                               param_dtype),
+        }
+    return params
+
+
+def project_frontend(params: PyTree, cfg: ModelConfig, embeds: jnp.ndarray,
+                     compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Modality stub -> model space. embeds: [B, S, frontend_dim]."""
+    x = embeds.astype(compute_dtype) @ params["projector"]["w1"].astype(
+        compute_dtype)
+    if "w2" in params.get("projector", {}):
+        x = jax.nn.gelu(x) @ params["projector"]["w2"].astype(compute_dtype)
+    return x
+
+
+# ------------------------------------------------------------------ forward
+def _scan_blocks(blocks: PyTree, cfg: ModelConfig, x, positions, moe_block,
+                 compute_dtype, attn_chunk, remat: bool = True,
+                 moe_shards: int = 1, use_flash: bool = False):
+    body = functools.partial(block_apply, cfg=cfg, positions=positions,
+                             moe_block=moe_block, compute_dtype=compute_dtype,
+                             attn_chunk=attn_chunk, moe_shards=moe_shards,
+                             use_flash=use_flash)
+
+    def step(carry, bparams):
+        x, aux = carry
+        fn = (jax.checkpoint(lambda p, y: body(p, x=y)) if remat
+              else (lambda p, y: body(p, x=y)))
+        x, a = fn(bparams, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)), blocks)
+    return x, aux
+
+
+def forward(params: PyTree, cfg: ModelConfig, tokens: jnp.ndarray,
+            frontend_embeds: Optional[jnp.ndarray] = None,
+            compute_dtype=jnp.bfloat16, attn_chunk: int = 512,
+            remat: bool = True, last_only: bool = False,
+            moe_shards: int = 1, use_flash: bool = False
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens [B,T_text] (+ optional frontend embeds prepended) -> logits
+    [B,T,V], aux. last_only: unembed only the final position (prefill)."""
+    x = L.embed(params["embed"], tokens, compute_dtype)
+    if frontend_embeds is not None:
+        fe = project_frontend(params, cfg, frontend_embeds, compute_dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+    T = x.shape[1]
+    positions = jnp.arange(T, dtype=jnp.float32)
+    aux = jnp.zeros((), jnp.float32)
+    if "dense_blocks" in params:
+        x, a = _scan_blocks(params["dense_blocks"], cfg, x, positions, False,
+                            compute_dtype, attn_chunk, remat)
+        aux += a
+    x, a = _scan_blocks(params["blocks"], cfg, x, positions,
+                        bool(cfg.n_experts), compute_dtype, attn_chunk, remat,
+                        moe_shards, use_flash)
+    aux += a
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:, :]
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x, compute_dtype)
+    else:
+        logits = L.lm_head(params["lm_head"], x, compute_dtype)
+    return logits, aux
+
+
+def lm_loss(params: PyTree, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            compute_dtype=jnp.bfloat16, attn_chunk: int = 512,
+            aux_weight: float = 0.01, remat: bool = True,
+            moe_shards: int = 1
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token cross entropy. batch: tokens [B,T], labels [B,T]
+    (-100 = masked), optional frontend_embeds."""
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          batch.get("frontend_embeds"), compute_dtype,
+                          attn_chunk, remat, moe_shards=moe_shards)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:      # frontend positions prepended
+        pad = logits.shape[1] - labels.shape[1]
+        labels = jnp.concatenate(
+            [jnp.full((labels.shape[0], pad), -100, labels.dtype), labels],
+            axis=1)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+# ------------------------------------------------------------------- decode
+class DecodeCache(NamedTuple):
+    """Per-layer caches stacked on a leading L axis."""
+    layers: PyTree
+    dense_layers: Optional[PyTree] = None
+
+
+def _one_layer_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    if cfg.family == "ssm":
+        return SSM.RWKVState(
+            jnp.zeros((batch, cfg.d_model // cfg.rwkv_head_dim,
+                       cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+            jnp.zeros((batch, cfg.d_model), dtype),
+            jnp.zeros((batch, cfg.d_model), dtype),
+            jnp.zeros((), jnp.int32))
+    if cfg.attn_type == "mla":
+        att = ATT.init_mla_cache(cfg, batch, max_len, dtype)
+    else:
+        att = ATT.init_kv_cache(cfg, batch, max_len, dtype)
+    if cfg.family == "hybrid":
+        return {"attn": att, "mamba": SSM.mamba_init_state(cfg, batch, dtype)}
+    return {"attn": att}
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> DecodeCache:
+    stack = lambda n: jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n,) + x.shape),
+        _one_layer_cache(cfg, batch, max_len, dtype))
+    dense = None
+    n_moe = cfg.n_layers
+    if cfg.n_experts and cfg.first_dense_layers:
+        dense = stack(cfg.first_dense_layers)
+        n_moe = cfg.n_layers - cfg.first_dense_layers
+    return DecodeCache(stack(n_moe), dense)
+
+
+def _block_decode(params: PyTree, cfg: ModelConfig, x, cache, moe_block,
+                  compute_dtype):
+    """One token through one block. x: [B,1,D]."""
+    if cfg.family == "ssm":
+        h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
+        t_out, cache = SSM.rwkv_decode_step(params["time"], params["chan"],
+                                            cfg, h, cache, compute_dtype)
+        x = x + t_out
+        h = L.rmsnorm(params["norm2"], x, cfg.norm_eps)
+        c_out = SSM.rwkv_chan_forward(params["chan"], cfg, h,
+                                      cache.x_chan[:, None], compute_dtype)
+        cache = cache._replace(x_chan=h[:, 0])
+        return x + c_out, cache, jnp.zeros((), jnp.float32)
+    h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        a, att = ATT.mla_decode_step(params["attn"], cfg, h, cache["attn"],
+                                     compute_dtype)
+    else:
+        a, att = ATT.gqa_decode_step(params["attn"], cfg, h, cache["attn"],
+                                     compute_dtype)
+    cache = dict(cache, attn=att)
+    if cfg.family == "hybrid":
+        m, ms = SSM.mamba_decode_step(params["mamba"], cfg, h, cache["mamba"],
+                                      compute_dtype)
+        a = (a + m) * 0.5
+        cache["mamba"] = ms
+    x = x + a
+    h = L.rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if moe_block:
+        m, aux = MOE.moe_apply(params["moe"], cfg, h, compute_dtype)
+    else:
+        m = L.mlp_apply(params["mlp"], h, cfg.mlp_type, compute_dtype)
+        aux = jnp.zeros((), jnp.float32)
+    return x + m, cache, aux
+
+
+def decode_step(params: PyTree, cfg: ModelConfig, tokens: jnp.ndarray,
+                cache: DecodeCache, compute_dtype=jnp.bfloat16
+                ) -> Tuple[jnp.ndarray, DecodeCache]:
+    """tokens [B,1] -> (logits [B,1,V], cache)."""
+    x = L.embed(params["embed"], tokens, compute_dtype)
+
+    def scan_seg(x, blocks, caches, moe_block):
+        def step(h, inp):
+            bp, c = inp
+            h, c, _ = _block_decode(bp, cfg, h, c, moe_block, compute_dtype)
+            return h, c
+        return jax.lax.scan(step, x, (blocks, caches))
+
+    dense_caches = cache.dense_layers
+    if "dense_blocks" in params:
+        x, dense_caches = scan_seg(x, params["dense_blocks"],
+                                   cache.dense_layers, False)
+    x, layer_caches = scan_seg(x, params["blocks"], cache.layers,
+                               bool(cfg.n_experts))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x, compute_dtype)
+    else:
+        logits = L.lm_head(params["lm_head"], x, compute_dtype)
+    return logits, DecodeCache(layer_caches, dense_caches)

@@ -1,0 +1,6 @@
+"""Pure-JAX optimizers used in the paper (Momentum-SGD, Adam, LAMB) plus
+learning-rate schedules and dynamic loss scaling."""
+from .optimizers import (Optimizer, sgd, momentum, adam, lamb, get_optimizer)
+from .schedules import (constant, linear_warmup_decay, cosine_warmup,
+                        get_schedule)
+from .scaling import DynamicLossScaler

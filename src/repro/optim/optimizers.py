@@ -1,0 +1,169 @@
+"""Optimizers as pure (init, update) pairs over pytrees.
+
+The three the paper scales with Adasum: Momentum-SGD (§5.1), Adam (§5.3),
+LAMB (§5.3). `update` returns the *delta* to add to params — this is the
+quantity the post-optimizer Adasum mode combines (paper Fig. 3:
+effective_gradient = current - start == delta).
+
+No optax in this environment; these match the standard formulations
+(Adam: Kingma&Ba; LAMB: You et al. with bias-corrected Adam core and
+per-layer trust ratio).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """init(params) -> state;  update(grads, state, params, step) ->
+    (delta, new_state). `delta` is the signed parameter update
+    (params_new = params + delta)."""
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jnp.ndarray], Tuple[PyTree, PyTree]]
+    name: str = "opt"
+    # Paper §4.1: stateless/linear optimizers combine gradients BEFORE the
+    # optimizer ("pre"); adaptive ones combine deltas AFTER ("post").
+    default_combine_point: str = "pre"
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def sgd(lr) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        a = sched(step)
+        delta = jax.tree.map(lambda g: (-a * g.astype(jnp.float32)), grads)
+        return delta, state
+
+    return Optimizer(init, update, "sgd", "pre")
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False,
+             weight_decay: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        a = sched(step)
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            if weight_decay:
+                g = g + weight_decay * p.astype(jnp.float32)
+            m_new = beta * m + g
+            d = (g + beta * m_new) if nesterov else m_new
+            return -a * d, m_new
+
+        flat = jax.tree.map(upd, grads, state["m"], params)
+        delta = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return delta, {"m": m}
+
+    return Optimizer(init, update, "momentum", "pre")
+
+
+def _adam_core(g, m, v, step, b1, b2, eps):
+    g = g.astype(jnp.float32)
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * (g * g)
+    t = step.astype(jnp.float32) + 1.0
+    mhat = m_new / (1.0 - b1 ** t)
+    vhat = v_new / (1.0 - b2 ** t)
+    return mhat / (jnp.sqrt(vhat) + eps), m_new, v_new
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, state_dtype=jnp.float32) -> Optimizer:
+    """state_dtype=bf16 halves optimizer HBM (production memory trick;
+    the update math still runs in fp32 — only storage is compressed)."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        a = sched(step)
+
+        def upd(g, m, v, p):
+            u, m_new, v_new = _adam_core(g, m.astype(jnp.float32),
+                                         v.astype(jnp.float32), step,
+                                         b1, b2, eps)
+            m_new = m_new.astype(state_dtype)
+            v_new = v_new.astype(state_dtype)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return -a * u, m_new, v_new
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2)}
+
+    return Optimizer(init, update, "adam", "post")
+
+
+def lamb(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-6,
+         weight_decay: float = 0.01, min_trust: float = 0.0,
+         max_trust: float = 10.0, state_dtype=jnp.float32) -> Optimizer:
+    """LAMB (You et al. 2019): Adam core + per-layer trust ratio
+    ‖p‖/‖u‖ scaling. The state-of-the-art large-batch optimizer the paper
+    combines with Adasum for BERT-Large (Table 3)."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        a = sched(step)
+
+        def upd(g, m, v, p):
+            u, m_new, v_new = _adam_core(g, m.astype(jnp.float32),
+                                         v.astype(jnp.float32), step,
+                                         b1, b2, eps)
+            m_new = m_new.astype(state_dtype)
+            v_new = v_new.astype(state_dtype)
+            p32 = p.astype(jnp.float32)
+            if weight_decay:
+                u = u + weight_decay * p32
+            pn = jnp.linalg.norm(p32.reshape(-1))
+            un = jnp.linalg.norm(u.reshape(-1))
+            trust = jnp.where((pn > 0) & (un > 0),
+                              jnp.clip(pn / (un + 1e-12), min_trust, max_trust),
+                              1.0)
+            return -a * trust * u, m_new, v_new
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2)}
+
+    return Optimizer(init, update, "lamb", "post")
+
+
+_REGISTRY = {"sgd": sgd, "momentum": momentum, "adam": adam, "lamb": lamb}
+
+
+def get_optimizer(name: str, lr, **kwargs) -> Optimizer:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown optimizer {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](lr, **kwargs)

@@ -1,0 +1,62 @@
+"""Dynamic loss/gradient scaling (paper §4.4.1, Micikevicius et al.).
+
+On GPU the paper trains in fp16 and dynamically rescales tensors it
+introduces (e.g. the effective_gradient) to stay inside fp16 range. On
+TPU the native low-precision type is bf16 whose exponent range matches
+fp32, so scaling is unnecessary — we keep the scaler for fp16 paths and
+paper fidelity (DESIGN.md §2)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class ScalerState(NamedTuple):
+    scale: jnp.ndarray        # current loss scale
+    good_steps: jnp.ndarray   # consecutive finite steps
+
+
+class DynamicLossScaler:
+    """scale *= 2 after `growth_interval` finite steps; scale /= 2 on any
+    non-finite gradient (and the step is skipped by the caller)."""
+
+    def __init__(self, init_scale: float = 2.0 ** 15, growth_interval: int = 2000,
+                 factor: float = 2.0, min_scale: float = 1.0,
+                 max_scale: float = 2.0 ** 24):
+        self.init_scale = init_scale
+        self.growth_interval = growth_interval
+        self.factor = factor
+        self.min_scale = min_scale
+        self.max_scale = max_scale
+
+    def init(self) -> ScalerState:
+        return ScalerState(jnp.asarray(self.init_scale, jnp.float32),
+                           jnp.zeros((), jnp.int32))
+
+    def scale_loss(self, loss: jnp.ndarray, state: ScalerState) -> jnp.ndarray:
+        return loss * state.scale.astype(loss.dtype)
+
+    def unscale(self, grads: PyTree, state: ScalerState) -> PyTree:
+        inv = 1.0 / state.scale
+        return jax.tree.map(lambda g: g.astype(jnp.float32) * inv, grads)
+
+    def check_finite(self, grads: PyTree) -> jnp.ndarray:
+        leaves = jax.tree.leaves(grads)
+        finite = jnp.asarray(True)
+        for l in leaves:
+            finite &= jnp.all(jnp.isfinite(l))
+        return finite
+
+    def update(self, state: ScalerState, finite: jnp.ndarray) -> ScalerState:
+        grew = state.good_steps + 1 >= self.growth_interval
+        new_scale = jnp.where(
+            finite,
+            jnp.where(grew, jnp.minimum(state.scale * self.factor, self.max_scale),
+                      state.scale),
+            jnp.maximum(state.scale / self.factor, self.min_scale))
+        new_good = jnp.where(finite & ~grew, state.good_steps + 1, 0)
+        return ScalerState(new_scale, new_good)

@@ -1,0 +1,51 @@
+"""Learning-rate schedules. The paper's LeNet-5 study (§5.4) uses linear
+warmup-then-decay "from zero to zero"; ResNet/BERT use the benchmark
+defaults (step decay / linear decay with warmup)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(base_lr: float):
+    return lambda step: jnp.asarray(base_lr, jnp.float32)
+
+
+def linear_warmup_decay(base_lr: float, warmup_steps: int, total_steps: int):
+    """Linear 0 -> base_lr over warmup, then linear base_lr -> 0 (§5.4)."""
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        frac = (total_steps - step) / jnp.maximum(total_steps - warmup_steps, 1)
+        return base_lr * jnp.clip(jnp.minimum(warm, frac), 0.0, 1.0)
+    return sched
+
+
+def cosine_warmup(base_lr: float, warmup_steps: int, total_steps: int,
+                  min_frac: float = 0.0):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.clip(step / jnp.maximum(warmup_steps, 1), 0.0, 1.0)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.minimum(warm, cos)
+    return sched
+
+
+def step_decay(base_lr: float, boundaries, factors):
+    """MLPerf-ResNet-style piecewise schedule (the Fig. 1 orthogonality
+    drops happen exactly at these boundaries)."""
+    def sched(step):
+        lr = jnp.asarray(base_lr, jnp.float32)
+        for b, f in zip(boundaries, factors):
+            lr = jnp.where(step >= b, base_lr * f, lr)
+        return lr
+    return sched
+
+
+_REGISTRY = {"constant": constant, "linear_warmup_decay": linear_warmup_decay,
+             "cosine_warmup": cosine_warmup, "step_decay": step_decay}
+
+
+def get_schedule(name: str, **kwargs):
+    return _REGISTRY[name](**kwargs)

@@ -1,0 +1,4 @@
+"""Distribution layer: sharding rules, runtime policies, step builders."""
+from .sharding import ShardingPolicy, param_specs, batch_specs, cache_specs
+from .policy import RunPolicy, get_policy
+from .steps import Runtime, make_runtime, make_serve_step

@@ -1,0 +1,60 @@
+"""Per-architecture runtime policy: Adasum span, FSDP, optimizer, backend.
+
+`span` = number of Adasum leaves (paper: one per node/pod-group). For
+small/medium archs one lane per DP rank (paper-pure tree over all ranks,
+RVH backend). For the huge archs the paper's hierarchical mode (§4.2.2 +
+§4.3) applies: plain sum-reduce inside a lane group (GSPMD reduce-scatter,
+overlapped with backward) and Adasum across `span` lane groups, with
+optimizer state ZeRO-partitioned. Derived from the 16 GB/chip v5e budget —
+see DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class RunPolicy:
+    span: int = 0               # 0 => one lane per DP rank
+    fsdp: bool = False          # ZeRO-3 params over `data`
+    scatter_grads: bool = False # ZeRO-2: constrain lane grads over `data`
+    backend: str = "rvh"        # combine backend when span==dp
+    optimizer: str = "adam"
+    param_dtype: str = "float32"
+    local_steps: int = 1        # paper §5.2: local SGD steps per allreduce
+    combine_op: str = "adasum"
+    attn_chunk: int = 512
+    accum_steps: int = 1        # microbatch gradient accumulation (§2.2):
+                                # bounds saved-activation memory by 1/A
+    accum_dtype: str = "float32"      # gradient-accumulator storage
+    opt_state_dtype: str = "float32"  # Adam/LAMB m,v storage
+    pad_heads: bool = False           # TP head alignment (exact; see
+                                      # configs.base.pad_heads_for_tp)
+
+
+_POLICIES = {
+    # arch id (canonical)      span  fsdp   scatter backend
+    "hymba_1p5b":            RunPolicy(0, False, False, "rvh", pad_heads=True),
+    "moonshot_v1_16b_a3b":   RunPolicy(4, True, True, "gspmd_tree"),
+    "mixtral_8x22b":         RunPolicy(2, True, True, "gspmd_tree",
+                                       param_dtype="bfloat16",
+                                       attn_chunk=256, accum_steps=8,
+                                       accum_dtype="bfloat16",
+                                       opt_state_dtype="bfloat16",
+                                       pad_heads=True),
+    "llava_next_34b":        RunPolicy(4, True, True, "gspmd_tree",
+                                       accum_steps=4, pad_heads=True),
+    "gemma_7b":              RunPolicy(0, False, False, "rvh"),
+    "minitron_4b":           RunPolicy(0, False, False, "rvh", pad_heads=True),
+    "minicpm3_4b":           RunPolicy(0, False, False, "rvh"),
+    "qwen3_32b":             RunPolicy(4, True, True, "gspmd_tree",
+                                       accum_steps=4, pad_heads=True),
+    "seamless_m4t_large_v2": RunPolicy(0, False, False, "rvh"),
+    "rwkv6_7b":              RunPolicy(0, False, False, "rvh"),
+}
+
+
+def get_policy(arch: str) -> RunPolicy:
+    from repro.configs.base import canonical
+    return _POLICIES.get(canonical(arch), RunPolicy())

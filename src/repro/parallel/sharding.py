@@ -1,0 +1,222 @@
+"""Sharding rules: parameter-tree paths -> PartitionSpecs.
+
+Policy:
+  * TP over the `model` axis: head-projection outputs (when head counts
+    divide the axis), MLP hidden dims, expert dims (EP) or expert hidden
+    (TP-in-expert), vocab (when divisible, else d_model).
+  * When a head count does NOT divide the model axis (hymba 25H,
+    minitron 24H, llava 56H, and all kv<16 GQA configs), the projection
+    falls back to *contraction sharding* (input-dim over `model`) — memory
+    still sharded, attention core replicated; see DESIGN.md + §Perf for
+    the head-padding optimization.
+  * FSDP over the `data` axis (optional): the non-TP dim of every large
+    matrix additionally sharded over `data` (ZeRO-3; gathered per-layer
+    inside the scan).
+  * Optimizer state: ZeRO-1 — same specs as params (plus the lane axis in
+    post-optimizer mode).
+All rules respect divisibility: an axis that does not divide the dim is
+dropped from the spec.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    tp_axis: str = "model"
+    fsdp_axis: Optional[str] = None      # e.g. "data" for ZeRO-3
+    tp_size: int = 1
+    fsdp_size: int = 1
+
+
+def _fits(dim: int, size: int) -> bool:
+    return size > 1 and dim % size == 0
+
+
+def _spec2(shape, pol: ShardingPolicy, tp_dim: int, lead: int = 0):
+    """Spec for a matrix whose dim `tp_dim` gets TP and the other big dim
+    gets FSDP. `lead` leading dims (layer-stack) stay unsharded."""
+    entries = [None] * len(shape)
+    if _fits(shape[tp_dim], pol.tp_size):
+        entries[tp_dim] = pol.tp_axis
+    if pol.fsdp_axis:
+        for d in range(lead, len(shape)):
+            if d != tp_dim and entries[d] is None and \
+                    _fits(shape[d], pol.fsdp_size):
+                entries[d] = pol.fsdp_axis
+                break
+    return P(*entries)
+
+
+def _contraction_spec(shape, pol: ShardingPolicy, in_dim: int, lead: int = 0):
+    """Fallback: shard the contraction (input) dim over TP."""
+    entries = [None] * len(shape)
+    if _fits(shape[in_dim], pol.tp_size):
+        entries[in_dim] = pol.tp_axis
+    if pol.fsdp_axis:
+        for d in range(lead, len(shape)):
+            if d != in_dim and entries[d] is None and \
+                    _fits(shape[d], pol.fsdp_size):
+                entries[d] = pol.fsdp_axis
+                break
+    return P(*entries)
+
+
+def param_specs(cfg: ModelConfig, shapes: PyTree, pol: ShardingPolicy
+                ) -> PyTree:
+    """PartitionSpec pytree matching the param pytree (of ShapeDtypeStructs
+    or arrays)."""
+    tp = pol.tp_size
+    heads_ok = _fits(cfg.n_heads, tp) or cfg.n_heads == 0
+    kv_ok = _fits(cfg.n_kv_heads, tp)
+    rwkv_heads_ok = cfg.family == "ssm" and \
+        _fits(cfg.d_model // max(cfg.rwkv_head_dim, 1), tp)
+    ssm_ok = _fits(cfg.ssm_heads or cfg.n_heads, tp)
+
+    def rule(path, leaf) -> P:
+        name = jax.tree_util.keystr(path)
+        shape = leaf.shape
+        lead = 1 if (".blocks" in name or "dense_blocks" in name
+                     or "enc_blocks" in name or "dec_blocks" in name) else 0
+        nd = len(shape)
+        last2 = (nd - 2, nd - 1)
+
+        def out_spec():   # (in, out_headed): TP on output
+            return _spec2(shape, pol, last2[1], lead)
+
+        def in_spec():    # (headed, out): TP on input
+            return _spec2(shape, pol, last2[0], lead)
+
+        def contraction():
+            return _contraction_spec(shape, pol, last2[0], lead)
+
+        if nd - lead < 1:
+            return P(*([None] * nd))
+        # ---- embeddings / heads ----
+        if "embed" in name and "table" in name:
+            if _fits(cfg.vocab_size, tp):
+                return _spec2(shape, pol, 0)
+            return _spec2(shape, pol, 1)
+        if "lm_head" in name:
+            if _fits(cfg.vocab_size, tp):
+                return out_spec()
+            return contraction()
+        # ---- MoE ----
+        if re.search(r"moe'?\]?\[?'?(w_gate|w_up)", name):
+            tp_dim = 0 + lead if cfg.expert_partition == "expert" else nd - 1
+            return _spec2(shape, pol, tp_dim, lead)
+        if re.search(r"moe'?\]?\[?'?w_down", name):
+            tp_dim = 0 + lead if cfg.expert_partition == "expert" else nd - 2
+            return _spec2(shape, pol, tp_dim, lead)
+        if "router" in name:
+            return P(*([None] * nd))
+        # ---- rwkv ----
+        if "'time'" in name or "time." in name:
+            if "w_o" in name:
+                return in_spec() if rwkv_heads_ok else contraction()
+            if re.search(r"w_[rkvg]", name):
+                return out_spec() if rwkv_heads_ok else contraction()
+            if "decay_B" in name and rwkv_heads_ok:
+                return out_spec()
+            if "bonus" in name and rwkv_heads_ok:
+                return _spec2(shape, pol, lead)
+            return P(*([None] * nd))
+        if "'chan'" in name or "chan." in name:
+            if "w_k" in name:
+                return out_spec()
+            if "w_v" in name:
+                return in_spec()
+            return P(*([None] * nd))
+        # ---- mamba (hybrid mixer) ----
+        if "mamba" in name:
+            if re.search(r"w_[xz]", name) or "conv_w" in name:
+                return out_spec() if ssm_ok else P(*([None] * nd))
+            if "w_out" in name:
+                return in_spec() if ssm_ok else contraction()
+            return P(*([None] * nd))
+        # ---- attention ----
+        if re.search(r"w[q]\b|'wq'", name):
+            return out_spec() if heads_ok else contraction()
+        if re.search(r"'w[kv]'", name):
+            # cross-attention (enc-dec) uses full heads; GQA uses kv heads
+            ok = heads_ok if "xattn" in name else kv_ok
+            return out_spec() if ok else contraction()
+        if "'wo'" in name:
+            return in_spec() if heads_ok else out_spec()
+        if "q_up" in name or "kv_up" in name:
+            return out_spec() if heads_ok else contraction()
+        if "q_down" in name:
+            return out_spec() if _fits(cfg.q_lora_rank, tp) else contraction()
+        if "kv_down" in name:
+            return contraction()
+        # ---- MLP ----
+        if re.search(r"w_gate|w_up", name):
+            return out_spec()
+        if "w_down" in name:
+            return in_spec()
+        # ---- frontends ----
+        if "projector" in name or "frontend_proj" in name:
+            if "w1" in name or "frontend_proj" in name:
+                return out_spec()
+            return in_spec()
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, shapes)
+
+
+def batch_specs(batch_shapes: PyTree, dp_axes: Sequence[str]) -> PyTree:
+    """Batch leaves sharded over the DP axes on dim 0."""
+    dp = tuple(dp_axes)
+    return jax.tree.map(
+        lambda x: P(dp, *([None] * (len(x.shape) - 1))), batch_shapes)
+
+
+def lane_batch_specs(batch_shapes: PyTree, dp_axes: Sequence[str],
+                     span: int, dp_total: int) -> PyTree:
+    """Specs for batches reshaped to (span, B//span, ...). When span ==
+    dp_total the lane dim carries the DP axes; otherwise the lane dim is
+    replicated and the inner batch is DP-sharded."""
+    dp = tuple(dp_axes)
+
+    def spec(x):
+        tail = [None] * (len(x.shape) - 2)
+        if span == dp_total:
+            return P(dp, None, *tail)
+        return P(None, dp, *tail)
+
+    return jax.tree.map(spec, batch_shapes)
+
+
+def cache_specs(cache_shapes: PyTree, cfg: ModelConfig, pol: ShardingPolicy,
+                dp_axes: Sequence[str], batch: int, dp_total: int) -> PyTree:
+    """KV-cache / state sharding for serving: batch dim over DP when it
+    divides; sequence (capacity) dim over TP; falls back along each leaf."""
+    dp = tuple(dp_axes)
+
+    def spec(path, leaf):
+        shape = leaf.shape
+        entries = [None] * len(shape)
+        # [L, B, S, ...] for kv caches; [L, B, H, ...] for states
+        if len(shape) >= 2 and _fits(batch, dp_total) and shape[1] == batch:
+            entries[1] = dp
+        if len(shape) >= 3:
+            # prefer TP on the capacity/seq dim (dim 2) when divisible
+            if _fits(shape[2], pol.tp_size):
+                entries[2] = pol.tp_axis
+            elif len(shape) >= 4 and _fits(shape[3], pol.tp_size):
+                entries[3] = pol.tp_axis
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)

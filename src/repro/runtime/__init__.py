@@ -1,0 +1,2 @@
+from .monitor import (StepMonitor, StragglerConfig, FailureInjector,
+                      next_power_of_two_below)

@@ -1,0 +1,23 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device (the dry-run sets its own flag, and the
+# multi-device tests use subprocesses).
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+def run_in_subprocess(code: str, devices: int = 8, timeout: int = 600):
+    """Run a python snippet with N fake JAX devices in a fresh process."""
+    import subprocess
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert res.returncode == 0, (
+        f"subprocess failed\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}")
+    return res.stdout

@@ -1,0 +1,103 @@
+"""Unit tests for the Adasum combiner (paper §3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adasum as A
+from repro.core.orthogonality import per_layer_orthogonality
+
+
+def rnd(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(shape),
+                       jnp.float32)
+
+
+class TestPairwise:
+    def test_orthogonal_gradients_sum(self):
+        g1 = jnp.array([1.0, 0.0, 0.0])
+        g2 = jnp.array([0.0, 2.0, 0.0])
+        out = A.adasum_pair(g1, g2)
+        np.testing.assert_allclose(out, g1 + g2, rtol=1e-6)
+
+    def test_parallel_equal_gradients_average(self):
+        g = rnd((32,), 1)
+        out = A.adasum_pair(g, g)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(g), rtol=1e-5)
+
+    def test_parallel_scaled(self):
+        """g and 3g parallel: Adasum = (1-3/2)g + (1-1/6)3g = 2g."""
+        g = rnd((16,), 2)
+        out = A.adasum_pair(g, 3 * g)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(2 * g),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_commutative(self):
+        g1, g2 = rnd((64,), 3), rnd((64,), 4)
+        np.testing.assert_allclose(np.asarray(A.adasum_pair(g1, g2)),
+                                   np.asarray(A.adasum_pair(g2, g1)),
+                                   rtol=1e-5)
+
+    def test_zero_gradient_degrades_to_sum(self):
+        g = rnd((16,), 5)
+        out = A.adasum_pair(jnp.zeros_like(g), g)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(g), rtol=1e-6)
+
+    def test_formula_matches_paper(self):
+        g1, g2 = rnd((32,), 6), rnd((32,), 7)
+        dot = float(jnp.vdot(g1, g2))
+        n1, n2 = float(jnp.vdot(g1, g1)), float(jnp.vdot(g2, g2))
+        want = (1 - dot / (2 * n1)) * g1 + (1 - dot / (2 * n2)) * g2
+        np.testing.assert_allclose(np.asarray(A.adasum_pair(g1, g2)),
+                                   np.asarray(want), rtol=1e-5)
+
+
+class TestTreeReduce:
+    def test_tree_matches_explicit_recursion(self):
+        gs = [ {"a": rnd((8,), i), "b": rnd((4, 3), 10 + i)} for i in range(8)]
+        got = A.adasum_tree_reduce(gs)
+        # explicit: adjacent pairs, 3 levels
+        l1 = [A.adasum_pair_pytree(gs[2*i], gs[2*i+1]) for i in range(4)]
+        l2 = [A.adasum_pair_pytree(l1[0], l1[1]),
+              A.adasum_pair_pytree(l1[2], l1[3])]
+        want = A.adasum_pair_pytree(l2[0], l2[1])
+        for k in ("a", "b"):
+            np.testing.assert_allclose(np.asarray(got[k]),
+                                       np.asarray(want[k]), rtol=1e-5)
+
+    def test_stacked_input_equivalent(self):
+        gs = [{"w": rnd((6,), i)} for i in range(4)]
+        stacked = {"w": jnp.stack([g["w"] for g in gs])}
+        a = A.adasum_tree_reduce(gs)
+        b = A.adasum_tree_reduce(stacked)
+        np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]),
+                                   rtol=1e-6)
+
+    def test_non_power_of_two_raises(self):
+        with pytest.raises(AssertionError):
+            A.adasum_tree_reduce([{"w": rnd((4,), i)} for i in range(3)])
+
+    def test_linear_differs_from_tree_in_general(self):
+        gs = [{"w": rnd((16,), i)} for i in range(4)]
+        t = A.adasum_tree_reduce(gs)["w"]
+        l = A.adasum_linear_reduce(gs)["w"]
+        assert not np.allclose(np.asarray(t), np.asarray(l))
+
+    def test_whole_model_vs_per_layer(self):
+        gs = [{"a": rnd((8,), i), "b": rnd((8,), 100 + i)} for i in range(2)]
+        pl = A.adasum_tree_reduce(gs, per_layer=True)
+        wm = A.adasum_tree_reduce(gs, per_layer=False)
+        assert not np.allclose(np.asarray(pl["a"]), np.asarray(wm["a"]))
+
+
+class TestOrthogonality:
+    def test_orthogonal_set_gives_one(self):
+        gs = [{"w": jnp.eye(4)[i]} for i in range(4)]
+        o = per_layer_orthogonality(gs)
+        assert abs(float(o["__mean__"]) - 1.0) < 1e-5
+
+    def test_parallel_set_gives_one_over_n(self):
+        g = rnd((32,), 0)
+        gs = [{"w": g} for _ in range(4)]
+        o = per_layer_orthogonality(gs)
+        assert abs(float(o["__mean__"]) - 0.25) < 1e-4

@@ -1,0 +1,109 @@
+"""Checkpoint manager + data pipeline tests (fault tolerance substrate)."""
+import json
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, reshard_lanes
+from repro.data import DataConfig, make_source
+from repro.configs.base import get_reduced
+
+
+def state_like(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(rng.standard_normal((4, 3)),
+                                        jnp.float32)},
+            "opt": {"m": jnp.zeros((2, 4, 3))},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        cm = CheckpointManager(tmp_path)
+        s = state_like()
+        cm.save(7, s)
+        r = cm.restore(jax.tree.map(jnp.zeros_like, s))
+        for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(r)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_atomic_no_partial_visible(self, tmp_path):
+        cm = CheckpointManager(tmp_path)
+        # a stale tmp dir (simulated crash) must not count as a checkpoint
+        (tmp_path / "step_00000005.tmp").mkdir()
+        assert cm.latest_step() is None
+        cm.save(5, state_like())
+        assert cm.latest_step() == 5
+
+    def test_keep_n_gc(self, tmp_path):
+        cm = CheckpointManager(tmp_path, keep=2)
+        for s in (1, 2, 3, 4):
+            cm.save(s, state_like(s))
+        assert cm.all_steps() == [3, 4]
+
+    def test_elastic_lane_reshard(self):
+        arr = np.arange(8 * 3, dtype=np.float32).reshape(8, 3)
+        down = reshard_lanes(arr, (4, 3))
+        assert down.shape == (4, 3)
+        np.testing.assert_allclose(down[0], arr[:2].mean(0))
+        up = reshard_lanes(down, (8, 3))
+        assert up.shape == (8, 3)
+
+    def test_elastic_restore_different_span(self, tmp_path):
+        cm = CheckpointManager(tmp_path)
+        s = state_like()
+        cm.save(1, s)
+        like = {"params": s["params"],
+                "opt": {"m": jnp.zeros((4, 4, 3))},   # span 2 -> 4
+                "step": jnp.zeros((), jnp.int32)}
+        r = cm.restore(like)
+        assert r["opt"]["m"].shape == (4, 4, 3)
+
+
+class TestDataPipeline:
+    def test_deterministic_across_restarts(self):
+        cfg = DataConfig(seq_len=32, global_batch=4, vocab_size=101, seed=9)
+        a = make_source(cfg).batch(17)
+        b = make_source(cfg).batch(17)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_steps_differ(self):
+        cfg = DataConfig(seq_len=32, global_batch=4, vocab_size=101, seed=9)
+        src = make_source(cfg)
+        assert not np.array_equal(src.batch(0)["tokens"],
+                                  src.batch(1)["tokens"])
+
+    def test_learnable_structure(self):
+        """The synthetic stream is a planted Markov chain — bigram
+        predictability must be far above chance."""
+        cfg = DataConfig(seq_len=256, global_batch=8, vocab_size=64, seed=1)
+        src = make_source(cfg)
+        toks = src.batch(0)["tokens"]
+        # for each (prev -> next) pair, check membership in the 4 planted
+        # successors ~90% of the time
+        hits = 0
+        total = 0
+        for row in toks:
+            for t in range(1, len(row)):
+                total += 1
+                if row[t] in src._succ[row[t - 1]]:
+                    hits += 1
+        assert hits / total > 0.7
+
+    def test_frontend_batches(self):
+        mc = get_reduced("llava-next-34b")
+        cfg = DataConfig(seq_len=32, global_batch=2, vocab_size=mc.vocab_size)
+        b = make_source(cfg, mc).batch(0)
+        assert b["frontend_embeds"].shape == (2, mc.frontend_tokens,
+                                              mc.frontend_dim)
+
+    def test_host_slicing(self):
+        full = DataConfig(seq_len=16, global_batch=8, vocab_size=64, seed=2)
+        part = DataConfig(seq_len=16, global_batch=8, vocab_size=64, seed=2,
+                          host_rows=4)
+        a = make_source(full).batch(3)["tokens"]
+        b = make_source(part).batch(3)["tokens"]
+        assert b.shape[0] == 4

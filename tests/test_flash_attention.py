@@ -1,0 +1,74 @@
+"""Flash-attention Pallas kernel: shape/dtype/mask sweeps vs the chunked
+oracle (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.models.attention import _chunked_attention
+
+
+def data(B, T, H, KV, Dh, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    mk = lambda *s: jnp.asarray(rng.standard_normal(s), jnp.float32).astype(dtype)
+    return mk(B, T, H, Dh), mk(B, T, KV, Dh), mk(B, T, KV, Dh)
+
+
+@pytest.mark.parametrize("B,T,H,KV,Dh", [
+    (2, 256, 4, 2, 32), (1, 128, 8, 8, 16), (1, 512, 4, 1, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_vs_oracle(B, T, H, KV, Dh, dtype):
+    q, k, v = data(B, T, H, KV, Dh, dtype)
+    pos = jnp.arange(T, dtype=jnp.float32)
+    want = _chunked_attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), pos, pos, causal=True,
+                              window=0, chunk=64)
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("window", [32, 96])
+def test_flash_sliding_window(window):
+    q, k, v = data(1, 256, 4, 2, 32, jnp.float32)
+    pos = jnp.arange(256, dtype=jnp.float32)
+    want = _chunked_attention(q, k, v, pos, pos, causal=True,
+                              window=window, chunk=64)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_k=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_noncausal():
+    q, k, v = data(2, 128, 4, 4, 32, jnp.float32)
+    pos = jnp.arange(128, dtype=jnp.float32)
+    want = _chunked_attention(q, k, v, pos, pos, causal=False, window=0,
+                              chunk=64)
+    got = flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-32b", "mixtral-8x22b",
+                                  "hymba-1.5b"])
+def test_head_padding_is_exact(arch):
+    """pad_heads_for_tp + convert_gqa_params: the padded parameterization
+    must produce identical attention-block outputs."""
+    from repro.configs.base import get_reduced, pad_heads_for_tp
+    from repro.models.attention import (gqa_init, gqa_forward,
+                                        convert_gqa_params)
+    cfg = get_reduced(arch)
+    cfg_pad = pad_heads_for_tp(cfg, 16)
+    assert cfg_pad.n_heads % 16 == 0 and cfg_pad.n_kv_heads % 16 == 0
+    p = gqa_init(jax.random.key(0), cfg, jnp.float32)
+    p_pad = convert_gqa_params(p, cfg, cfg_pad)
+    x = jax.random.normal(jax.random.key(1), (2, 32, cfg.d_model)) * 0.3
+    pos = jnp.arange(32, dtype=jnp.float32)
+    out = gqa_forward(p, cfg, x, pos, jnp.float32, chunk=16)
+    out_pad = gqa_forward(p_pad, cfg_pad, x, pos, jnp.float32, chunk=16)
+    np.testing.assert_allclose(np.asarray(out_pad), np.asarray(out),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,69 @@
+"""Tensor fusion layout tests (paper §4.4.3) incl. hypothesis round-trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fusion
+
+
+def tree_from(sizes):
+    rng = np.random.default_rng(sum(sizes) + len(sizes))
+    return {f"l{i}": jnp.asarray(rng.standard_normal(s), jnp.float32)
+            for i, s in enumerate(sizes)}
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 300), min_size=1, max_size=8),
+       st.sampled_from([1, 4, 16]), st.sampled_from([1, 8, 64]))
+def test_pack_unpack_roundtrip(sizes, align, leaf_align):
+    tree = tree_from(sizes)
+    layout = fusion.make_layout(tree, align=align, leaf_align=leaf_align)
+    buf = fusion.pack(tree, layout)
+    assert buf.shape[0] == layout.padded_len
+    assert layout.padded_len % (align * leaf_align) == 0
+    out = fusion.unpack(buf, layout)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(tree[k]))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 200), min_size=1, max_size=6),
+       st.sampled_from([8, 32]))
+def test_leaf_alignment_contract(sizes, leaf_align):
+    """Every leaf starts at a multiple of leaf_align (the Pallas block
+    contract) and segment ids agree with offsets."""
+    tree = tree_from(sizes)
+    layout = fusion.make_layout(tree, leaf_align=leaf_align)
+    seg = layout.segment_ids()
+    for i, (off, sz) in enumerate(zip(layout.offsets, layout.sizes)):
+        assert off % leaf_align == 0
+        assert (seg[off:off + sz] == i).all()
+    # padding/gaps are the dummy segment
+    mask = np.ones(layout.padded_len, bool)
+    for off, sz in zip(layout.offsets, layout.sizes):
+        mask[off:off + sz] = False
+    assert (seg[mask] == layout.num_segments).all()
+
+
+def test_multidim_leaves():
+    tree = {"a": jnp.arange(24.0).reshape(2, 3, 4),
+            "b": jnp.arange(5.0)}
+    layout = fusion.make_layout(tree, align=4)
+    out = fusion.unpack(fusion.pack(tree, layout), layout)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    assert out["a"].shape == (2, 3, 4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 10_000), min_size=1, max_size=20),
+       st.integers(1, 64))
+def test_bucketize_never_splits_layers(sizes, kb):
+    tree = {f"l{i}": jax.ShapeDtypeStruct((s,), jnp.float32)
+            for i, s in enumerate(sizes)}
+    layout = fusion.make_layout(tree)
+    buckets = fusion.bucketize(layout, bucket_bytes=kb * 1024)
+    # contiguous cover, no overlap
+    assert buckets[0][0] == 0 and buckets[-1][1] == len(sizes)
+    for (s1, e1), (s2, e2) in zip(buckets, buckets[1:]):
+        assert e1 == s2

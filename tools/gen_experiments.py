@@ -1,0 +1,186 @@
+"""Renders EXPERIMENTS.md from results/dryrun* JSONs + the perf log."""
+import glob
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def load(d):
+    out = {}
+    for f in sorted(glob.glob(str(ROOT / d / "*.json"))):
+        r = json.loads(Path(f).read_text())
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt_cell(r):
+    if r["status"] == "SKIP":
+        return None
+    rf = r["roofline"]
+    mem = r["memory"]["total_hbm_bytes"] / 2 ** 30
+    return (rf["compute_s"], rf["memory_s"], rf["collective_s"],
+            rf["dominant"], rf.get("useful_ratio", 0), mem)
+
+
+HEADER = """# EXPERIMENTS — Adasum on TPU (JAX)
+
+All numbers produced in this container (CPU host; TPU v5e is the *target*:
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI). Roofline terms are
+PER-DEVICE seconds derived from the compiled SPMD module via the
+trip-count-aware HLO analyzer (`repro.launch.hlo_cost`) — XLA's own
+`cost_analysis()` counts loop bodies once and was only kept as a
+cross-check. Collective seconds use wire-byte conventions
+(all-reduce = 2·N·(n-1)/n etc.). Known measurement caveat: XLA:CPU
+promotes bf16 buffers to f32, inflating *capacity* numbers for bf16
+tensors by up to 2x vs the TPU target (convert traffic is excluded from
+the bytes term; buffer capacity is reported as measured).
+
+## Paper-claim validation (benchmarks/run.py)
+
+| Paper claim | Our result | Verdict |
+|---|---|---|
+| Fig. 6 / §5.4: at an aggressive untuned LR, Sum stops converging as DP widens; Adasum converges | lr=0.8 momentum, synthetic LM: Sum diverges (NaN at 32 lanes; stuck at 16), Adasum reaches target at 16 AND 32 lanes, faster at 32 | REPRODUCED |
+| §5.1.2: Adasum keeps algorithmic efficiency at larger batch | steps-to-target at moderate LR: sum 47/49 (b16/b32) vs adasum 43/36 | REPRODUCED |
+| Fig. 4 / §4.2.3: ADASUMRVH costs ~ a sum allreduce | wire bytes parsed from partitioned HLO: ratio 1.00-1.01 across 256KB-16MB messages (wall-clock on CPU-simulated devices is dispatch-bound and not meaningful) | REPRODUCED (structurally) |
+| Fig. 1 / §3.6: gradients start parallel, become orthogonal | mean per-layer orthogonality 0.77 -> 0.93 over 60 steps (floor 0.125) | REPRODUCED |
+| Fig. 2 / §3.7: Adasum closer to exact-Hessian sequential emulation than Sum | aggressive-LR regime (the paper's LeNet setup): adasum 0.82 vs sum 1.43 rel. err — adasum wins; conservative-LR regime: sum wins (the exact emulation degenerates to a plain sum) | REPRODUCED in the paper's regime, with an honest boundary |
+| Table 1 / §4.3: partitioned Adasum + optimizer state | 1.25x faster update, 8x less state/device (8-way) | REPRODUCED |
+| Table 2 / §5.2: local steps before communicating | k=4: 4x fewer sync rounds; algorithmic-efficiency cost visible (loss 4.86 vs 2.75 at equal tokens at this tiny scale — the paper's 84-vs-68-epoch trade, amplified by model size) | REPRODUCED (directionally) |
+| §4.1/Fig. 3: post-optimizer combination for Adam/LAMB | implemented + tested (per-lane optimizer states diverge; see tests/test_system.py::test_post_optimizer_semantics) | REPRODUCED |
+| Convergence lemmas A.2/A.3 | hypothesis property tests: angle bound cos>=0.9428, eigenvalue bounds [1,2], norm bounds, positive inner product | VERIFIED |
+
+## §Dry-run
+
+Every (architecture x shape x mesh) cell lowers AND compiles with
+`jax.jit(...).lower(**input_specs).compile()` on the production meshes —
+single-pod (16,16)=('data','model') and multi-pod (2,16,16)=
+('pod','data','model') with 512 host devices. 40 cells x 2 meshes:
+**66 OK + 14 SKIP (long_500k on pure full-attention archs, per
+DESIGN.md §Arch-applicability), 0 FAIL.** Memory analysis + cost analysis
++ the collective schedule per cell are archived in `results/dryrun/`
+(optimized) and `results/dryrun_baseline/` (paper-faithful baseline
+before §Perf). The multi-pod pass proves the `pod` axis shards: the
+hierarchical combine (sum inside pod, Adasum across pods — paper §4.2.2)
+lowers to collective-permutes over the pod axis plus grouped psums.
+"""
+
+
+def table(results, mesh, title):
+    lines = [f"\n### {title}\n",
+             "| arch | shape | compute_s | memory_s | collective_s | "
+             "dominant | useful | HBM GiB/dev |",
+             "|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, m), r in sorted(results.items()):
+        if m != mesh:
+            continue
+        c = fmt_cell(r)
+        if c is None:
+            lines.append(f"| {arch} | {shape} | — | — | — | SKIP | — | — |")
+            continue
+        comp, mem, coll, dom, useful, gib = c
+        lines.append(f"| {arch} | {shape} | {comp:.3f} | {mem:.2f} | "
+                     f"{coll:.3f} | {dom} | {useful:.3f} | {gib:.1f} |")
+    return "\n".join(lines)
+
+
+PERF = """
+
+## §Perf — hypothesis -> change -> measure -> validate log
+
+Three cells were hillclimbed (worst roofline fraction / most
+collective-bound / most representative of the paper's technique); every
+other cell reports baseline-only. The paper-faithful BASELINE numbers are
+archived in `results/dryrun_baseline/`; the optimized system in
+`results/dryrun/`. Roofline terms are per-device seconds.
+
+### Cell A: mixtral-8x22b x train_4k (worst memory; hierarchical Adasum)
+
+| # | hypothesis | change | before -> after | verdict |
+|---|---|---|---|---|
+| A1 | 2.6 TiB/dev temp comes from the gspmd-tree combiner flattening each stacked leaf (`reshape(n//2,2,-1)`), destroying TP/FSDP sharding of the 45B-element expert leaves (napkin: 45e9 x 4B x copies ~ TiB) | combine over the lane axis only; reduce dots over the leaf's own (still-sharded) axes; pin per-lane delta + combined delta shardings in DistributedOptimizer | 2621 -> 319 GiB/dev | CONFIRMED (8.2x) |
+| A2 | saved per-layer activations (56 x full lane batch) dominate: 84 GiB stack (napkin: 56 x 2 x 128 x 4096 x 384 x 4B) | microbatch gradient accumulation (A=8 -> 16), attn_chunk 512->256 | 319 -> 51 (A=8) / 31 (A=16) GiB/dev | CONFIRMED; A=16 breaks row/data divisibility (128 rows / A must divide 16) -> keep A=8 |
+| A3 | per-lane fp32 Adam m,v (2 lanes x 1.13 TB global) + fp32 accumulators are the next 24 GiB | bf16 optimizer-state storage (update math fp32) + bf16 grad accumulators | within 51 -> (see A5 combined) | CONFIRMED (composition via buffer dump) |
+| A4 | 1.9e13 collective B/dev is NOT FSDP gathers (insensitive to A); buffer probe shows f32 [tokens,d] psums from contraction-sharded kv projections (kv=8 does not divide tp=16) + (E,C,d) expert psums from globally-coordinated dispatch | (i) exact TP head alignment: block-duplicate kv heads 8->16, zero-wo-pad q heads (Megatron trick, bit-exact); (ii) shard-local MoE dispatch: per-data-shard capacity slices, batched row-local gather/scatter | collective 303 -> 179 s/dev; memory traffic 565 -> 748 s (accumulation re-reads weights 8x — the FSDP/accum trade, documented) | PARTIALLY CONFIRMED: head fix halved collectives; local dispatch bytes dominated by the expert-grad reduction, not dispatch |
+| A5 | net | all of the above | HBM capacity 2621 -> 51 GiB/dev (CPU-measured; ~31 GiB TPU-corrected for bf16 promotion); collective 303 -> 179 s | 51x memory; 1.7x collective |
+
+Remaining gap to 16 GiB/chip: the per-lane optimizer state is inherent to
+the paper's post-optimizer mode (each Adasum leaf owns an optimizer); the
+next lever is 8-bit blockwise state quantization (future work) or span=2
+-> pre-optimizer mode (departs from the paper's Adam prescription).
+
+### Cell B: llava-next-34b x prefill_32k (most collective-bound)
+
+| # | hypothesis | change | before -> after | verdict |
+|---|---|---|---|---|
+| B1 | 1175 s/dev collective = contraction-sharded attention projections (56 q heads, 8 kv heads don't divide 16) psum a full f32 [32, 32768, 7168] activation per projection per layer (napkin: 4.7 GB x ~3 x 60L ~ 1 TB/dev) | exact TP head alignment (q 56->64 zero-padded, kv 8->16 duplicated) | collective 1175 -> 40 s/dev; memory 889 -> 447 s; dominant flips collective->memory | CONFIRMED (29x) |
+| B2 | remaining 447 s memory = quadratic score traffic (chunked attention writes/reads [c, 32768] f32 tiles to HBM; napkin: 2 x 4 x 32768^2 x 4B x 60L ~ 2 TB/dev) | Pallas flash-attention kernel (forward-only, online softmax, scores stay in VMEM) — validated vs oracle across shapes/windows in interpret mode; enabled on TPU backends. Modeled TPU effect: score traffic eliminated -> memory term ~ weights+activations ~ 40-60 s | measured-on-CPU not representative (interpret-mode pallas lowers to pathological HLO — documented); kernel validated, effect modeled | VALIDATED KERNEL + MODELED 7-10x |
+| B3 | net (compiled path) | head alignment | step bound 1175 -> 447 s/dev (2.6x); with the flash kernel on real TPU, modeled ~60 s (19x) | |
+
+### Cell C: hymba-1.5b x train_4k (paper-representative: span=dp RVH Adasum)
+
+| # | hypothesis | change | before -> after | verdict |
+|---|---|---|---|---|
+| C1 | 84 s/dev memory + useful-FLOPs ratio 0.26: 25 attention + 25 mamba heads don't divide tp=16 -> attention/mixer compute REPLICATED 16x across the model axis (visible as x16 score traffic) | TP head alignment: q 25->80, kv 5->80 (MHA-ization; 3.2x nominal q-head compute but 16x-> 1x replication) | memory 84 -> 48 s/dev; compute 0.67 -> 0.46 s; useful 0.26 -> 0.38; collective 3.8 -> 9.2 s (new TP psums — expected trade, small vs the 36 s memory win) | CONFIRMED (1.8x step bound) |
+| C2 | RVH combine cost: fused-buffer Adasum at span=16 moves 2N bytes/rank (N down + N up), confirmed == sum-allreduce wire bytes (fig4 bench ratio 1.00) | (already optimal; Pallas fused dot/combine kernels cover the compute side) | — | — |
+
+### Beyond-paper optimizations (summary)
+
+1. **RVH/GSPMD hybrid combine** — the paper's Algorithm 1 verbatim in
+   shard_map (used when span==dp) plus a GSPMD-native tree for the
+   hierarchical spans, with sharding pins that keep every intermediate
+   distributed (A1).
+2. **Exact TP head alignment** (A4/B1/C1) — bit-exact kv duplication +
+   zero-wo q padding; removed the dominant collective on 3 archs and the
+   16x compute replication on hymba.
+3. **Shard-local MoE dispatch** (A4) — per-shard capacity, row-local
+   gather/scatter.
+4. **Flash-attention Pallas kernel** (B2) — forward-only serving path.
+5. **bf16 optimizer state + bf16 grad accumulators** (A3).
+6. **Microbatch gradient accumulation** (A2) with fp32-carry option.
+7. **ZeRO-1/2/3 family**: optimizer-state scatter (always), lane-grad
+   scatter (span<dp), FSDP params — all via sharding specs, composable
+   with the paper's hierarchical Adasum exactly as §4.3 prescribes.
+
+### Perf score (roofline fraction, optimized single-pod)
+
+For TRAIN cells the meaningful roofline fraction is
+MODEL_FLOPS / (step_bound x chips x peak):
+useful-MFU = useful_ratio x compute_s / max(compute_s, memory_s,
+collective_s). See the roofline tables: the best cells
+(seamless train 1.0/0.16=~best, gemma train ~0.73 useful at 14.7s
+memory-bound) are memory-bound on activation traffic — the universal
+next lever is fused-attention training kernels (forward done here;
+backward future work).
+"""
+
+
+def main():
+    opt = load("results/dryrun")
+    base = load("results/dryrun_baseline")
+    parts = [HEADER]
+    parts.append("\n## §Roofline — baseline (paper-faithful, single-pod "
+                 "16x16)\n")
+    parts.append("One row per assigned (arch x shape) cell. MODEL_FLOPS = "
+                 "6·N·D (dense) / 6·N_active·D (MoE) for train, 2·N·D "
+                 "prefill, 2·N/token decode; `useful` = MODEL_FLOPS / "
+                 "(device_FLOPs x chips) — the compiled-vs-useful compute "
+                 "ratio (catches remat/replication waste).")
+    parts.append(table(base, "pod16x16", "Baseline, single pod"))
+    parts.append("\n\n## §Roofline — optimized (post-§Perf, single-pod)\n")
+    parts.append(table(opt, "pod16x16", "Optimized, single pod"))
+    parts.append("\n\n### Multi-pod (2x16x16) — optimized\n")
+    parts.append(table(opt, "pod2x16x16", "Optimized, multi-pod"))
+    ok = sum(1 for r in opt.values() if r["status"] == "OK")
+    skip = sum(1 for r in opt.values() if r["status"] == "SKIP")
+    fail = sum(1 for r in opt.values() if r["status"] == "FAIL")
+    parts.append(f"\n\nCell status (both meshes): OK={ok} SKIP={skip} "
+                 f"FAIL={fail}.\n")
+    parts.append(PERF)
+    (ROOT / "EXPERIMENTS.md").write_text("\n".join(parts))
+    print(f"EXPERIMENTS.md written: OK={ok} SKIP={skip} FAIL={fail}")
+
+
+if __name__ == "__main__":
+    main()
