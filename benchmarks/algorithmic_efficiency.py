@@ -10,32 +10,27 @@ import numpy as np
 from .common import emit, run_devices
 
 CODE = r"""
-import dataclasses, numpy as np, jax, jax.numpy as jnp
+import numpy as np, jax
 from repro.configs.base import ModelConfig
+from repro.engine import EngineConfig, TrainSession
 from repro.models import build_model
-from repro.parallel import make_runtime
-from repro.parallel.policy import RunPolicy
-from repro.data import DataConfig, make_source
+from repro.launch.mesh import make_mesh_compat
 
-cfg = ModelConfig("bench", "dense", 2, 64, 4, 2, 128, 257, head_dim=16)
-model = build_model(cfg, attn_chunk=32)
-mesh = jax.make_mesh((8, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mcfg = ModelConfig("bench", "dense", 2, 64, 4, 2, 128, 257, head_dim=16)
+model = build_model(mcfg, attn_chunk=32)
+mesh = make_mesh_compat((8, 1), ("data", "model"))
 TARGET = 3.2
 for op in ("sum", "adasum"):
     for span, rows in ((4, 16), (8, 32)):   # effective batch = rows
-        rpol = RunPolicy(span=span, backend="gspmd_tree", optimizer="momentum",
-                         combine_op=op)
-        rt = make_runtime(model, mesh, rpol, lr=0.8)   # aggressive base LR (paper Fig.6 regime)
-        state = rt.init_state(jax.random.key(0))
-        src = make_source(DataConfig(seq_len=64, global_batch=rows,
-                                     vocab_size=cfg.vocab_size, seed=5), cfg)
-        step_fn = jax.jit(rt.train_step, donate_argnums=(0,))
+        cfg = EngineConfig(combine=op, span=span, backend="gspmd_tree",
+                           optimizer="momentum", lr=0.8,   # aggressive base LR (paper Fig.6 regime)
+                           seq_len=64, global_batch=rows, data_seed=5)
+        sess = TrainSession.from_config(cfg, model=model, mesh=mesh,
+                                        callbacks=[])
         steps_to_target = -1
         loss = float("nan")
         for step in range(200):
-            b = {k: jnp.asarray(v) for k, v in src.batch(step).items()}
-            state, mets = step_fn(state, b)
-            loss = float(mets["loss"])
+            loss = sess.step(sess.batch(step))["loss"]
             if not np.isfinite(loss):
                 break
             if loss < TARGET:

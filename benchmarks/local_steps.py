@@ -7,35 +7,29 @@ from __future__ import annotations
 from .common import emit, run_devices
 
 CODE = r"""
-import time, numpy as np, jax, jax.numpy as jnp
+import time, numpy as np, jax
 from repro.configs.base import ModelConfig
+from repro.engine import EngineConfig, TrainSession
 from repro.models import build_model
-from repro.parallel import make_runtime
-from repro.parallel.policy import RunPolicy
-from repro.data import DataConfig, make_source
+from repro.launch.mesh import make_mesh_compat
 
-cfg = ModelConfig("bench", "dense", 2, 64, 4, 2, 128, 257, head_dim=16)
-model = build_model(cfg, attn_chunk=32)
-mesh = jax.make_mesh((8, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+mcfg = ModelConfig("bench", "dense", 2, 64, 4, 2, 128, 257, head_dim=16)
+model = build_model(mcfg, attn_chunk=32)
+mesh = make_mesh_compat((8, 1), ("data", "model"))
 TOKENS = 64 * 32 * 40          # fixed data budget
 for k in (1, 4):
     rows = 32
-    rpol = RunPolicy(span=8, backend="gspmd_tree", optimizer="momentum",
-                     combine_op="adasum", local_steps=k)
-    rt = make_runtime(model, mesh, rpol, lr=0.3)
-    state = rt.init_state(jax.random.key(0))
-    src = make_source(DataConfig(seq_len=64, global_batch=rows * k,
-                                 vocab_size=cfg.vocab_size, seed=5), cfg)
-    step_fn = jax.jit(rt.train_step, donate_argnums=(0,))
+    cfg = EngineConfig(combine="adasum", span=8, backend="gspmd_tree",
+                       optimizer="momentum", lr=0.3, local_steps=k,
+                       seq_len=64, global_batch=rows * k, data_seed=5)
+    sess = TrainSession.from_config(cfg, model=model, mesh=mesh,
+                                    callbacks=[])
     n_steps = TOKENS // (64 * rows * k)
-    b = {kk: jnp.asarray(v) for kk, v in src.batch(0).items()}
-    state, mets = step_fn(state, b)      # compile
+    sess.step(sess.batch(0))             # compile
     t0 = time.perf_counter()
     loss = None
     for step in range(1, n_steps):
-        b = {kk: jnp.asarray(v) for kk, v in src.batch(step).items()}
-        state, mets = step_fn(state, b)
-        loss = float(mets["loss"])
+        loss = sess.step(sess.batch(step))["loss"]
     dt = (time.perf_counter() - t0) / max(n_steps - 1, 1)
     print(f"RESULT {k} {dt*1e6:.1f} {loss:.4f} {n_steps}")
 """

@@ -9,11 +9,13 @@ from .common import emit, run_devices
 CODE = r"""
 import time, numpy as np, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
-from repro.core.combine import CombineConfig, build_combiner
+from repro.core.combine import CombineConfig
 from repro.core.dist_opt import DistributedOptimizer
+from repro.engine import make_combiner
 from repro.optim.optimizers import adam
+from repro.launch.mesh import make_mesh_compat
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh_compat((8,), ("data",))
 D = 1 << 20
 tree = lambda: {f"l{i}": np.random.randn(8, D).astype(np.float32) / 100
                 for i in range(4)}
@@ -21,7 +23,7 @@ params = {k: jnp.asarray(v[0]) for k, v in tree().items()}
 
 for mode in ("replicated", "partitioned"):
     ccfg = CombineConfig(op="adasum", backend="gspmd_tree", span=8)
-    combiner = build_combiner(ccfg)
+    combiner = make_combiner(ccfg)
     dopt = DistributedOptimizer(adam(1e-3), ccfg, combiner, span=8)
     state = dopt.init(params)
     lane_sh = NamedSharding(mesh, P("data", None))

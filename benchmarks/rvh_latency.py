@@ -21,7 +21,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import rvh, adasum
 from repro.launch import hlo_cost
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((8,), ("data",))
 for total_bytes in (2**18, 2**21, 2**24):
     n = total_bytes // 4 // 64
     tree = {f"t{i}": np.random.randn(8, n).astype(np.float32) for i in range(64)}

@@ -14,33 +14,25 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.engine import EngineConfig, TrainSession
 from repro.models import build_model
-from repro.parallel import make_runtime
-from repro.parallel.policy import RunPolicy
-from repro.data import DataConfig, make_source
 from repro.launch.mesh import make_local_mesh
 
 
 def run(op: str, span: int, lr: float, steps: int = 120) -> float:
     mesh = make_local_mesh(min(span, len(jax.devices())), 1)
-    cfg = ModelConfig("study-lm", "dense", 2, 64, 4, 2, 128, 257, head_dim=16)
-    model = build_model(cfg, attn_chunk=32)
-    rpol = RunPolicy(span=span, backend="gspmd_tree", optimizer="momentum",
-                     combine_op=op)
-    rt = make_runtime(model, mesh, rpol, lr=lr)
-    state = rt.init_state(jax.random.key(0))
-    src = make_source(DataConfig(seq_len=64, global_batch=span * 4,
-                                 vocab_size=cfg.vocab_size, seed=5), cfg)
-    step_fn = jax.jit(rt.train_step, donate_argnums=(0,))
+    mcfg = ModelConfig("study-lm", "dense", 2, 64, 4, 2, 128, 257, head_dim=16)
+    cfg = EngineConfig(combine=op, span=span, backend="gspmd_tree",
+                       optimizer="momentum", lr=lr, seq_len=64,
+                       global_batch=span * 4, data_seed=5)
+    sess = TrainSession.from_config(cfg, model=build_model(mcfg, attn_chunk=32),
+                                    mesh=mesh, callbacks=[])
     loss = float("nan")
     for step in range(steps):
-        b = {k: jnp.asarray(v) for k, v in src.batch(step).items()}
-        state, m = step_fn(state, b)
-        loss = float(m["loss"])
+        loss = sess.step(sess.batch(step))["loss"]
         if not np.isfinite(loss):
             return loss
     return loss

@@ -5,7 +5,14 @@
 
 This is the Horovod 3-liner of the paper (§4.1) in this framework:
     opt = hvd.DistributedOptimizer(opt, op=hvd.Adasum)
-becomes a RunPolicy(combine_op="adasum") handed to make_runtime.
+becomes
+
+    cfg = EngineConfig(arch=..., combine="adasum")
+    session = TrainSession.from_config(cfg)
+    session.fit(steps)
+
+Below we pass a hand-built tiny model instead of a registry arch to show
+the custom-model path; swap combine="sum" for the synchronous baseline.
 """
 import sys
 from pathlib import Path
@@ -13,44 +20,28 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.engine import EngineConfig, TrainSession
 from repro.models import build_model
-from repro.parallel import make_runtime
-from repro.parallel.policy import RunPolicy
-from repro.data import DataConfig, make_source
-from repro.launch.mesh import make_local_mesh
 
 
 def main():
     n_dev = len(jax.devices())
-    data_par = max(1, n_dev // 2) if n_dev > 1 else 1
-    model_par = 2 if n_dev >= 2 else 1
-    mesh = make_local_mesh(data_par, model_par)
-    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}")
+    cfg = EngineConfig(
+        combine="adasum",          # the paper's one-flag switch (vs "sum")
+        optimizer="adam", lr=2e-3,
+        model_mesh=2 if n_dev >= 2 else 1,
+        seq_len=64, global_batch=max(8, n_dev), steps=40, log_every=10)
 
-    cfg = ModelConfig("quickstart-lm", "dense", n_layers=2, d_model=64,
-                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=257,
-                      head_dim=16)
-    model = build_model(cfg, attn_chunk=32)
-
-    # the paper's one-flag switch: op="adasum" (vs the "sum" baseline)
-    rpol = RunPolicy(span=0, backend="rvh" if data_par > 1 else "gspmd_tree",
-                     optimizer="adam", combine_op="adasum")
-    rt = make_runtime(model, mesh, rpol, lr=2e-3)
-    state = rt.init_state(jax.random.key(0))
-
-    src = make_source(DataConfig(seq_len=64, global_batch=max(8, data_par),
-                                 vocab_size=cfg.vocab_size), cfg)
-    step_fn = jax.jit(rt.train_step, donate_argnums=(0,))
-    for step in range(40):
-        batch = {k: jnp.asarray(v) for k, v in src.batch(step).items()}
-        state, metrics = step_fn(state, batch)
-        if step % 10 == 0 or step == 39:
-            print(f"step {step:3d}  loss {float(metrics['loss']):.4f}  "
-                  f"(adasum over {rt.span} lanes)")
-    print("done — swap combine_op='sum' to see the synchronous-SGD baseline")
+    mcfg = ModelConfig("quickstart-lm", "dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=257,
+                       head_dim=16)
+    session = TrainSession.from_config(
+        cfg, model=build_model(mcfg, attn_chunk=32))
+    print(f"mesh: {dict(zip(session.mesh.axis_names, session.mesh.devices.shape))}")
+    session.fit(cfg.steps)
+    print("done — swap combine='sum' to see the synchronous-SGD baseline")
 
 
 if __name__ == "__main__":

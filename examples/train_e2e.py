@@ -1,5 +1,6 @@
 """End-to-end training example: a multi-layer LM trained for a few
-hundred steps with Adasum DP, checkpointing, and fault-tolerant resume.
+hundred steps with Adasum DP, checkpointing, and fault-tolerant resume —
+all through the engine API (TrainSession handles resume + checkpoints).
 
 Default: ~5M params x 300 steps (CPU-friendly). `--big` switches to a
 ~100M-param model (10L x 640d, 50k vocab) on the same code path — the
@@ -11,22 +12,13 @@ CPU container, minutes on a real accelerator.
 """
 import argparse
 import sys
-import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-import jax
-import jax.numpy as jnp
-
 from repro.configs.base import ModelConfig
+from repro.engine import EngineConfig, TrainSession
 from repro.models import build_model, count_params
-from repro.parallel import make_runtime
-from repro.parallel.policy import RunPolicy
-from repro.data import DataConfig, make_source
-from repro.checkpoint import CheckpointManager
-from repro.runtime import StepMonitor
-from repro.launch.mesh import make_local_mesh
 
 
 def main():
@@ -39,48 +31,23 @@ def main():
     args = ap.parse_args()
 
     if args.big:
-        cfg = ModelConfig("e2e-100m", "dense", n_layers=10, d_model=640,
-                          n_heads=10, n_kv_heads=5, d_ff=2560,
-                          vocab_size=50_000, head_dim=64)
+        mcfg = ModelConfig("e2e-100m", "dense", n_layers=10, d_model=640,
+                           n_heads=10, n_kv_heads=5, d_ff=2560,
+                           vocab_size=50_000, head_dim=64)
     else:
-        cfg = ModelConfig("e2e-5m", "dense", n_layers=4, d_model=128,
-                          n_heads=4, n_kv_heads=2, d_ff=512,
-                          vocab_size=8_192, head_dim=32)
-    model = build_model(cfg, attn_chunk=min(128, args.seq))
-    print(f"[e2e] {cfg.name}: {count_params(cfg)/1e6:.1f}M params")
+        mcfg = ModelConfig("e2e-5m", "dense", n_layers=4, d_model=128,
+                           n_heads=4, n_kv_heads=2, d_ff=512,
+                           vocab_size=8_192, head_dim=32)
+    model = build_model(mcfg, attn_chunk=min(128, args.seq))
+    print(f"[e2e] {mcfg.name}: {count_params(mcfg)/1e6:.1f}M params")
 
-    n = len(jax.devices())
-    mesh = make_local_mesh(max(1, n // 1), 1)
-    rpol = RunPolicy(span=0, backend="rvh" if n > 1 else "gspmd_tree",
-                     optimizer="adam", combine_op="adasum")
-    rt = make_runtime(model, mesh, rpol, lr=1e-3)
-    state = rt.init_state(jax.random.key(0))
-
-    ckpt = CheckpointManager(args.ckpt, keep=2)
-    start = 0
-    if ckpt.latest_step() is not None:
-        state = ckpt.restore(state)
-        start = int(jax.device_get(state["step"]))
-        print(f"[e2e] resumed at step {start}")
-
-    src = make_source(DataConfig(seq_len=args.seq, global_batch=args.batch,
-                                 vocab_size=cfg.vocab_size, seed=11), cfg)
-    step_fn = jax.jit(rt.train_step, donate_argnums=(0,))
-    mon = StepMonitor()
-    t0 = time.time()
-    for step in range(start, args.steps):
-        batch = {k: jnp.asarray(v) for k, v in src.batch(step).items()}
-        mon.start()
-        state, metrics = step_fn(state, batch)
-        loss = float(metrics["loss"])
-        mon.stop()
-        if step % 25 == 0 or step == args.steps - 1:
-            print(f"[e2e] step {step:4d} loss {loss:.4f} "
-                  f"({(time.time()-t0)/max(step-start+1,1):.2f}s/step avg)")
-        if (step + 1) % 100 == 0:
-            ckpt.save(step + 1, state)
-    ckpt.save(args.steps, state)
-    print(f"[e2e] done. monitor={mon.summary()}")
+    cfg = EngineConfig(combine="adasum", optimizer="adam", lr=1e-3,
+                       seq_len=args.seq, global_batch=args.batch,
+                       data_seed=11, steps=args.steps, ckpt_dir=args.ckpt,
+                       ckpt_every=100, log_every=25)
+    session = TrainSession.from_config(cfg, model=model)
+    session.fit(args.steps)
+    print("[e2e] done.")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,9 @@
-"""Gradient-combination dispatch: Sum / Mean / Adasum over DP lanes.
+"""Gradient-combination primitives: Sum / Mean / Adasum over DP lanes.
+
+Dispatch lives in the string-keyed registry (`repro.engine.registry`,
+`@register_combiner`); `build_combiner` below is a thin compat wrapper
+over it. This module keeps `CombineConfig` and the reference tree
+implementations the registry entries are built from.
 
 All combiners operate on a *stacked* gradient pytree — leaves have a
 leading lane axis of length `span` (one lane per Adasum leaf). Backends:
@@ -20,7 +25,6 @@ import jax
 import jax.numpy as jnp
 
 from . import adasum as A
-from . import rvh as R
 
 PyTree = Any
 
@@ -74,7 +78,7 @@ def _pair_combine_stacked(x: jnp.ndarray, acc_dtype) -> jnp.ndarray:
             + _bcast(s2, b.ndim).astype(x.dtype) * b)
 
 
-def _tree_combine_per_layer(stacked: PyTree, acc_dtype) -> PyTree:
+def tree_combine_per_layer(stacked: PyTree, acc_dtype) -> PyTree:
     n = jax.tree.leaves(stacked)[0].shape[0]
     while n > 1:
         stacked = jax.tree.map(
@@ -83,7 +87,7 @@ def _tree_combine_per_layer(stacked: PyTree, acc_dtype) -> PyTree:
     return jax.tree.map(lambda x: x[0], stacked)
 
 
-def _tree_combine_whole(stacked: PyTree, acc_dtype) -> PyTree:
+def tree_combine_whole(stacked: PyTree, acc_dtype) -> PyTree:
     """Whole-model granularity: dots accumulated across all leaves."""
     n = jax.tree.leaves(stacked)[0].shape[0]
     while n > 1:
@@ -105,26 +109,12 @@ def _tree_combine_whole(stacked: PyTree, acc_dtype) -> PyTree:
 def build_combiner(cfg: CombineConfig, *, mesh=None, dp_axes: Sequence[str] = (),
                    leaf_specs: Optional[PyTree] = None
                    ) -> Callable[[PyTree], PyTree]:
-    """Returns combine(stacked_grads) -> combined_grads (no lane axis)."""
-    if cfg.op in ("sum", "mean"):
-        mean = cfg.op == "mean"
-        return lambda stacked: A.sum_reduce(stacked, mean=mean)
+    """Returns combine(stacked_grads) -> combined_grads (no lane axis).
 
-    assert cfg.op == "adasum", cfg.op
-    if cfg.backend == "gspmd_tree":
-        fn = _tree_combine_per_layer if cfg.per_layer else _tree_combine_whole
-        return lambda stacked: fn(stacked, cfg.acc)
-    if cfg.backend == "linear":
-        def lin(stacked):
-            n = jax.tree.leaves(stacked)[0].shape[0]
-            lanes = [jax.tree.map(lambda x, i=i: x[i], stacked) for i in range(n)]
-            return A.adasum_linear_reduce(lanes, per_layer=cfg.per_layer,
-                                          acc_dtype=cfg.acc)
-        return lin
-    if cfg.backend == "rvh":
-        assert mesh is not None and dp_axes, "rvh backend needs mesh + dp_axes"
-        return lambda stacked: R.adasum_rvh_pytree(
-            stacked, mesh, tuple(dp_axes), leaf_specs=leaf_specs,
-            per_layer=cfg.per_layer, acc_dtype=cfg.acc,
-            use_pallas=cfg.use_pallas, compress=cfg.compress)
-    raise KeyError(f"unknown combine backend {cfg.backend!r}")
+    Dispatch lives in the string-keyed registry
+    (`repro.engine.registry`); this wrapper is kept so core callers and
+    older code keep working unchanged. The lazy import avoids a
+    core <-> engine import cycle."""
+    from repro.engine.registry import make_combiner
+    return make_combiner(cfg, mesh=mesh, dp_axes=dp_axes,
+                         leaf_specs=leaf_specs)

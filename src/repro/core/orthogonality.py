@@ -28,7 +28,7 @@ def per_layer_orthogonality(grads: Sequence[PyTree] | PyTree,
         grads = [jax.tree.map(lambda x, i=i: x[i], grads) for i in range(n)]
     combined = adasum_tree_reduce(grads, per_layer=True, acc_dtype=acc_dtype)
 
-    flat_c = jax.tree.flatten_with_path(combined)[0]
+    flat_c = jax.tree_util.tree_flatten_with_path(combined)[0]
     flat_gs = [jax.tree.leaves(g) for g in grads]
 
     out: Dict[str, jnp.ndarray] = {}

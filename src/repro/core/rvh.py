@@ -298,6 +298,18 @@ def adasum_rvh_pytree(stacked: PyTree, mesh: jax.sharding.Mesh,
                                compress=compress)
         return fusion.unpack(out, layout)
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(in_specs,),
-                       out_specs=out_specs, check_vma=False)
+    fn = _shard_map_compat(body, mesh, (in_specs,), out_specs)
     return fn(stacked)
+
+
+def _shard_map_compat(body, mesh, in_specs, out_specs):
+    """shard_map across jax versions: `jax.shard_map(..., check_vma=)` on
+    current jax, `jax.experimental.shard_map.shard_map(..., check_rep=)`
+    on the 0.4.x line."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)

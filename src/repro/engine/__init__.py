@@ -1,0 +1,30 @@
+"""repro.engine — the single public API of this reproduction.
+
+    from repro.engine import EngineConfig, TrainSession
+    session = TrainSession.from_config(
+        EngineConfig(arch="hymba-1p5b", reduced=True, combine="adasum"))
+    session.fit(100)
+
+Layers:
+  config    EngineConfig — one round-trippable config (policy + combiner
+            + data + optimizer + checkpointing) with per-arch presets
+  registry  string-keyed combiner registry (@register_combiner)
+  build     build_runtime — model + mesh + policy -> step functions
+  session   TrainSession / ServeSession + callback hooks
+"""
+from .config import EngineConfig
+from .registry import (available_combiners, get_combiner_factory,
+                       make_combiner, register_combiner, registry_key)
+from .build import (EngineWarning, Runtime, build_runtime, make_serve_step)
+from .session import (Callback, CheckpointCallback, FailureInjectionCallback,
+                      LoggingCallback, ServeSession, StragglerCallback,
+                      TrainSession, default_callbacks)
+
+__all__ = [
+    "EngineConfig", "TrainSession", "ServeSession",
+    "register_combiner", "make_combiner", "available_combiners",
+    "get_combiner_factory", "registry_key",
+    "build_runtime", "make_serve_step", "Runtime", "EngineWarning",
+    "Callback", "LoggingCallback", "CheckpointCallback",
+    "StragglerCallback", "FailureInjectionCallback", "default_callbacks",
+]

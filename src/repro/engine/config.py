@@ -1,0 +1,261 @@
+"""One round-trippable config for the whole engine.
+
+`EngineConfig` unifies what used to be four uncoordinated layers —
+`RunPolicy` (parallelism / policy), `CombineConfig` (combiner knobs),
+`DataConfig` (stream), and the optimizer / checkpoint settings that each
+launcher re-declared by hand. One instance fully describes a run:
+
+    cfg = EngineConfig(arch="hymba-1p5b", combine="adasum")
+    cfg == EngineConfig.from_dict(cfg.to_dict())        # always True
+
+Per-arch presets (the old `parallel.policy._POLICIES` table) live here;
+`repro.parallel.get_policy` now derives its RunPolicy from them.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+from typing import Any, Dict, Optional
+
+from repro.data.pipeline import DataConfig
+from repro.parallel.policy import RunPolicy
+
+_COMBINE_OPS = ("adasum", "sum", "mean")
+_BACKENDS = ("", "rvh", "gspmd_tree", "linear")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    # ---- model ----
+    arch: str = ""              # registry id ("hymba-1p5b", ...); "" => the
+                                # caller passes a built Model to the session
+    reduced: bool = False       # CPU-scale reduced variant of `arch`
+
+    # ---- combiner ----
+    combine: str = "adasum"     # 'adasum' | 'sum' | 'mean' | registry entry
+    backend: str = ""           # '' => auto: rvh when span==dp else gspmd
+    span: int = 0               # #Adasum lanes; 0 => one per DP rank
+    combine_point: str = "auto" # 'pre' | 'post' | 'auto' (by optimizer kind)
+    per_layer: bool = True      # paper §3.6 per-layer Adasum
+    acc_dtype: str = "float32"  # dot-product accumulation dtype (§4.4.1)
+    use_pallas: bool = False    # Pallas kernels for the RVH dots/combine
+    compress: str = "none"      # 'int8': quantized RVH wire payloads
+
+    # ---- parallelism ----
+    data_mesh: int = 0          # 0 => all devices not used by model_mesh
+    model_mesh: int = 1
+    fsdp: bool = False          # ZeRO-3 params over `data`
+    scatter_grads: bool = False # ZeRO-2 lane grads over `data`
+    pad_heads: bool = False     # TP head alignment (exact math)
+    attn_chunk: int = 512
+
+    # ---- optimizer / training ----
+    optimizer: str = "adam"
+    lr: float = 1e-3
+    local_steps: int = 1        # paper §5.2 local-SGD steps per sync
+    accum_steps: int = 1        # microbatch gradient accumulation (§2.2)
+    accum_dtype: str = "float32"
+    opt_state_dtype: str = "float32"
+    param_dtype: str = "float32"
+
+    # ---- data ----
+    seq_len: int = 256
+    global_batch: int = 16
+    data_kind: str = "synthetic"    # synthetic | memmap
+    data_path: str = ""
+    data_seed: int = 0
+
+    # ---- run control ----
+    steps: int = 100
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    log_every: int = 10
+    strict: bool = False        # hard-error instead of warn+degrade (e.g.
+                                # rvh backend silently falling back)
+
+    # ------------------------------------------------------------ validation
+    def validate(self, dp_total: Optional[int] = None) -> "EngineConfig":
+        """Cross-field checks that used to live ad hoc in launch/train.py.
+        Pass `dp_total` (the mesh's DP degree) for mesh-dependent checks.
+        Returns self so it chains."""
+        if self.combine in _COMBINE_OPS and self.backend not in _BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"expected one of {_BACKENDS[1:]}")
+        if self.combine not in _COMBINE_OPS:
+            from .registry import available_combiners
+            if self.combine not in available_combiners():
+                raise ValueError(
+                    f"unknown combine op {self.combine!r}; built-ins "
+                    f"{_COMBINE_OPS}, registry {available_combiners()}")
+        if self.span < 0:
+            raise ValueError(f"span must be >= 0, got {self.span}")
+        if self.local_steps < 1 or self.accum_steps < 1:
+            raise ValueError("local_steps/accum_steps must be >= 1")
+        if self.local_steps > 1 and self.accum_steps > 1:
+            raise ValueError("local_steps and accum_steps are mutually "
+                             "exclusive (both reshape the lane batch)")
+        if self.data_kind == "memmap" and not self.data_path:
+            raise ValueError("data_kind='memmap' needs data_path")
+        if dp_total is not None:
+            span = self.span or dp_total
+            if span > dp_total or dp_total % span:
+                raise ValueError(
+                    f"span={span} must divide dp={dp_total}")
+            if self.backend == "rvh" and span != dp_total and self.strict:
+                raise ValueError(
+                    f"backend='rvh' requires span == dp "
+                    f"(span={span}, dp={dp_total}); drop strict=True to "
+                    f"fall back to 'gspmd_tree' with a warning")
+            rows = self.global_batch
+            if rows % span:
+                raise ValueError(
+                    f"global_batch={rows} not divisible by span={span}")
+            lane_rows = rows // span
+            if self.local_steps > 1 and lane_rows % self.local_steps:
+                raise ValueError(
+                    f"local_steps={self.local_steps} needs lane batch "
+                    f"({lane_rows}) divisible by it")
+            if self.accum_steps > 1 and lane_rows % self.accum_steps:
+                raise ValueError(
+                    f"accum_steps={self.accum_steps} needs lane batch "
+                    f"({lane_rows}) divisible by it")
+        return self
+
+    # ------------------------------------------------------------ round-trip
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "EngineConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown EngineConfig keys: {sorted(unknown)}")
+        return cls(**d)
+
+    # ---------------------------------------------------------------- presets
+    @classmethod
+    def preset(cls, arch: str, **overrides) -> "EngineConfig":
+        """Per-arch preset (the old `_POLICIES` table) + overrides."""
+        from repro.configs.base import canonical
+        base = dict(_PRESETS.get(canonical(arch), {}))
+        base["arch"] = arch
+        base.update(overrides)
+        return cls(**base)
+
+    # ----------------------------------------------------------- conversions
+    def run_policy(self) -> RunPolicy:
+        """Project onto the legacy RunPolicy consumed by the step builder."""
+        return RunPolicy(
+            span=self.span, fsdp=self.fsdp, scatter_grads=self.scatter_grads,
+            # "" passes through: the builder resolves auto to rvh when
+            # span == dp (only known once the mesh exists), gspmd otherwise
+            backend=self.backend,
+            optimizer=self.optimizer,
+            param_dtype=self.param_dtype, local_steps=self.local_steps,
+            combine_op=self.combine, attn_chunk=self.attn_chunk,
+            accum_steps=self.accum_steps, accum_dtype=self.accum_dtype,
+            opt_state_dtype=self.opt_state_dtype, pad_heads=self.pad_heads,
+            combine_point=self.combine_point, per_layer=self.per_layer,
+            acc_dtype=self.acc_dtype, use_pallas=self.use_pallas,
+            compress=self.compress)
+
+    def data_config(self, vocab_size: int) -> DataConfig:
+        return DataConfig(seq_len=self.seq_len,
+                          global_batch=self.global_batch,
+                          vocab_size=vocab_size, seed=self.data_seed,
+                          kind=self.data_kind, path=self.data_path or None)
+
+    # ------------------------------------------------------------------- CLI
+    @classmethod
+    def from_cli(cls, argv=None, **defaults) -> "EngineConfig":
+        """Parse the train CLI into a config. Flags override the per-arch
+        preset, which overrides the dataclass defaults."""
+        ap = argparse.ArgumentParser(description="repro.engine train CLI")
+        ap.add_argument("--arch", required="arch" not in defaults)
+        ap.add_argument("--reduced", action="store_true", default=None,
+                        help="use the reduced config (CPU-scale)")
+        ap.add_argument("--steps", type=int, default=None)
+        ap.add_argument("--seq", type=int, default=None, dest="seq_len")
+        ap.add_argument("--batch", type=int, default=None,
+                        dest="global_batch")
+        ap.add_argument("--lr", type=float, default=None)
+        ap.add_argument("--optimizer", default=None)
+        ap.add_argument("--combine", default=None,
+                        help="adasum | sum | mean | any registry entry")
+        ap.add_argument("--backend", default=None,
+                        choices=["rvh", "gspmd_tree", "linear"])
+        ap.add_argument("--span", type=int, default=None)
+        ap.add_argument("--local-steps", type=int, default=None,
+                        dest="local_steps")
+        ap.add_argument("--accum-steps", type=int, default=None,
+                        dest="accum_steps")
+        ap.add_argument("--no-per-layer", action="store_true",
+                        help="whole-model Adasum granularity (§3.6 ablation)")
+        ap.add_argument("--acc-dtype", default=None, dest="acc_dtype")
+        ap.add_argument("--use-pallas", action="store_true", default=None,
+                        dest="use_pallas")
+        ap.add_argument("--strict", action="store_true", default=None,
+                        help="error (not warn) on degraded fallbacks")
+        ap.add_argument("--data-mesh", type=int, default=None,
+                        dest="data_mesh")
+        ap.add_argument("--model-mesh", type=int, default=None,
+                        dest="model_mesh")
+        ap.add_argument("--ckpt-dir", default=None, dest="ckpt_dir")
+        ap.add_argument("--ckpt-every", type=int, default=None,
+                        dest="ckpt_every")
+        ap.add_argument("--log-every", type=int, default=None,
+                        dest="log_every")
+        ap.add_argument("--data-seed", type=int, default=None,
+                        dest="data_seed")
+        args, extra = ap.parse_known_args(argv)
+        if extra:
+            raise SystemExit(f"unknown arguments: {extra}")
+
+        cfg = cls.preset(args.arch or defaults.get("arch", ""))
+        over: Dict[str, Any] = dict(defaults)
+        for f in dataclasses.fields(cls):
+            v = getattr(args, f.name, None)
+            if v is not None:
+                over[f.name] = v
+        if args.no_per_layer:
+            over["per_layer"] = False
+        # Local CLI runs ride small host meshes: FSDP/ZeRO-2 presets from
+        # the pod-scale table are switched off (as launch/train.py always
+        # did) unless explicitly re-enabled via defaults.
+        over.setdefault("fsdp", False)
+        over.setdefault("scatter_grads", False)
+        return dataclasses.replace(cfg, **over).validate()
+
+
+# Per-arch presets — absorbed from parallel/policy._POLICIES. Derived from
+# the 16 GB/chip v5e budget (DESIGN.md §4): small/medium archs run
+# paper-pure RVH (one lane per DP rank); the huge ones run hierarchical
+# (§4.2.2): sum inside a lane group, Adasum across `span` groups.
+_PRESETS: Dict[str, Dict[str, Any]] = {
+    "hymba_1p5b":            dict(backend="rvh", pad_heads=True),
+    "moonshot_v1_16b_a3b":   dict(span=4, fsdp=True, scatter_grads=True,
+                                  backend="gspmd_tree"),
+    "mixtral_8x22b":         dict(span=2, fsdp=True, scatter_grads=True,
+                                  backend="gspmd_tree",
+                                  param_dtype="bfloat16", attn_chunk=256,
+                                  accum_steps=8, accum_dtype="bfloat16",
+                                  opt_state_dtype="bfloat16",
+                                  pad_heads=True),
+    "llava_next_34b":        dict(span=4, fsdp=True, scatter_grads=True,
+                                  backend="gspmd_tree", accum_steps=4,
+                                  pad_heads=True),
+    "gemma_7b":              dict(backend="rvh"),
+    "minitron_4b":           dict(backend="rvh", pad_heads=True),
+    "minicpm3_4b":           dict(backend="rvh"),
+    "qwen3_32b":             dict(span=4, fsdp=True, scatter_grads=True,
+                                  backend="gspmd_tree", accum_steps=4,
+                                  pad_heads=True),
+    "seamless_m4t_large_v2": dict(backend="rvh"),
+    "rwkv6_7b":              dict(backend="rvh"),
+}
+
+
+def preset_policy(arch: str) -> RunPolicy:
+    """RunPolicy view of the preset table (compat for get_policy)."""
+    return EngineConfig.preset(arch).run_policy()

@@ -1,0 +1,127 @@
+"""String-keyed combiner registry — the engine's pluggable dispatch.
+
+Replaces the if/elif chain that used to live in
+`repro.core.combine.build_combiner`. Every combiner is a *factory*
+
+    factory(cfg: CombineConfig, *, mesh, dp_axes, leaf_specs) -> combine
+
+where `combine(stacked_grads) -> combined_grads` operates on a stacked
+pytree (leading lane axis of length `cfg.span`). Built-in entries:
+
+    sum            plain sum over lanes (synchronous-SGD baseline)
+    mean           arithmetic mean over lanes
+    adasum-gspmd   recursive tree on the lane axis; GSPMD picks collectives
+    adasum-rvh     ADASUMRVH (paper Algorithm 1) via shard_map; needs
+                   one lane per DP rank (mesh + dp_axes required)
+    adasum-linear  ring-order recursion (paper §3.4) — ablation variant
+
+Extension point: register a new combiner without touching core dispatch —
+
+    from repro.engine import register_combiner
+
+    @register_combiner("adascale")
+    def _adascale(cfg, *, mesh=None, dp_axes=(), leaf_specs=None):
+        def combine(stacked):
+            ...  # e.g. AdaScale-style gain scaling (Johnson et al.)
+        return combine
+
+and select it with `EngineConfig(combine="adascale")` (anything that is
+not a built-in op name is looked up here verbatim).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Sequence
+
+from repro.core import adasum as A
+from repro.core import rvh as R
+from repro.core.combine import (CombineConfig, tree_combine_per_layer,
+                                tree_combine_whole)
+
+PyTree = Any
+Combiner = Callable[[PyTree], PyTree]
+CombinerFactory = Callable[..., Combiner]
+
+_COMBINERS: Dict[str, CombinerFactory] = {}
+
+
+def register_combiner(name: str, *, overwrite: bool = False):
+    """Decorator: register `factory` under `name` (e.g. 'adasum-rvh')."""
+    def deco(factory: CombinerFactory) -> CombinerFactory:
+        if name in _COMBINERS and not overwrite:
+            raise KeyError(f"combiner {name!r} already registered "
+                           f"(pass overwrite=True to replace)")
+        _COMBINERS[name] = factory
+        return factory
+    return deco
+
+
+def available_combiners() -> tuple:
+    return tuple(sorted(_COMBINERS))
+
+
+def get_combiner_factory(name: str) -> CombinerFactory:
+    try:
+        return _COMBINERS[name]
+    except KeyError:
+        raise KeyError(f"unknown combiner {name!r}; registered: "
+                       f"{available_combiners()}") from None
+
+
+def registry_key(op: str, backend: str = "") -> str:
+    """Map (CombineConfig.op, CombineConfig.backend) to a registry name."""
+    if op in ("sum", "mean"):
+        return op
+    if op == "adasum":
+        return {"gspmd_tree": "adasum-gspmd", "rvh": "adasum-rvh",
+                "linear": "adasum-linear", "": "adasum-gspmd"}.get(backend,
+                                                                   backend)
+    return op   # custom registry entries are addressed by op name directly
+
+
+def make_combiner(cfg: CombineConfig, *, mesh=None,
+                  dp_axes: Sequence[str] = (),
+                  leaf_specs: Optional[PyTree] = None) -> Combiner:
+    """Registry-dispatched replacement for core.combine.build_combiner."""
+    factory = get_combiner_factory(registry_key(cfg.op, cfg.backend))
+    return factory(cfg, mesh=mesh, dp_axes=tuple(dp_axes),
+                   leaf_specs=leaf_specs)
+
+
+# --------------------------------------------------------------- built-ins
+
+@register_combiner("sum")
+def _sum(cfg, *, mesh=None, dp_axes=(), leaf_specs=None):
+    return lambda stacked: A.sum_reduce(stacked, mean=False)
+
+
+@register_combiner("mean")
+def _mean(cfg, *, mesh=None, dp_axes=(), leaf_specs=None):
+    return lambda stacked: A.sum_reduce(stacked, mean=True)
+
+
+@register_combiner("adasum-gspmd")
+def _adasum_gspmd(cfg, *, mesh=None, dp_axes=(), leaf_specs=None):
+    fn = tree_combine_per_layer if cfg.per_layer else tree_combine_whole
+    return lambda stacked: fn(stacked, cfg.acc)
+
+
+@register_combiner("adasum-linear")
+def _adasum_linear(cfg, *, mesh=None, dp_axes=(), leaf_specs=None):
+    import jax
+
+    def lin(stacked):
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        lanes = [jax.tree.map(lambda x, i=i: x[i], stacked)
+                 for i in range(n)]
+        return A.adasum_linear_reduce(lanes, per_layer=cfg.per_layer,
+                                      acc_dtype=cfg.acc)
+    return lin
+
+
+@register_combiner("adasum-rvh")
+def _adasum_rvh(cfg, *, mesh=None, dp_axes=(), leaf_specs=None):
+    assert mesh is not None and dp_axes, "rvh backend needs mesh + dp_axes"
+    return lambda stacked: R.adasum_rvh_pytree(
+        stacked, mesh, tuple(dp_axes), leaf_specs=leaf_specs,
+        per_layer=cfg.per_layer, acc_dtype=cfg.acc,
+        use_pallas=cfg.use_pallas, compress=cfg.compress)

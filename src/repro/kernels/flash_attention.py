@@ -31,15 +31,18 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale: float,
     _, block_q, dh = q_ref.shape
     S = k_ref.shape[1]
     qi = pl.program_id(1)
-    q = q_ref[0].astype(jnp.float32) * sm_scale
+    # slice-style ref indexing (int indices break 0.4.x interpret mode)
+    q = q_ref[...][0].astype(jnp.float32) * sm_scale
     q_positions = qi * block_q + jax.lax.iota(jnp.int32, block_q)
 
     def body(j, carry):
         acc, m, l = carry
-        k = pl.load(k_ref, (0, pl.dslice(j * block_k, block_k), slice(None))
-                    ).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(j * block_k, block_k), slice(None))
-                    ).astype(jnp.float32)
+        k = pl.load(k_ref, (pl.dslice(0, 1),
+                            pl.dslice(j * block_k, block_k), slice(None))
+                    )[0].astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(0, 1),
+                            pl.dslice(j * block_k, block_k), slice(None))
+                    )[0].astype(jnp.float32)
         s = q @ k.T                                   # [bq, bk]
         k_positions = j * block_k + jax.lax.iota(jnp.int32, block_k)
         mask = jnp.ones((block_q, block_k), bool)
@@ -66,7 +69,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale: float,
     m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
     l0 = jnp.zeros((block_q,), jnp.float32)
     acc, m, l = jax.lax.fori_loop(0, n_k_eff, body, (acc0, m0, l0))
-    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]
+                  ).astype(o_ref.dtype)[None]
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",

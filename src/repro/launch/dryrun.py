@@ -28,7 +28,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ARCH_IDS, get_config, canonical, \
     pad_heads_for_tp
 from repro.models import build_model
-from repro.parallel import make_runtime, get_policy, make_serve_step
+from repro.engine import build_runtime, make_serve_step
+from repro.parallel import get_policy
 from repro.parallel.sharding import batch_specs, cache_specs, param_specs, \
     ShardingPolicy
 from repro.launch.mesh import make_production_mesh
@@ -61,7 +62,7 @@ def lower_cell(arch: str, shape: str, mesh, *, rpol=None, attn_chunk=None):
     dp_total = int(np.prod([sizes[a] for a in dp_axes]))
 
     if cell.kind == "train":
-        rt = make_runtime(model, mesh, rpol)
+        rt = build_runtime(model, mesh, rpol)
         bspecs = SP.train_batch_specs(cfg, cell)
         bshard = batch_specs(bspecs, dp_axes)
         state_sh = _shardings(mesh, rt.state_specs)

@@ -5,13 +5,23 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh across jax versions: `axis_types` (and
+    jax.sharding.AxisType itself) only exist on newer jax; older releases
+    behave as Auto on every axis, which is what we want everywhere."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 256 chips (16,16) = (data, model).
     Multi-pod: 2 pods x 256 chips (2,16,16) = (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
@@ -19,5 +29,4 @@ def make_local_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     if data * model > n:
         data, model = n, 1
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((data, model), ("data", "model"))

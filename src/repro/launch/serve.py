@@ -1,4 +1,4 @@
-"""Batched serving driver: prefill a batch of prompts, then greedy-decode.
+"""Batched serving driver — a thin CLI over `repro.engine.ServeSession`.
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --reduced \
         --batch 4 --prompt-len 32 --gen 16
@@ -10,37 +10,8 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.base import get_config, get_reduced
-from repro.models import build_model
-from repro.parallel import make_serve_step
-from repro.launch.mesh import make_local_mesh
-
-
-def generate(model, params, prompts, gen_len: int, max_len: int,
-             frontend_embeds=None):
-    """prompts: [B, T] int32. Returns [B, T+gen_len]."""
-    B, T = prompts.shape
-    cfg = model.cfg
-    if cfg.is_encoder_decoder:
-        cache = model.init_cache(params, B, max_len,
-                                 frontend_embeds=frontend_embeds)
-    else:
-        cache = model.init_cache(params, B, max_len)
-    step = jax.jit(make_serve_step(model), donate_argnums=(2,))
-    # prefill by stepping tokens (cache-exact; a fused prefill is the
-    # prefill_32k dry-run path)
-    tok = prompts[:, :1]
-    out = [prompts]
-    for t in range(T):
-        nxt, cache = step(params, prompts[:, t:t + 1], cache)
-    cur = nxt
-    gen = []
-    for _ in range(gen_len):
-        gen.append(cur)
-        cur, cache = step(params, cur, cache)
-    return jnp.concatenate([prompts] + gen, axis=1)
+from repro.engine import EngineConfig, ServeSession
 
 
 def main(argv=None):
@@ -54,21 +25,21 @@ def main(argv=None):
     ap.add_argument("--model-mesh", type=int, default=1)
     args = ap.parse_args(argv)
 
-    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
-    model = build_model(cfg, attn_chunk=64)
-    mesh = make_local_mesh(args.data_mesh or 1, args.model_mesh)
-    params = model.init(jax.random.key(0))
+    cfg = EngineConfig(arch=args.arch, reduced=args.reduced,
+                       data_mesh=args.data_mesh, model_mesh=args.model_mesh)
+    session = ServeSession.from_config(cfg)
+    mcfg = session.model.cfg
     prompts = jax.random.randint(jax.random.key(1),
                                  (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
+                                 mcfg.vocab_size)
     fe = None
-    if cfg.frontend != "none":
-        ft = cfg.frontend_tokens or args.prompt_len
-        fe = jnp.zeros((args.batch, ft, cfg.frontend_dim), jnp.float32)
+    if mcfg.frontend != "none":
+        ft = mcfg.frontend_tokens or args.prompt_len
+        fe = jnp.zeros((args.batch, ft, mcfg.frontend_dim), jnp.float32)
     t0 = time.perf_counter()
-    out = generate(model, params, prompts,
-                   args.gen, args.prompt_len + args.gen + 1,
-                   frontend_embeds=fe)
+    out = session.generate(prompts, args.gen,
+                           max_len=args.prompt_len + args.gen + 1,
+                           frontend_embeds=fe)
     dt = time.perf_counter() - t0
     toks = args.batch * args.gen
     print(f"[serve] generated {out.shape} in {dt:.2f}s "

@@ -1,4 +1,4 @@
-"""End-to-end training driver.
+"""End-to-end training driver — a thin CLI over `repro.engine`.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b \
         --steps 200 --seq 256 --batch 16 --data-mesh 4 --model-mesh 2 \
@@ -7,117 +7,34 @@
 Runs on whatever devices exist (use XLA_FLAGS host-device-count for local
 multi-device runs). Fault-tolerant: periodic atomic checkpoints, SIGTERM
 save, resume from latest, straggler monitor, optional injected failures
-for drills.
+for drills. All of that lives in `repro.engine.TrainSession`; this module
+only parses flags and forwards.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
-import time
 from pathlib import Path
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs.base import get_config, get_reduced
-from repro.models import build_model
-from repro.parallel import make_runtime, get_policy
-from repro.parallel.policy import RunPolicy
-from repro.data import DataConfig, make_source
-from repro.checkpoint import CheckpointManager
-from repro.runtime import StepMonitor, FailureInjector
-from repro.launch.mesh import make_local_mesh
+from repro.engine import EngineConfig, TrainSession, default_callbacks
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true",
-                    help="use the reduced config (CPU-scale)")
-    ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--seq", type=int, default=256)
-    ap.add_argument("--batch", type=int, default=16)
-    ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--optimizer", default=None)
-    ap.add_argument("--combine", default="adasum",
-                    choices=["adasum", "sum", "mean"])
-    ap.add_argument("--backend", default=None)
-    ap.add_argument("--span", type=int, default=None)
-    ap.add_argument("--local-steps", type=int, default=1)
-    ap.add_argument("--data-mesh", type=int, default=0)
-    ap.add_argument("--model-mesh", type=int, default=1)
-    ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--ckpt-every", type=int, default=50)
-    ap.add_argument("--log-every", type=int, default=10)
+    # the two driver-only flags ride in front of the EngineConfig CLI
+    ap = argparse.ArgumentParser(add_help=False)
     ap.add_argument("--fail-at", type=int, nargs="*", default=[],
                     help="inject failures at these steps (recovery drill)")
     ap.add_argument("--metrics-out", default=None)
-    args = ap.parse_args(argv)
+    args, engine_argv = ap.parse_known_args(argv)
 
-    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
-    model = build_model(cfg, attn_chunk=min(512, args.seq))
-
-    data_size = args.data_mesh or max(1, len(jax.devices())
-                                      // args.model_mesh)
-    mesh = make_local_mesh(data_size, args.model_mesh)
-
-    rpol = get_policy(args.arch)
-    rpol = dataclasses.replace(
-        rpol,
-        combine_op=args.combine,
-        span=args.span if args.span is not None else rpol.span,
-        local_steps=args.local_steps,
-        optimizer=args.optimizer or rpol.optimizer,
-        backend=args.backend or rpol.backend,
-        fsdp=False, scatter_grads=False)
-    # local meshes are small; span can't exceed dp
-    dp = int(np.prod([s for a, s in zip(mesh.axis_names, mesh.devices.shape)
-                      if a != "model"]))
-    if rpol.span > dp or rpol.span == 0:
-        rpol = dataclasses.replace(rpol, span=0)
-    if args.batch % max(rpol.span or dp, 1):
-        raise SystemExit(f"batch {args.batch} not divisible by span")
-
-    rt = make_runtime(model, mesh, rpol, lr=args.lr)
-    state = rt.init_state(jax.random.key(0))
-
-    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
-    start_step = 0
-    if ckpt and ckpt.latest_step() is not None:
-        state = ckpt.restore(state)
-        start_step = int(jax.device_get(state["step"]))
-        print(f"[train] resumed from step {start_step}")
-
-    dcfg = DataConfig(seq_len=args.seq, global_batch=args.batch,
-                      vocab_size=cfg.vocab_size)
-    source = make_source(dcfg, cfg)
-    step_fn = jax.jit(rt.train_step, donate_argnums=(0,))
-    monitor = StepMonitor()
-    injector = FailureInjector(args.fail_at)
-    if ckpt:
-        ckpt.install_preemption_handler(
-            lambda: ckpt.save(int(jax.device_get(state["step"])), state))
-
-    history = []
-    for step in range(start_step, args.steps):
-        batch = {k: jnp.asarray(v) for k, v in source.batch(step).items()}
-        injector.check(step)
-        monitor.start()
-        state, metrics = step_fn(state, batch)
-        loss = float(jax.device_get(metrics["loss"]))
-        dt = monitor.stop()
-        history.append({"step": step, "loss": loss, "s": dt})
-        if step % args.log_every == 0 or step == args.steps - 1:
-            print(f"[train] step {step:5d} loss {loss:.4f} {dt*1e3:.0f}ms "
-                  f"span={rt.span} combine={rpol.combine_op}")
-        if ckpt and (step + 1) % args.ckpt_every == 0:
-            ckpt.save(step + 1, state)
-    if ckpt:
-        ckpt.save(args.steps, state)
-    print(f"[train] done: final loss {history[-1]['loss']:.4f} "
-          f"monitor={monitor.summary()}")
+    cfg = EngineConfig.from_cli(engine_argv)
+    session = TrainSession.from_config(
+        cfg, callbacks=default_callbacks(cfg, fail_at=args.fail_at))
+    history = session.fit(cfg.steps)
+    if history:
+        print(f"[train] done: final loss {history[-1]['loss']:.4f}")
+    else:
+        print(f"[train] nothing to do: run already at step {cfg.steps}")
     if args.metrics_out:
         Path(args.metrics_out).write_text(json.dumps(history))
     return history

@@ -122,7 +122,7 @@ def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
     shapes = _param_shapes(cfg)
     total = 0
     expert_total = 0
-    for path, leaf in jax.tree.flatten_with_path(shapes)[0]:
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
         n = int(np.prod(leaf.shape))
         total += n
         keys = jax.tree_util.keystr(path)

@@ -1,4 +1,22 @@
-"""Distribution layer: sharding rules, runtime policies, step builders."""
+"""Distribution layer: sharding rules, runtime policies, step builders.
+
+The step-builder symbols (`Runtime`, `make_runtime`, `make_serve_step`)
+are loaded lazily: they now live in `repro.engine.build` (steps.py is a
+deprecated shim), and an eager import here would cycle with the engine
+package importing our sharding/policy modules.
+"""
 from .sharding import ShardingPolicy, param_specs, batch_specs, cache_specs
 from .policy import RunPolicy, get_policy
-from .steps import Runtime, make_runtime, make_serve_step
+
+_LAZY = ("Runtime", "make_runtime", "make_serve_step")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from . import steps
+        return getattr(steps, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))

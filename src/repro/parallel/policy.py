@@ -31,30 +31,18 @@ class RunPolicy:
     opt_state_dtype: str = "float32"  # Adam/LAMB m,v storage
     pad_heads: bool = False           # TP head alignment (exact; see
                                       # configs.base.pad_heads_for_tp)
-
-
-_POLICIES = {
-    # arch id (canonical)      span  fsdp   scatter backend
-    "hymba_1p5b":            RunPolicy(0, False, False, "rvh", pad_heads=True),
-    "moonshot_v1_16b_a3b":   RunPolicy(4, True, True, "gspmd_tree"),
-    "mixtral_8x22b":         RunPolicy(2, True, True, "gspmd_tree",
-                                       param_dtype="bfloat16",
-                                       attn_chunk=256, accum_steps=8,
-                                       accum_dtype="bfloat16",
-                                       opt_state_dtype="bfloat16",
-                                       pad_heads=True),
-    "llava_next_34b":        RunPolicy(4, True, True, "gspmd_tree",
-                                       accum_steps=4, pad_heads=True),
-    "gemma_7b":              RunPolicy(0, False, False, "rvh"),
-    "minitron_4b":           RunPolicy(0, False, False, "rvh", pad_heads=True),
-    "minicpm3_4b":           RunPolicy(0, False, False, "rvh"),
-    "qwen3_32b":             RunPolicy(4, True, True, "gspmd_tree",
-                                       accum_steps=4, pad_heads=True),
-    "seamless_m4t_large_v2": RunPolicy(0, False, False, "rvh"),
-    "rwkv6_7b":              RunPolicy(0, False, False, "rvh"),
-}
+    # combiner knobs, plumbed through to CombineConfig by the step builder
+    # (previously silently dropped — paper §3.6 ablation was unreachable)
+    combine_point: str = "auto"       # 'pre' | 'post' | 'auto'
+    per_layer: bool = True            # per-layer Adasum granularity (§3.6)
+    acc_dtype: str = "float32"        # dot accumulation dtype (§4.4.1)
+    use_pallas: bool = False          # Pallas kernels for dots/combine
+    compress: str = "none"            # 'int8' RVH wire compression
 
 
 def get_policy(arch: str) -> RunPolicy:
-    from repro.configs.base import canonical
-    return _POLICIES.get(canonical(arch), RunPolicy())
+    """Per-arch policy. The preset table moved to
+    `repro.engine.config._PRESETS`; this is the RunPolicy projection of
+    it (lazy import: engine sits above this package)."""
+    from repro.engine.config import preset_policy
+    return preset_policy(arch)

@@ -1,268 +1,27 @@
-"""Distributed train / serve step builders.
+"""DEPRECATED compat shim — the step builders moved to `repro.engine`.
 
-train_step anatomy (paper Fig. 3 + §4):
-  1. reshape the global batch to `span` lanes; one lane = one Adasum leaf;
-  2. vmap(value_and_grad) over lanes — per-lane gradients, TP handled by
-     GSPMD from the parameter shardings; when span < dp the per-lane
-     gradients are plain sums over the lane's DP group (the paper's
-     hierarchical intra-node reduce, emitted as reduce-scatter overlapped
-     with backward when `scatter_grads`);
-  3. combine lanes with Sum (baseline) or Adasum (pre- or post-optimizer
-     per the optimizer kind), RVH backend when span == dp;
-  4. apply the combined delta; optimizer state is ZeRO-1-sharded.
+`make_runtime` predates the unified engine API; new code should use
 
-`local_steps > 1` reproduces §5.2 (TensorFlow ResNet-50 on slow TCP):
-each lane performs k *local* optimizer steps and the combined quantity is
-the model delta since the last sync.
+    from repro.engine import EngineConfig, TrainSession   # training loops
+    from repro.engine import build_runtime                # custom loops
+
+This module re-exports `Runtime` / `make_serve_step` and keeps
+`make_runtime` working (with a DeprecationWarning) so pre-engine callers
+and tests keep passing.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from repro.configs.base import ModelConfig
-from repro.core.combine import CombineConfig, build_combiner
-from repro.core.dist_opt import DistributedOptimizer
-from repro.models.api import Model
-from repro.optim.optimizers import Optimizer, get_optimizer
-from .policy import RunPolicy
-from .sharding import ShardingPolicy, param_specs, lane_batch_specs
-
-PyTree = Any
+from repro.engine.build import (Runtime, build_runtime,   # noqa: F401
+                                make_serve_step)
 
 
-@dataclasses.dataclass
-class Runtime:
-    """Everything the launcher needs for one (arch, mesh) training setup."""
-    model: Model
-    mesh: jax.sharding.Mesh
-    spol: ShardingPolicy
-    rpol: RunPolicy
-    dp_axes: Tuple[str, ...]
-    dp_total: int
-    span: int
-    pspecs: PyTree
-    state_shapes: PyTree
-    state_specs: PyTree
-    train_step: Callable
-    init_state: Callable
-
-
-def _dp_axes(mesh: jax.sharding.Mesh, tp_axis: str) -> Tuple[str, ...]:
-    return tuple(ax for ax in mesh.axis_names if ax != tp_axis)
-
-
-def _prepend(spec: P, entry) -> P:
-    return P(entry, *tuple(spec))
-
-
-def make_runtime(model: Model, mesh: jax.sharding.Mesh, rpol: RunPolicy,
-                 *, tp_axis: str = "model", lr=1e-3,
-                 combine: Optional[CombineConfig] = None,
-                 optimizer: Optional[Optimizer] = None) -> Runtime:
-    cfg = model.cfg
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    dp_axes = _dp_axes(mesh, tp_axis)
-    dp_total = int(np.prod([sizes[a] for a in dp_axes]))
-    span = rpol.span or dp_total
-    assert dp_total % span == 0, (span, dp_total)
-    spol = ShardingPolicy(tp_axis=tp_axis,
-                          fsdp_axis="data" if rpol.fsdp else None,
-                          tp_size=sizes.get(tp_axis, 1),
-                          fsdp_size=sizes.get("data", 1))
-
-    pshapes = jax.eval_shape(model.init, jax.random.key(0))
-    pspecs = param_specs(cfg, pshapes, spol)
-
-    ccfg = combine or CombineConfig(op=rpol.combine_op, backend=(
-        rpol.backend if span == dp_total else "gspmd_tree"), span=span)
-    if ccfg.backend == "rvh" and span != dp_total:
-        ccfg = dataclasses.replace(ccfg, backend="gspmd_tree")
-    # RVH lane order: innermost mesh axis first (adjacent ranks pair first)
-    rvh_axes = tuple(reversed(dp_axes))
-    combiner = build_combiner(ccfg, mesh=mesh, dp_axes=rvh_axes,
-                              leaf_specs=pspecs)
-    opt_kwargs = {}
-    if rpol.optimizer in ("adam", "lamb"):
-        opt_kwargs["state_dtype"] = jnp.dtype(rpol.opt_state_dtype)
-    opt = optimizer or get_optimizer(rpol.optimizer, lr, **opt_kwargs)
-
-    to_shardings = lambda specs: jax.tree.map(
-        lambda s: NamedSharding(mesh, s), specs,
-        is_leaf=lambda x: isinstance(x, P))
-
-    # Lane-gradient/delta sharding: when span==dp each lane's tensors live
-    # on their DP rank (RVH input layout); when span<dp lanes are
-    # replicated and the tensors are ZeRO-2-scattered over `data`.
-    # Without these pins GSPMD can replicate full-model per-lane deltas,
-    # which is catastrophic at MoE scale (found via memory_analysis).
-    if span == dp_total:
-        lane_axes = tuple(dp_axes)        # pod-major lane index (RVH layout)
-        gspecs = jax.tree.map(lambda s: _prepend(s, lane_axes), pspecs)
-    else:
-        zpol2 = dataclasses.replace(
-            spol, fsdp_axis="data" if rpol.scatter_grads else spol.fsdp_axis)
-        base = param_specs(cfg, pshapes, zpol2)
-        gspecs = jax.tree.map(lambda s: _prepend(s, None), base)
-
-    dopt = DistributedOptimizer(
-        opt, ccfg, combiner, span,
-        lane_constraint=lambda d: jax.lax.with_sharding_constraint(
-            d, to_shardings(gspecs)),
-        delta_constraint=lambda d: jax.lax.with_sharding_constraint(
-            d, to_shardings(pspecs)))
-
-    # ---- state shapes + shardings ----
-    def init_state_fn(key):
-        params = model.init(key)
-        return {"params": params, "opt": dopt.init(params),
-                "step": jnp.zeros((), jnp.int32)}
-
-    state_shapes = jax.eval_shape(init_state_fn, jax.random.key(0))
-    # ZeRO-1: optimizer state always (further) scattered over data
-    zpol = dataclasses.replace(spol, fsdp_axis="data")
-    inner_shapes = state_shapes["opt"]["inner"]
-    if dopt.point == "post" and span > 1:
-        drop_lane = jax.tree.map(
-            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), inner_shapes)
-        if span == dp_total:
-            # one state per DP rank, living with its lane (paper: per-node
-            # optimizer state) — the lane axis IS the distribution.
-            ospecs = param_specs(cfg, drop_lane, spol)
-            lane_entry = tuple(dp_axes)   # pod-major lane index (RVH layout)
-        else:
-            # lanes replicated; ZeRO-1-scatter the state over `data`.
-            ospecs = param_specs(cfg, drop_lane, zpol)
-            lane_entry = None
-        ospecs = jax.tree.map(lambda s: _prepend(s, lane_entry), ospecs)
-    else:
-        ospecs = param_specs(cfg, inner_shapes, zpol)
-    state_specs = {"params": pspecs,
-                   "opt": {"inner": ospecs, "step": P()},
-                   "step": P()}
-
-    init_state = jax.jit(init_state_fn,
-                         out_shardings=to_shardings(state_specs))
-
-    # ---- the train step ----
-    def split_lanes(batch):
-        return jax.tree.map(
-            lambda x: x.reshape((span, x.shape[0] // span) + x.shape[1:]),
-            batch)
-
-    def lane_loss(p, lb):
-        return model.loss(p, lb)
-
-    grad_fn = jax.value_and_grad(lane_loss, has_aux=True)
-
-    def lane_grads(params, lanes):
-        """Per-lane gradients, with optional microbatch accumulation
-        (paper §2.2 'gradient accumulation'): the lane batch is processed
-        in `accum_steps` chunks inside a scan, bounding saved-activation
-        memory by 1/A while the gradient sum is carried in fp32."""
-        A = rpol.accum_steps
-        if A <= 1:
-            return jax.vmap(grad_fn, in_axes=(None, 0))(params, lanes)
-
-        acc_dt = jnp.dtype(rpol.accum_dtype)
-
-        def one_lane(lane_batch):
-            micro = jax.tree.map(
-                lambda x: x.reshape((A, x.shape[0] // A) + x.shape[1:]),
-                lane_batch)
-
-            def body(acc, mb):
-                (l, m), g = grad_fn(params, mb)
-                acc = jax.tree.map(
-                    lambda a, gg: (a.astype(jnp.float32)
-                                   + gg.astype(jnp.float32)).astype(acc_dt),
-                    acc, g)
-                return acc, (l, m)
-
-            zeros = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, acc_dt), params)
-            gsum, (ls, ms) = jax.lax.scan(body, zeros, micro)
-            return (jnp.mean(ls), jax.tree.map(jnp.mean, ms)), gsum
-
-        return jax.vmap(one_lane)(lanes)
-
-    def sync_step(state, batch):
-        params = state["params"]
-        lanes = split_lanes(batch)
-        (losses, mets), G = lane_grads(params, lanes)
-        G = jax.lax.with_sharding_constraint(G, to_shardings(gspecs))
-        delta, opt_state = dopt.update(G, state["opt"], params)
-        new_params = dopt.apply(params, delta)
-        metrics = {k: jnp.mean(v) for k, v in mets.items()}
-        metrics["grad_lanes"] = jnp.asarray(span, jnp.int32)
-        new_state = {"params": new_params, "opt": opt_state,
-                     "step": state["step"] + 1}
-        return new_state, metrics
-
-    def local_sgd_step(state, batch):
-        """Paper §5.2: k local optimizer steps, then Adasum of the deltas."""
-        params = state["params"]
-        k = rpol.local_steps
-        lanes = split_lanes(batch)   # [span, B/span, ...]
-        rows = jax.tree.leaves(lanes)[0].shape[1]
-        assert rows % k == 0 and rows >= k, (
-            f"local_steps={k} needs global_batch >= span*k "
-            f"(got {rows} rows/lane)")
-        micro = jax.tree.map(
-            lambda x: x.reshape((x.shape[0], k, x.shape[1] // k)
-                                + x.shape[2:]), lanes)
-
-        def one_lane(lane_batch, opt_inner):
-            def body(carry, mb):
-                p, oi, step = carry
-                (_, mets), g = grad_fn(p, mb)
-                d, oi = dopt.opt.update(g, oi, p, step)
-                p = jax.tree.map(lambda a, b: (a.astype(jnp.float32)
-                                               + b).astype(a.dtype), p, d)
-                return (p, oi, step + 1), mets["loss"]
-            (p_end, oi, _), losses = jax.lax.scan(
-                body, (params, opt_inner, state["opt"]["step"]), lane_batch)
-            delta = jax.tree.map(
-                lambda e, s: e.astype(jnp.float32) - s.astype(jnp.float32),
-                p_end, params)
-            return delta, oi, jnp.mean(losses)
-
-        micro_lanes = micro    # [span, k, micro_b, ...]: vmap span, scan k
-        if span > 1 and dopt.point == "post":
-            deltas, inner, losses = jax.vmap(one_lane)(
-                micro_lanes, state["opt"]["inner"])
-        else:
-            inner_b = jax.tree.map(
-                lambda x: jnp.broadcast_to(x, (span,) + x.shape),
-                state["opt"]["inner"])
-            deltas, inner, losses = jax.vmap(one_lane)(micro_lanes, inner_b)
-            inner = jax.tree.map(lambda x: x[0], inner)
-        delta = combiner(deltas)
-        new_params = dopt.apply(params, delta)
-        new_state = {"params": new_params,
-                     "opt": {"inner": inner,
-                             "step": state["opt"]["step"] + k},
-                     "step": state["step"] + 1}
-        return new_state, {"loss": jnp.mean(losses),
-                           "aux": jnp.zeros((), jnp.float32),
-                           "grad_lanes": jnp.asarray(span, jnp.int32)}
-
-    step_fn = local_sgd_step if rpol.local_steps > 1 else sync_step
-
-    return Runtime(model, mesh, spol, rpol, dp_axes, dp_total, span, pspecs,
-                   state_shapes, state_specs, step_fn, init_state)
-
-
-def make_serve_step(model: Model, greedy: bool = True):
-    """One decode step: tokens [B,1] -> (next token [B,1], cache)."""
-    def serve_step(params, tokens, cache):
-        logits, cache = model.decode_step(params, tokens, cache)
-        nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(tokens.dtype)
-        return nxt, cache
-    return serve_step
+def make_runtime(model, mesh, rpol, **kwargs) -> Runtime:
+    """Deprecated alias for `repro.engine.build_runtime`."""
+    warnings.warn(
+        "repro.parallel.make_runtime is deprecated; use "
+        "repro.engine.TrainSession.from_config (or "
+        "repro.engine.build_runtime for custom loops)",
+        DeprecationWarning, stacklevel=2)
+    return build_runtime(model, mesh, rpol, **kwargs)

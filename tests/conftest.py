@@ -2,9 +2,10 @@ import os
 import sys
 from pathlib import Path
 
-# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
-# and benches must see 1 device (the dry-run sets its own flag, and the
-# multi-device tests use subprocesses).
+# NOTE: conftest itself does not set xla_force_host_platform_device_count:
+# in-process tests must pass under ANY host device count (plain local runs
+# see 1 device; tools/ci.sh exports 8). Multi-device tests pin their own
+# count via run_in_subprocess, and the dry-run sets its own flag.
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 if SRC not in sys.path:
     sys.path.insert(0, SRC)

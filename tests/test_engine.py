@@ -1,0 +1,314 @@
+"""Engine API tests: config round-trip, registry dispatch equivalence,
+TrainSession fit/save/restore, and the make_runtime compat shim."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_in_subprocess
+
+from repro.engine import (EngineConfig, available_combiners, make_combiner,
+                          register_combiner, registry_key)
+from repro.core.combine import CombineConfig, build_combiner
+
+
+# --------------------------------------------------------------- EngineConfig
+
+class TestEngineConfig:
+    def test_roundtrip_defaults(self):
+        cfg = EngineConfig()
+        assert EngineConfig.from_dict(cfg.to_dict()) == cfg
+
+    def test_roundtrip_nondefault(self):
+        cfg = EngineConfig(arch="qwen3-32b", combine="sum", span=4,
+                           backend="gspmd_tree", fsdp=True, lr=3e-4,
+                           per_layer=False, acc_dtype="float64",
+                           use_pallas=True, seq_len=128, global_batch=32,
+                           ckpt_dir="/tmp/x", strict=True)
+        assert EngineConfig.from_dict(cfg.to_dict()) == cfg
+
+    def test_from_dict_rejects_unknown_keys(self):
+        with pytest.raises(ValueError, match="unknown EngineConfig keys"):
+            EngineConfig.from_dict({"no_such_knob": 1})
+
+    def test_preset_absorbs_policy_table(self):
+        cfg = EngineConfig.preset("mixtral-8x22b")
+        assert cfg.span == 2 and cfg.fsdp and cfg.accum_steps == 8
+        assert cfg.param_dtype == "bfloat16"
+        # presets stay round-trippable
+        assert EngineConfig.from_dict(cfg.to_dict()) == cfg
+
+    def test_get_policy_matches_preset(self):
+        from repro.parallel import get_policy
+        pol = get_policy("qwen3-32b")
+        cfg = EngineConfig.preset("qwen3-32b")
+        assert pol.span == cfg.span == 4
+        assert pol.backend == "gspmd_tree" and pol.accum_steps == 4
+
+    def test_from_cli_roundtrip(self):
+        cfg = EngineConfig.from_cli(
+            ["--arch", "gemma-7b", "--reduced", "--steps", "7",
+             "--seq", "64", "--batch", "8", "--combine", "sum",
+             "--no-per-layer", "--acc-dtype", "float64", "--strict"])
+        assert cfg.arch == "gemma-7b" and cfg.reduced
+        assert cfg.steps == 7 and cfg.seq_len == 64 and cfg.global_batch == 8
+        assert cfg.combine == "sum" and not cfg.per_layer
+        assert cfg.acc_dtype == "float64" and cfg.strict
+        assert EngineConfig.from_dict(cfg.to_dict()) == cfg
+
+    def test_validation_catches_bad_combos(self):
+        with pytest.raises(ValueError, match="unknown combine op"):
+            EngineConfig(combine="nope").validate()
+        with pytest.raises(ValueError, match="divide dp"):
+            EngineConfig(span=3).validate(dp_total=4)
+        with pytest.raises(ValueError, match="not divisible by span"):
+            EngineConfig(span=4, global_batch=6).validate(dp_total=4)
+        with pytest.raises(ValueError, match="rvh"):
+            EngineConfig(span=2, backend="rvh",
+                         strict=True).validate(dp_total=4)
+        # the same config is fine without strict (warns at build time)
+        EngineConfig(span=2, backend="rvh",
+                     global_batch=16).validate(dp_total=4)
+
+
+# ------------------------------------------------------------------- registry
+
+class TestRegistry:
+    def test_builtin_entries(self):
+        names = available_combiners()
+        for n in ("sum", "mean", "adasum-gspmd", "adasum-rvh",
+                  "adasum-linear"):
+            assert n in names
+
+    def test_registry_key_mapping(self):
+        assert registry_key("sum") == "sum"
+        assert registry_key("adasum", "gspmd_tree") == "adasum-gspmd"
+        assert registry_key("adasum", "rvh") == "adasum-rvh"
+        assert registry_key("adasum", "linear") == "adasum-linear"
+        assert registry_key("custom-op", "") == "custom-op"
+
+    def test_register_and_dispatch_custom(self):
+        @register_combiner("test-first-lane", overwrite=True)
+        def _first(cfg, *, mesh=None, dp_axes=(), leaf_specs=None):
+            return lambda stacked: jax.tree.map(lambda x: x[0], stacked)
+
+        c = make_combiner(CombineConfig(op="test-first-lane"))
+        out = c({"w": jnp.arange(8.0).reshape(4, 2)})
+        np.testing.assert_array_equal(np.asarray(out["w"]), [0.0, 1.0])
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(KeyError, match="already registered"):
+            @register_combiner("sum")
+            def _clash(cfg, **kw):   # pragma: no cover
+                return lambda s: s
+
+    def test_unknown_name_has_helpful_error(self):
+        with pytest.raises(KeyError, match="registered"):
+            make_combiner(CombineConfig(op="definitely-not-registered"))
+
+    def test_registry_matches_reference_combiners(self):
+        """Registry-dispatched outputs must be bit-identical to the
+        reference implementations build_combiner used pre-refactor."""
+        from repro.core import adasum as A
+        from repro.core.combine import (tree_combine_per_layer,
+                                        tree_combine_whole)
+        rng = np.random.default_rng(0)
+        stacked = {"wq": jnp.asarray(rng.standard_normal((4, 8, 16)),
+                                     jnp.float32),
+                   "norm": jnp.asarray(rng.standard_normal((4, 8)),
+                                       jnp.float32)}
+
+        cases = [
+            (CombineConfig(op="sum"),
+             lambda s: A.sum_reduce(s, mean=False)),
+            (CombineConfig(op="mean"),
+             lambda s: A.sum_reduce(s, mean=True)),
+            (CombineConfig(op="adasum", backend="gspmd_tree"),
+             lambda s: tree_combine_per_layer(s, jnp.float32)),
+            (CombineConfig(op="adasum", backend="gspmd_tree",
+                           per_layer=False),
+             lambda s: tree_combine_whole(s, jnp.float32)),
+            (CombineConfig(op="adasum", backend="linear"),
+             lambda s: A.adasum_linear_reduce(
+                 [jax.tree.map(lambda x, i=i: x[i], s) for i in range(4)],
+                 per_layer=True, acc_dtype=jnp.float32)),
+        ]
+        for ccfg, ref_fn in cases:
+            via_registry = make_combiner(ccfg)(stacked)
+            via_legacy_api = build_combiner(ccfg)(stacked)
+            ref = ref_fn(stacked)
+            for k in stacked:
+                a = np.asarray(via_registry[k])
+                np.testing.assert_array_equal(a, np.asarray(ref[k]),
+                                              err_msg=str(ccfg))
+                np.testing.assert_array_equal(
+                    a, np.asarray(via_legacy_api[k]), err_msg=str(ccfg))
+
+    def test_registry_rvh_matches_reference(self):
+        """adasum-rvh through the registry == single-device tree reduce
+        (8 simulated devices, subprocess per the test brief)."""
+        run_in_subprocess(r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.core import adasum
+from repro.core.combine import CombineConfig, build_combiner
+from repro.engine import make_combiner
+from repro.launch.mesh import make_mesh_compat
+np.random.seed(0)
+mesh = make_mesh_compat((4, 2), ("data", "model"))
+lanes = 4
+tree = {"wq": np.random.randn(lanes, 8, 16).astype(np.float32),
+        "wo": np.random.randn(lanes, 16, 8).astype(np.float32)}
+specs = {"wq": P(None, "model"), "wo": P("model", None)}
+sharded = {k: jax.device_put(v, NamedSharding(mesh, P(("data",), *(specs[k] or ()))))
+           for k, v in tree.items()}
+ccfg = CombineConfig(op="adasum", backend="rvh", span=lanes)
+reg = jax.jit(make_combiner(ccfg, mesh=mesh, dp_axes=("data",),
+                            leaf_specs=specs))(sharded)
+leg = jax.jit(build_combiner(ccfg, mesh=mesh, dp_axes=("data",),
+                             leaf_specs=specs))(sharded)
+ref = adasum.adasum_tree_reduce(
+    [{k: jnp.asarray(v[i]) for k, v in tree.items()} for i in range(lanes)])
+for k in tree:
+    np.testing.assert_array_equal(np.asarray(reg[k]), np.asarray(leg[k]))
+    np.testing.assert_allclose(np.asarray(reg[k]), np.asarray(ref[k]),
+                               rtol=2e-5, atol=2e-5)
+print("OK")
+""")
+
+
+def test_policy_knobs_reach_combine_config():
+    """per_layer / acc_dtype / use_pallas / compress / combine_point used
+    to be silently dropped between RunPolicy and CombineConfig (§3.6
+    ablation unreachable); they must plumb through now."""
+    from repro.engine.build import _resolve_combine_cfg
+    from repro.parallel.policy import RunPolicy
+    rpol = RunPolicy(span=4, backend="gspmd_tree", per_layer=False,
+                     acc_dtype="float64", use_pallas=True,
+                     compress="int8", combine_point="pre")
+    ccfg = _resolve_combine_cfg(rpol, span=4, dp_total=4, explicit=None,
+                                strict=False)
+    assert not ccfg.per_layer
+    assert ccfg.acc_dtype == "float64" and ccfg.use_pallas
+    assert ccfg.compress == "int8" and ccfg.point == "pre"
+    assert ccfg.span == 4 and ccfg.backend == "gspmd_tree"
+
+
+# --------------------------------------------------------------- TrainSession
+
+class TestTrainSession:
+    def test_fit_save_restore_resume(self, tmp_path):
+        """2-step fit on an 8-device CPU mesh, then a fresh session must
+        resume from the checkpoint and continue to step 4."""
+        run_in_subprocess(rf"""
+from repro.engine import EngineConfig, TrainSession
+cfg = EngineConfig(arch="hymba-1p5b", reduced=True, combine="adasum",
+                   seq_len=32, global_batch=8, ckpt_dir=r"{tmp_path}/ck",
+                   ckpt_every=2, log_every=1)
+s1 = TrainSession.from_config(cfg)
+h1 = s1.fit(2)
+assert [h["step"] for h in h1] == [0, 1], h1
+assert s1.checkpoint.latest_step() == 2
+s2 = TrainSession.from_config(cfg)
+h2 = s2.fit(4)
+assert [h["step"] for h in h2] == [2, 3], h2
+import numpy as np
+assert np.isfinite([h["loss"] for h in h1 + h2]).all()
+print("OK")
+""", devices=8, timeout=900)
+
+    def test_step_api_and_custom_model(self):
+        """step()/batch() drive a custom (non-registry) model on an
+        explicit 1-device mesh (host device count varies across runners)."""
+        from repro.configs.base import ModelConfig
+        from repro.engine import TrainSession
+        from repro.launch.mesh import make_local_mesh
+        from repro.models import build_model
+        mcfg = ModelConfig("tiny", "dense", 2, 32, 2, 1, 64, 97,
+                           head_dim=16)
+        cfg = EngineConfig(combine="adasum", seq_len=16, global_batch=4,
+                           log_every=1)
+        sess = TrainSession.from_config(
+            cfg, model=build_model(mcfg, attn_chunk=16),
+            mesh=make_local_mesh(1, 1), callbacks=[])
+        m0 = sess.step(sess.batch(0))
+        m1 = sess.step()      # auto-batch from the step counter
+        assert np.isfinite(m0["loss"]) and np.isfinite(m1["loss"])
+        assert int(jax.device_get(sess.state["step"])) == 2
+
+    def test_missing_arch_and_model_raises(self):
+        from repro.engine import TrainSession
+        with pytest.raises(ValueError, match="arch is empty"):
+            TrainSession.from_config(EngineConfig())
+
+
+# ------------------------------------------------------- compat + strict mode
+
+class TestCompatAndStrict:
+    def test_make_runtime_shim_warns_and_works(self):
+        from repro.configs.base import ModelConfig
+        from repro.models import build_model
+        from repro.launch.mesh import make_local_mesh
+        from repro.parallel import make_runtime
+        from repro.parallel.policy import RunPolicy
+        mcfg = ModelConfig("tiny", "dense", 1, 32, 2, 1, 64, 97,
+                           head_dim=16)
+        model = build_model(mcfg, attn_chunk=16)
+        mesh = make_local_mesh(1, 1)
+        with pytest.warns(DeprecationWarning, match="make_runtime is "
+                          "deprecated"):
+            rt = make_runtime(model, mesh, RunPolicy(
+                span=0, backend="gspmd_tree", optimizer="sgd"))
+        state = rt.init_state(jax.random.key(0))
+        toks = jnp.zeros((2, 16), jnp.int32)
+        state, metrics = jax.jit(rt.train_step)(
+            state, {"tokens": toks, "labels": toks})
+        assert np.isfinite(float(metrics["loss"]))
+
+    def test_rvh_fallback_warns_not_silent(self):
+        """Asking for rvh with span != dp must WARN (old code silently
+        switched backends) and hard-error under strict."""
+        run_in_subprocess(r"""
+import warnings
+import pytest
+from repro.configs.base import ModelConfig
+from repro.engine import EngineWarning, build_runtime
+from repro.models import build_model
+from repro.launch.mesh import make_local_mesh
+from repro.parallel.policy import RunPolicy
+mcfg = ModelConfig("tiny", "dense", 1, 32, 2, 1, 64, 97, head_dim=16)
+model = build_model(mcfg, attn_chunk=16)
+mesh = make_local_mesh(2, 1)
+rpol = RunPolicy(span=1, backend="rvh", optimizer="sgd")
+with warnings.catch_warnings(record=True) as rec:
+    warnings.simplefilter("always")
+    rt = build_runtime(model, mesh, rpol)
+msgs = [str(w.message) for w in rec
+        if issubclass(w.category, EngineWarning)]
+assert any("falling back" in m for m in msgs), msgs
+assert rt.span == 1
+try:
+    build_runtime(model, mesh, rpol, strict=True)
+except ValueError as e:
+    assert "rvh" in str(e)
+else:
+    raise AssertionError("strict mode must raise on rvh fallback")
+print("OK")
+""", devices=2)
+
+    def test_session_strict_rvh_raises(self):
+        run_in_subprocess(r"""
+from repro.engine import EngineConfig, TrainSession
+try:
+    TrainSession.from_config(EngineConfig(
+        arch="gemma-7b", reduced=True, span=2, backend="rvh",
+        seq_len=16, global_batch=8, strict=True))
+except ValueError as e:
+    assert "rvh" in str(e)
+else:
+    raise AssertionError("expected strict validation error")
+print("OK")
+""", devices=4)

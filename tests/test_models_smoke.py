@@ -36,7 +36,7 @@ def test_reduced_train_step(arch):
     (loss, metrics), grads = jax.jit(
         jax.value_and_grad(model.loss, has_aux=True))(params, batch)
     assert np.isfinite(float(loss)), arch
-    for path, g in jax.tree.flatten_with_path(grads)[0]:
+    for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
         assert np.isfinite(np.asarray(g)).all(), (arch, path)
 
 

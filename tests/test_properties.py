@@ -3,6 +3,9 @@ combiner's invariants (Appendix A)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st, assume
 
 from repro.core import adasum as A

@@ -94,12 +94,13 @@ def test_post_optimizer_semantics():
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs.base import get_reduced
 from repro.models import build_model
-from repro.parallel import make_runtime
+from repro.engine import build_runtime
 from repro.parallel.policy import RunPolicy
-mesh = jax.make_mesh((4,1), ("data","model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((4,1), ("data","model"))
 cfg = get_reduced("minitron-4b")
 model = build_model(cfg, attn_chunk=16)
-rt = make_runtime(model, mesh, RunPolicy(span=0, backend="gspmd_tree",
+rt = build_runtime(model, mesh, RunPolicy(span=0, backend="gspmd_tree",
                                          optimizer="adam"), lr=1e-3)
 assert rt.span == 4
 state = rt.init_state(jax.random.key(0))

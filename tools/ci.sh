@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 verify + smoke run, as used by .github/workflows/ci.yml.
+#
+#   bash tools/ci.sh
+#
+# The host-device-count flag gives the in-process tests 8 simulated CPU
+# devices; subprocess-based multi-device tests set their own flag.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export XLA_FLAGS="--xla_force_host_platform_device_count=8"
+
+echo "== tier-1 test suite =="
+python -m pytest -x -q
+
+echo "== train smoke run (3 steps, reduced hymba) =="
+python -m repro.launch.train --arch hymba-1p5b --reduced --steps 3 \
+    --seq 32 --batch 8
+
+echo "== ci.sh OK =="
