@@ -20,7 +20,7 @@ import traceback
 
 from . import (algorithmic_efficiency, hessian_emulation, lm_convergence,
                local_steps, orthogonality, partitioned_adasum, roofline,
-               rvh_latency)
+               rvh_latency, step_overlap)
 
 BENCHES = {
     "fig1_orthogonality": orthogonality.main,
@@ -31,6 +31,7 @@ BENCHES = {
     "tab2_local_steps": local_steps.main,
     "tab3_lm_convergence": lm_convergence.main,
     "roofline": roofline.main,
+    "step_overlap": step_overlap.main,
 }
 
 

@@ -1,1 +1,2 @@
-from .manager import CheckpointManager, reshard_lanes
+from .manager import (AsyncCheckpointManager, CheckpointManager,
+                      reshard_lanes)

@@ -29,6 +29,7 @@ import os
 import re
 import shutil
 import signal
+import sys
 import time
 from pathlib import Path
 from typing import Any, Dict, List, Optional
@@ -84,9 +85,17 @@ class CheckpointManager:
             return final
         finally:
             self._in_save = False
+            if self._pending_sigterm and sys.exc_info()[0] is None:
+                # SIGTERM arrived mid-save and the save succeeded: the
+                # step is durable, exit as a clean preemption. (A failed
+                # save must keep propagating its own error instead.)
+                self._pending_sigterm = False
+                raise SystemExit(143)
 
     def _gc(self):
-        steps = self.all_steps()
+        # explicitly the base listing: the async subclass turns all_steps
+        # into a writer barrier, and _gc runs ON the writer thread
+        steps = CheckpointManager.all_steps(self)
         for s in steps[:-self.keep]:
             shutil.rmtree(self.root / f"step_{s:08d}", ignore_errors=True)
 
@@ -134,6 +143,79 @@ class CheckpointManager:
                 self._pending_sigterm = True
                 return
             save_fn()
+            raise SystemExit(143)
+        signal.signal(signal.SIGTERM, handler)
+
+
+class AsyncCheckpointManager(CheckpointManager):
+    """Overlapped checkpointing: the device->host snapshot happens in the
+    caller's thread (it must — the train step donates the state buffers,
+    so the arrays are gone by the next step), but serialization + file
+    I/O run on a background writer thread, so the step loop resumes after
+    the snapshot instead of after the fsync.
+
+    Barriers (the only places the loop may block on the writer):
+      * a new `save` overlapping an in-flight one waits for the previous
+        write first (at most one checkpoint in flight);
+      * `restore` / `all_steps` / `latest_step` wait for pending writes,
+        so readers never miss the checkpoint they just scheduled.
+    Writer-thread exceptions surface at the next barrier, never silently.
+    """
+
+    def __init__(self, root: str, keep: int = 3):
+        super().__init__(root, keep)
+        from concurrent.futures import ThreadPoolExecutor
+        self._pool = ThreadPoolExecutor(max_workers=1,
+                                        thread_name_prefix="repro-ckpt")
+        self._future = None
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, state: PyTree, host_owns=None) -> Path:
+        self.wait()
+        # deep host snapshot: device_get on the CPU backend can alias the
+        # donated device buffer, so force a copy
+        host_state = jax.tree.map(
+            lambda x: np.array(jax.device_get(x), copy=True), state)
+        self._future = self._pool.submit(
+            CheckpointManager.save, self, step, host_state, host_owns)
+        return self.root / f"step_{step:08d}"
+
+    def wait(self):
+        """Barrier: block until the in-flight write (if any) completes,
+        re-raising any writer-thread failure."""
+        import threading
+        if threading.current_thread().name.startswith("repro-ckpt"):
+            return   # reentrant barrier from the writer itself: vacuous
+        fut, self._future = self._future, None
+        if fut is not None:
+            fut.result()
+
+    @property
+    def in_flight(self) -> bool:
+        return self._future is not None and not self._future.done()
+
+    # ---------------------------------------------------------- readers
+    def all_steps(self):
+        self.wait()
+        return super().all_steps()
+
+    def restore(self, like: PyTree, step=None, shardings=None) -> PyTree:
+        self.wait()
+        return super().restore(like, step, shardings)
+
+    def close(self):
+        self.wait()
+        self._pool.shutdown(wait=True)
+
+    # --------------------------------------------------------- preemption
+    def install_preemption_handler(self, save_fn):
+        """SIGTERM: drain the in-flight background write, then one final
+        save + exit. (The base class's `_in_save` deferral would span the
+        entire background write here and drop the signal — `_in_save` is
+        set by the WRITER thread, not the caller.)"""
+        def handler(signum, frame):
+            self.wait()
+            save_fn()      # session.save_sync: snapshot + barrier
             raise SystemExit(143)
         signal.signal(signal.SIGTERM, handler)
 

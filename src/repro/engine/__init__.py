@@ -7,10 +7,13 @@
 
 Layers:
   config    EngineConfig — one round-trippable config (policy + combiner
-            + data + optimizer + checkpointing) with per-arch presets
+            + data + optimizer + checkpointing + pipeline knobs) with
+            per-arch presets
   registry  string-keyed combiner registry (@register_combiner)
   build     build_runtime — model + mesh + policy -> step functions
   session   TrainSession / ServeSession + callback hooks
+  pipeline  StepPipeline (prefetch + async-checkpoint overlapped loop)
+            and fit_elastic (straggler flag -> halve-DP restart driver)
 """
 from .config import EngineConfig
 from .registry import (available_combiners, get_combiner_factory,
@@ -19,6 +22,7 @@ from .build import (EngineWarning, Runtime, build_runtime, make_serve_step)
 from .session import (Callback, CheckpointCallback, FailureInjectionCallback,
                       LoggingCallback, ServeSession, StragglerCallback,
                       TrainSession, default_callbacks)
+from .pipeline import StepPipeline, fit_elastic
 
 __all__ = [
     "EngineConfig", "TrainSession", "ServeSession",
@@ -27,4 +31,5 @@ __all__ = [
     "build_runtime", "make_serve_step", "Runtime", "EngineWarning",
     "Callback", "LoggingCallback", "CheckpointCallback",
     "StragglerCallback", "FailureInjectionCallback", "default_callbacks",
+    "StepPipeline", "fit_elastic",
 ]

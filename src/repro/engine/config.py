@@ -73,6 +73,12 @@ class EngineConfig:
     strict: bool = False        # hard-error instead of warn+degrade (e.g.
                                 # rvh backend silently falling back)
 
+    # ---- pipelined runtime (engine/pipeline.py) ----
+    prefetch: bool = True       # double-buffered host->device batch stage
+    async_checkpoint: bool = True   # off-thread checkpoint writes
+    elastic: bool = False       # consume straggler flags: checkpoint +
+                                # halve-DP restart (needs ckpt_dir)
+
     # ------------------------------------------------------------ validation
     def validate(self, dp_total: Optional[int] = None) -> "EngineConfig":
         """Cross-field checks that used to live ad hoc in launch/train.py.
@@ -96,6 +102,9 @@ class EngineConfig:
                              "exclusive (both reshape the lane batch)")
         if self.data_kind == "memmap" and not self.data_path:
             raise ValueError("data_kind='memmap' needs data_path")
+        if self.elastic and not self.ckpt_dir:
+            raise ValueError("elastic=True needs ckpt_dir (restarts "
+                             "resume from the checkpoint manifest)")
         if dp_total is not None:
             span = self.span or dp_total
             if span > dp_total or dp_total % span:
@@ -208,6 +217,14 @@ class EngineConfig:
                         dest="log_every")
         ap.add_argument("--data-seed", type=int, default=None,
                         dest="data_seed")
+        ap.add_argument("--no-prefetch", action="store_true",
+                        help="synchronous batch pulls (disable the "
+                        "double-buffered prefetch stage)")
+        ap.add_argument("--sync-checkpoint", action="store_true",
+                        help="block the step loop on checkpoint writes")
+        ap.add_argument("--elastic", action="store_true", default=None,
+                        help="straggler flag => checkpoint + halve-DP "
+                        "restart (needs --ckpt-dir)")
         args, extra = ap.parse_known_args(argv)
         if extra:
             raise SystemExit(f"unknown arguments: {extra}")
@@ -220,6 +237,10 @@ class EngineConfig:
                 over[f.name] = v
         if args.no_per_layer:
             over["per_layer"] = False
+        if args.no_prefetch:
+            over["prefetch"] = False
+        if args.sync_checkpoint:
+            over["async_checkpoint"] = False
         # Local CLI runs ride small host meshes: FSDP/ZeRO-2 presets from
         # the pod-scale table are switched off (as launch/train.py always
         # did) unless explicitly re-enabled via defaults.

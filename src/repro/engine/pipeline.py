@@ -1,0 +1,175 @@
+"""Pipelined execution runtime: the step loop as overlapped stages.
+
+`TrainSession.fit` used to serialize three things the paper's throughput
+story says must overlap with useful device work (DaSGD, Zhou et al.):
+host-side batch generation, checkpoint file I/O, and straggler handling.
+This module is the runtime that overlaps them:
+
+    host thread      :  batch(step+1)  ->  stage host->device   (Prefetcher)
+    device           :  train_step(state, batch(step))
+    writer thread    :  serialize + write checkpoint(step-k)    (AsyncCheckpointManager)
+    monitor          :  robust z-score on step times  ->  RestartSignal
+
+and the elastic driver (`fit_elastic`) that consumes the monitor's flag
+or a `NodeLossError` (real or injected participant loss): checkpoint ->
+rebuild the mesh at the halved DP degree -> rebuild the runtime
+(combiner re-resolved through the registry for the new span) -> resume
+from the manifest. Per paper §5.4 Adasum needs *no hyperparameter
+change* across the restart, which is what makes the shrink safe.
+
+Determinism: batches are addressed by step (pure (seed, step) functions),
+so the prefetched stream is bitwise identical to the synchronous one —
+including across save/restore/resume and elastic rebuilds.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.runtime import (NodeLossError, Prefetcher, RestartSignal,
+                           plan_shrink)
+
+PyTree = Any
+
+
+class StepPipeline:
+    """Drives one `TrainSession`'s training loop with overlapped stages.
+
+    The session owns model/mesh/runtime/state; the pipeline owns the
+    *schedule*: resume decision, prefetch lifecycle, step timing,
+    callback dispatch, elastic flag consumption, and the end-of-run
+    barriers (pending checkpoint writes, prefetch shutdown).
+    """
+
+    def __init__(self, session):
+        self.session = session
+        self.prefetcher: Optional[Prefetcher] = None
+
+    # ----------------------------------------------------------- plumbing
+    def _fetch(self, step: int) -> Dict[str, Any]:
+        if self.prefetcher is not None:
+            return self.prefetcher.get(step)
+        return self.session.batch(step)
+
+    def _flagged_monitors(self):
+        from .session import StragglerCallback
+        return [cb.monitor for cb in self.session.callbacks
+                if isinstance(cb, StragglerCallback) and cb.monitor.flagged]
+
+    def _resolve_start(self) -> int:
+        """Continue from the live state unless a checkpoint is AHEAD of it
+        (the fresh-process resume case) — never roll back in-session work."""
+        s = self.session
+        start = int(jax.device_get(s.state["step"]))
+        if s.checkpoint:
+            latest = s.checkpoint.latest_step()
+            if latest is not None and latest > start:
+                start = s.restore()
+            s.checkpoint.install_preemption_handler(
+                lambda: s.save_sync())
+        return start
+
+    # ---------------------------------------------------------------- run
+    def run(self) -> List[Dict[str, float]]:
+        s = self.session
+        steps = s.config.steps
+        start = self._resolve_start()
+        for cb in s.callbacks:
+            cb.on_fit_start(s, start)
+        if s.config.prefetch and start < steps:
+            self.prefetcher = Prefetcher(s.source, limit=steps)
+            self.prefetcher.schedule(start)
+        history: List[Dict[str, float]] = []
+        try:
+            for step in range(start, steps):
+                for cb in s.callbacks:
+                    cb.on_step_start(s, step)
+                t0 = time.perf_counter()
+                batch = self._fetch(step)
+                metrics = s.step(batch)
+                # dt covers batch wait + device step: the quantity the
+                # overlap hides and the straggler monitor should judge
+                dt = time.perf_counter() - t0
+                history.append({"step": step, "loss": metrics["loss"],
+                                "s": dt})
+                for cb in s.callbacks:
+                    cb.on_step_end(s, step, metrics, dt)
+                if s.config.elastic and self._flagged_monitors():
+                    raise RestartSignal(step + 1)
+            for cb in s.callbacks:
+                cb.on_fit_end(s, history)
+        except Exception as e:
+            # the elastic driver stitches runs together across restarts;
+            # hand it the steps this attempt did complete
+            e.history = history
+            raise
+        finally:
+            if self.prefetcher is not None:
+                self.prefetcher.close()
+                self.prefetcher = None
+            if s.checkpoint is not None:
+                wait = getattr(s.checkpoint, "wait", None)
+                if wait is not None and sys.exc_info()[0] is None:
+                    wait()
+                elif wait is not None:
+                    # already unwinding (e.g. RestartSignal): a stale
+                    # writer error must not supersede it — drain + report
+                    try:
+                        wait()
+                    except Exception as we:
+                        print(f"[pipeline] checkpoint writer error "
+                              f"during unwind: {we!r}")
+        return history
+
+
+# ------------------------------------------------------------------ elastic
+
+def fit_elastic(config, steps: Optional[int] = None, *,
+                callbacks: Optional[List] = None, max_restarts: int = 2,
+                ) -> Tuple[List[Dict[str, float]], Any]:
+    """Fault-tolerant driver: run `fit`, and on node loss (injected
+    failure) or a flagged persistent straggler do the monitor.py ladder —
+    checkpoint, halve the DP degree (power of two), rebuild mesh +
+    runtime + combiner from the same EngineConfig, resume from the
+    manifest. Returns (combined history, final session).
+
+    The callback list is shared across attempts (a FailureInjector must
+    not re-arm a failure it already fired), but straggler monitors are
+    reset on restart — evicting the straggler clears the flag.
+    """
+    from repro.launch.mesh import make_local_mesh
+    from repro.runtime import StepMonitor
+    from .session import StragglerCallback, TrainSession, default_callbacks
+
+    if not config.ckpt_dir:
+        raise ValueError("fit_elastic needs EngineConfig.ckpt_dir (the "
+                         "restart resumes from the manifest)")
+    cbs = default_callbacks(config) if callbacks is None else list(callbacks)
+    mesh = None
+    history: List[Dict[str, float]] = []
+    restarts = 0
+    while True:
+        session = TrainSession.from_config(config, mesh=mesh, callbacks=cbs)
+        try:
+            history += session.fit(steps)
+            return history, session
+        except (RestartSignal, NodeLossError) as e:
+            history += getattr(e, "history", [])
+            # state sits at a step boundary (failures fire at step start,
+            # straggler flags after step end): checkpoint it, barrier
+            session.save_sync()
+            plan = plan_shrink(session.runtime.dp_total)
+            if not plan.shrunk or restarts >= max_restarts:
+                session.close()
+                raise
+            restarts += 1
+            print(f"[elastic] {e}: restarting at dp={plan.new_dp} "
+                  f"(was {plan.old_dp}), no hyperparameter change")
+            session.close()    # the abandoned session's writer thread
+            mesh = make_local_mesh(plan.new_dp, config.model_mesh)
+            for cb in cbs:
+                if isinstance(cb, StragglerCallback):
+                    cb.monitor = StepMonitor(cb.monitor.cfg)

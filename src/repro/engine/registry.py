@@ -14,18 +14,20 @@ pytree (leading lane axis of length `cfg.span`). Built-in entries:
     adasum-rvh     ADASUMRVH (paper Algorithm 1) via shard_map; needs
                    one lane per DP rank (mesh + dp_axes required)
     adasum-linear  ring-order recursion (paper §3.4) — ablation variant
+    adascale       AdaScale SGD gain-ratio scaling (Johnson et al.) —
+                   the first third-party-style entry
 
 Extension point: register a new combiner without touching core dispatch —
 
     from repro.engine import register_combiner
 
-    @register_combiner("adascale")
-    def _adascale(cfg, *, mesh=None, dp_axes=(), leaf_specs=None):
+    @register_combiner("dasgd")
+    def _dasgd(cfg, *, mesh=None, dp_axes=(), leaf_specs=None):
         def combine(stacked):
-            ...  # e.g. AdaScale-style gain scaling (Johnson et al.)
+            ...  # e.g. delayed averaging (Zhou et al., DaSGD)
         return combine
 
-and select it with `EngineConfig(combine="adascale")` (anything that is
+and select it with `EngineConfig(combine="dasgd")` (anything that is
 not a built-in op name is looked up here verbatim).
 """
 from __future__ import annotations
@@ -116,6 +118,61 @@ def _adasum_linear(cfg, *, mesh=None, dp_axes=(), leaf_specs=None):
         return A.adasum_linear_reduce(lanes, per_layer=cfg.per_layer,
                                       acc_dtype=cfg.acc)
     return lin
+
+
+@register_combiner("adascale")
+def _adascale(cfg, *, mesh=None, dp_axes=(), leaf_specs=None):
+    """AdaScale SGD (Johnson et al., 2020) as a combiner — the first
+    'third-party' registry entry the ROADMAP asked for.
+
+    AdaScale scales the averaged gradient by the gain ratio
+
+        r = (sigma^2 + mu^2) / (sigma^2 / S + mu^2)      in [1, S]
+
+    (sigma^2: per-lane gradient variance, mu^2: squared mean norm,
+    estimated from the S lanes as in the paper's Algorithm 1). r -> 1
+    when lanes agree (combined == mean: no extra signal to harvest) and
+    r -> S when lanes are orthogonal (combined == sum: full batch-size
+    gain) — the same two endpoints Adasum interpolates geometrically.
+    `cfg.per_layer` picks per-leaf vs whole-model gain; `cfg.acc` is the
+    moment-accumulation dtype (paper §4.4.1 analogue).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    eps = 1e-20
+
+    def gain(var, mu2, S):
+        r = (var + mu2) / (var / S + mu2 + eps)
+        return jnp.clip(r, 1.0, S)
+
+    def combine(stacked):
+        S = jax.tree.leaves(stacked)[0].shape[0]
+
+        def moments(x):
+            xa = x.astype(cfg.acc)
+            m = jnp.mean(xa, axis=0)
+            var = jnp.sum(jnp.square(xa - m)) / max(S - 1, 1)
+            msq = jnp.sum(jnp.square(m))
+            return m, var, msq
+
+        if cfg.per_layer:
+            def per_leaf(x):
+                m, var, msq = moments(x)
+                mu2 = jnp.maximum(msq - var / S, 0.0)
+                return (gain(var, mu2, S) * m).astype(x.dtype)
+            return jax.tree.map(per_leaf, stacked)
+
+        leaves, treedef = jax.tree.flatten(stacked)
+        mo = [moments(x) for x in leaves]
+        var = sum(v for _, v, _ in mo)
+        mu2 = jnp.maximum(sum(m2 for _, _, m2 in mo) - var / S, 0.0)
+        r = gain(var, mu2, S)
+        return jax.tree.unflatten(
+            treedef, [(r * m).astype(x.dtype)
+                      for (m, _, _), x in zip(mo, leaves)])
+
+    return combine
 
 
 @register_combiner("adasum-rvh")

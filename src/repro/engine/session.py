@@ -15,19 +15,19 @@ monitoring) collapses to:
 `fit` absorbs the training loop that used to live in launch/train.py:
 resume-from-latest, periodic atomic checkpoints, SIGTERM save, straggler
 monitoring, and (for drills) failure injection — all expressed as
-pluggable callbacks.
+pluggable callbacks, scheduled by `repro.engine.pipeline.StepPipeline`
+(batch prefetch and checkpoint writes overlap the device step).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import AsyncCheckpointManager, CheckpointManager
 from repro.configs.base import get_config, get_reduced, pad_heads_for_tp
 from repro.data import make_source
 from repro.launch.mesh import make_local_mesh
@@ -177,8 +177,9 @@ class TrainSession:
                                 lr=config.lr, strict=config.strict)
         source = make_source(config.data_config(model.cfg.vocab_size),
                              model.cfg)
-        ckpt = (CheckpointManager(config.ckpt_dir)
-                if config.ckpt_dir else None)
+        ckpt_cls = (AsyncCheckpointManager if config.async_checkpoint
+                    else CheckpointManager)
+        ckpt = ckpt_cls(config.ckpt_dir) if config.ckpt_dir else None
         return cls(config, model, mesh, runtime, source,
                    callbacks=callbacks, checkpoint=ckpt)
 
@@ -199,36 +200,16 @@ class TrainSession:
 
     def fit(self, steps: Optional[int] = None) -> List[Dict[str, float]]:
         """Train to `steps` total (resuming from the latest checkpoint if
-        one exists). Returns the per-step history."""
+        one exists). Returns the per-step history.
+
+        A thin wrapper: the loop itself — prefetch overlap, resume
+        decision, callback dispatch, elastic flag consumption, end-of-run
+        barriers — lives in `repro.engine.pipeline.StepPipeline`.
+        """
+        from .pipeline import StepPipeline
         steps = self.config.steps if steps is None else steps
         self.config = dataclasses.replace(self.config, steps=steps)
-        # "train to `steps` total": continue from wherever the state is;
-        # a checkpoint only wins when it is AHEAD of the live state (the
-        # fresh-process resume case), never rolling back in-session work
-        start = int(jax.device_get(self.state["step"]))
-        if self.checkpoint:
-            latest = self.checkpoint.latest_step()
-            if latest is not None and latest > start:
-                start = self.restore()
-            self.checkpoint.install_preemption_handler(
-                lambda: self.save())
-        for cb in self.callbacks:
-            cb.on_fit_start(self, start)
-        history: List[Dict[str, float]] = []
-        for step in range(start, steps):
-            for cb in self.callbacks:
-                cb.on_step_start(self, step)
-            batch = self.batch(step)
-            t0 = time.perf_counter()
-            metrics = self.step(batch)
-            dt = time.perf_counter() - t0
-            history.append({"step": step, "loss": metrics["loss"],
-                            "s": dt})
-            for cb in self.callbacks:
-                cb.on_step_end(self, step, metrics, dt)
-        for cb in self.callbacks:
-            cb.on_fit_end(self, history)
-        return history
+        return StepPipeline(self).run()
 
     # ------------------------------------------------------------ checkpoints
     def save(self, step: Optional[int] = None):
@@ -236,6 +217,24 @@ class TrainSession:
         step = (int(jax.device_get(self.state["step"]))
                 if step is None else step)
         return self.checkpoint.save(step, self.state)
+
+    def save_sync(self, step: Optional[int] = None):
+        """save() + barrier: the checkpoint is durably on disk on return
+        (the async writer only guarantees that at the next barrier).
+        The path for SIGTERM handlers and elastic restarts."""
+        path = self.save(step)
+        wait = getattr(self.checkpoint, "wait", None)
+        if wait is not None:
+            wait()
+        return path
+
+    def close(self):
+        """Release background resources (the async checkpoint writer).
+        The session is done after this — a later save would fail."""
+        if self.checkpoint is not None:
+            close = getattr(self.checkpoint, "close", None)
+            if close is not None:
+                close()
 
     def restore(self, step: Optional[int] = None) -> int:
         """Restore state from the latest (or given) checkpoint, if any.

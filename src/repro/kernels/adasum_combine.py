@@ -8,12 +8,14 @@ block by FusionLayout alignment), staged through SMEM-sized [1] blocks.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .adasum_dots import LANES, SUBLANES
+from .backend import resolve_interpret
 
 
 def _combine_kernel(s1_ref, s2_ref, a_ref, b_ref, o_ref):
@@ -27,8 +29,10 @@ def _combine_kernel(s1_ref, s2_ref, a_ref, b_ref, o_ref):
 @functools.partial(jax.jit, static_argnames=("block_elems", "interpret"))
 def block_combine(a: jnp.ndarray, b: jnp.ndarray, s1b: jnp.ndarray,
                   s2b: jnp.ndarray, *, block_elems: int = 8192,
-                  interpret: bool = True) -> jnp.ndarray:
-    """(n,), (n,), (nblk,), (nblk,) -> (n,) fused scale-add."""
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """(n,), (n,), (nblk,), (nblk,) -> (n,) fused scale-add.
+    interpret=None: compiled on TPU, interpreted elsewhere."""
+    interpret = resolve_interpret(interpret)
     n = a.shape[0]
     assert n % block_elems == 0, (n, block_elems)
     assert block_elems % (SUBLANES * LANES) == 0, block_elems

@@ -17,10 +17,13 @@ never cross a block).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .backend import resolve_interpret
 
 LANES = 128      # TPU VPU lane width
 SUBLANES = 8     # fp32 sublane tile
@@ -36,11 +39,13 @@ def _dots_kernel(a_ref, b_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_elems", "interpret"))
 def block_dots(a: jnp.ndarray, b: jnp.ndarray, *, block_elems: int = 8192,
-               interpret: bool = True) -> jnp.ndarray:
+               interpret: Optional[bool] = None) -> jnp.ndarray:
     """(n,) x2 -> (n//block_elems, 3) fp32 partial dots.
 
     n must be a multiple of block_elems; block_elems a multiple of
-    SUBLANES*LANES (=1024)."""
+    SUBLANES*LANES (=1024). interpret=None: compiled on TPU,
+    interpreted elsewhere (kernels.backend)."""
+    interpret = resolve_interpret(interpret)
     n = a.shape[0]
     assert n % block_elems == 0, (n, block_elems)
     assert block_elems % (SUBLANES * LANES) == 0, block_elems

@@ -1,0 +1,24 @@
+"""Pallas backend detection — one place to decide interpret vs compiled.
+
+Every kernel entry point used to default `interpret=True`, which
+validated on CPU but meant `use_pallas=True` on a real TPU silently ran
+the (orders-of-magnitude slower) interpreter unless every call site
+remembered to flip the flag. Kernels now default `interpret=None` and
+resolve it here: compiled on TPU, interpreted everywhere else. An
+explicit True/False always wins (tests pin interpret=True; TPU
+microbenchmarks pin False to fail loudly off-TPU).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def interpret_default() -> bool:
+    """True (interpret) off-TPU, False (compile) on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    return interpret_default() if interpret is None else bool(interpret)

@@ -17,10 +17,13 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .backend import resolve_interpret
 
 NEG_INF = -1e30
 
@@ -77,11 +80,13 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, sm_scale: float,
                                              "block_k", "interpret"))
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, window: int = 0, block_q: int = 512,
-                    block_k: int = 512, interpret: bool = True
+                    block_k: int = 512, interpret: Optional[bool] = None
                     ) -> jnp.ndarray:
     """q: [B,T,H,Dh]; k/v: [B,S,KV,Dh] (RoPE already applied) -> [B,T,H,Dh].
 
-    H must be a multiple of KV. T % block_q == 0, S % block_k == 0."""
+    H must be a multiple of KV. T % block_q == 0, S % block_k == 0.
+    interpret=None: compiled on TPU, interpreted elsewhere."""
+    interpret = resolve_interpret(interpret)
     B, T, H, Dh = q.shape
     S, KV = k.shape[1], k.shape[2]
     G = H // KV

@@ -2,8 +2,9 @@
 library consumes (per-SEGMENT dots / per-element combine with per-segment
 scalars), built on the block kernels + FusionLayout alignment.
 
-`interpret` defaults: True off-TPU (CPU validation per the brief), False
-on real TPU backends.
+`interpret` resolution lives in `kernels.backend`: interpreted off-TPU
+(CPU validation per the brief), compiled on real TPU backends. The block
+kernels now resolve it themselves, so these wrappers pass nothing.
 """
 from __future__ import annotations
 
@@ -19,10 +20,6 @@ from .adasum_combine import block_combine
 BLOCK_ELEMS = 8192
 
 
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 def adasum_segment_dots(a: jnp.ndarray, b: jnp.ndarray, seg: jnp.ndarray,
                         num_segments: int, acc_dtype=jnp.float32,
                         block_elems: int = BLOCK_ELEMS) -> jnp.ndarray:
@@ -30,8 +27,7 @@ def adasum_segment_dots(a: jnp.ndarray, b: jnp.ndarray, seg: jnp.ndarray,
 
     Requires the FusionLayout block-alignment contract (each block is a
     single segment)."""
-    blocks = block_dots(a, b, block_elems=block_elems,
-                        interpret=_interpret_default())
+    blocks = block_dots(a, b, block_elems=block_elems)
     block_seg = seg[::block_elems]
     out = jax.ops.segment_sum(blocks, block_seg, num_segments=num_segments)
     return out.astype(acc_dtype)
@@ -44,5 +40,4 @@ def adasum_combine(a: jnp.ndarray, b: jnp.ndarray, s1: jnp.ndarray,
     block_seg = seg[::block_elems]
     s1b = s1[block_seg]
     s2b = s2[block_seg]
-    return block_combine(a, b, s1b, s2b, block_elems=block_elems,
-                         interpret=_interpret_default())
+    return block_combine(a, b, s1b, s2b, block_elems=block_elems)

@@ -5,10 +5,13 @@
         --combine adasum --optimizer adam --ckpt-dir runs/q3
 
 Runs on whatever devices exist (use XLA_FLAGS host-device-count for local
-multi-device runs). Fault-tolerant: periodic atomic checkpoints, SIGTERM
-save, resume from latest, straggler monitor, optional injected failures
-for drills. All of that lives in `repro.engine.TrainSession`; this module
-only parses flags and forwards.
+multi-device runs). Fault-tolerant: periodic atomic checkpoints (written
+off-thread; --sync-checkpoint to block), SIGTERM save, resume from
+latest, prefetched batches (--no-prefetch for the serial loop),
+straggler monitor, optional injected failures for drills, and --elastic
+for the checkpoint + halve-DP restart driver. All of that lives in
+`repro.engine` (TrainSession + pipeline); this module only parses flags
+and forwards.
 """
 from __future__ import annotations
 
@@ -16,7 +19,8 @@ import argparse
 import json
 from pathlib import Path
 
-from repro.engine import EngineConfig, TrainSession, default_callbacks
+from repro.engine import (EngineConfig, TrainSession, default_callbacks,
+                          fit_elastic)
 
 
 def main(argv=None):
@@ -28,9 +32,13 @@ def main(argv=None):
     args, engine_argv = ap.parse_known_args(argv)
 
     cfg = EngineConfig.from_cli(engine_argv)
-    session = TrainSession.from_config(
-        cfg, callbacks=default_callbacks(cfg, fail_at=args.fail_at))
-    history = session.fit(cfg.steps)
+    callbacks = default_callbacks(cfg, fail_at=args.fail_at)
+    if cfg.elastic:
+        history, session = fit_elastic(cfg, cfg.steps, callbacks=callbacks)
+    else:
+        session = TrainSession.from_config(cfg, callbacks=callbacks)
+        history = session.fit(cfg.steps)
+    session.close()
     if history:
         print(f"[train] done: final loss {history[-1]['loss']:.4f}")
     else:

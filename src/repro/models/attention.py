@@ -166,9 +166,10 @@ def gqa_forward(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
     k = L.apply_rope(k, positions[None, :], cfg.rope_theta)
     if use_flash and T % 512 == 0:
         from repro.kernels.flash_attention import flash_attention
+        # interpret resolves in kernels.backend: compiled on TPU,
+        # interpreted elsewhere
         out = flash_attention(q, k, v, causal=True,
-                              window=cfg.sliding_window,
-                              interpret=jax.default_backend() != "tpu")
+                              window=cfg.sliding_window)
     else:
         out = _chunked_attention(q, k, v, positions, positions, causal=True,
                                  window=cfg.sliding_window, chunk=chunk)

@@ -1,2 +1,4 @@
 from .monitor import (StepMonitor, StragglerConfig, FailureInjector,
-                      next_power_of_two_below)
+                      NodeLossError, next_power_of_two_below)
+from .prefetch import DelayedSource, Prefetcher
+from .elastic import ElasticPlan, RestartSignal, plan_shrink

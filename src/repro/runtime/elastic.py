@@ -1,0 +1,50 @@
+"""Elastic restart decisions (paper §5.4).
+
+Adasum's scale-invariance is what makes shrinking the job safe: when a
+node is lost (or a persistent straggler is evicted) the run restarts at
+a smaller power-of-two DP degree *with no hyperparameter change* — the
+combined update stays well-conditioned at any span. This module holds the
+pure decision logic; the driver that rebuilds mesh/session lives in
+`repro.engine.pipeline` (it needs the engine layer).
+
+Signals:
+  * `RestartSignal` — raised inside the step loop when the StepMonitor
+    flags a persistent straggler and the run is elastic;
+  * `NodeLossError` (monitor.py) — a participant is gone, real or
+    injected by `FailureInjector`; treated identically by the driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .monitor import next_power_of_two_below
+
+
+class RestartSignal(Exception):
+    """A flagged straggler requests an elastic restart at `step`."""
+
+    def __init__(self, step: int, reason: str = "straggler"):
+        super().__init__(f"elastic restart requested at step {step} "
+                         f"({reason})")
+        self.step = step
+        self.reason = reason
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """One shrink decision: the DP degree to restart at."""
+    old_dp: int
+    new_dp: int
+
+    @property
+    def shrunk(self) -> bool:
+        return self.new_dp < self.old_dp
+
+
+def plan_shrink(dp_total: int) -> ElasticPlan:
+    """Halve the DP degree to the next power of two below (monitor.py's
+    mitigation ladder step 3). At dp=1 there is nothing left to drop —
+    the plan keeps dp=1 and the driver gives up restarting."""
+    if dp_total <= 1:
+        return ElasticPlan(dp_total, dp_total)
+    return ElasticPlan(dp_total, next_power_of_two_below(dp_total))

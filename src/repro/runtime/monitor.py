@@ -69,6 +69,12 @@ class StepMonitor:
                 "max_s": float(a.max()), "flagged": self.flagged}
 
 
+class NodeLossError(RuntimeError):
+    """A participant is gone (real or injected). The elastic driver
+    catches exactly this — a RuntimeError subclass so legacy callers
+    expecting RuntimeError keep working."""
+
+
 class FailureInjector:
     """Deterministic failure schedule for recovery tests: raises at the
     configured steps (simulating a lost node / preemption)."""
@@ -79,7 +85,7 @@ class FailureInjector:
     def check(self, step: int):
         if step in self.fail_at:
             self.fail_at.discard(step)
-            raise RuntimeError(f"injected node failure at step {step}")
+            raise NodeLossError(f"injected node failure at step {step}")
 
 
 def next_power_of_two_below(n: int) -> int:

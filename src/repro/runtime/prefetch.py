@@ -1,0 +1,124 @@
+"""Double-buffered host->device batch prefetching (DaSGD-style overlap).
+
+The deterministic sources in `repro.data.pipeline` make every batch a
+pure function of (seed, step); synchronous `fit` nevertheless *serializes*
+host-side batch generation (a Python/numpy Markov walk) with the device
+step. The `Prefetcher` moves that host work onto a background thread and
+stages the next batch onto the device while step `i` runs, so the step
+loop only ever blocks when the host is genuinely slower than the device.
+
+Restart contract: because batches are addressed BY STEP (never by queue
+position), prefetching cannot change the stream — `get(step)` returns
+bitwise the same arrays the synchronous path would have produced, and a
+save/restore/resume (or an elastic mesh rebuild) simply starts asking for
+a different step. Stale speculative work is dropped, never consumed.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Dict, Optional
+
+PyTree = Any
+
+
+def _default_stage(batch: Dict[str, Any]) -> Dict[str, Any]:
+    import jax.numpy as jnp
+    return {k: jnp.asarray(v) for k, v in batch.items()}
+
+
+class Prefetcher:
+    """Wraps a deterministic `source` (anything with `.batch(step)`).
+
+    `get(step)` returns the staged batch for `step` and schedules the
+    next `depth` steps on the background thread (double-buffered at the
+    default depth=1). Completed-but-unclaimed futures for other steps are
+    discarded on seek, preserving the pure-(seed, step) contract.
+    """
+
+    def __init__(self, source, *, depth: int = 1,
+                 limit: Optional[int] = None,
+                 stage: Optional[Callable[[Dict], Dict]] = None):
+        assert depth >= 1, depth
+        self.source = source
+        self.depth = depth
+        self.limit = limit      # first step NOT to produce (end of run)
+        self._stage = stage or _default_stage
+        self._pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="repro-prefetch")
+        self._pending: Dict[int, Future] = {}
+        self._lock = threading.Lock()
+        self._closed = False
+        # observability: how often the loop found its batch ready vs had
+        # to fall back to a synchronous pull (miss == no overlap won)
+        self.hits = 0
+        self.misses = 0
+
+    # ----------------------------------------------------------- internals
+    def _produce(self, step: int):
+        return self._stage(self.source.batch(step))
+
+    def _schedule(self, step: int):
+        if self.limit is not None and step >= self.limit:
+            return      # never speculate past the end of the run
+        if step not in self._pending:
+            self._pending[step] = self._pool.submit(self._produce, step)
+
+    # ------------------------------------------------------------- public
+    def schedule(self, step: int):
+        """Hint: start producing `step` in the background."""
+        with self._lock:
+            if not self._closed:
+                self._schedule(step)
+
+    def get(self, step: int) -> Dict[str, Any]:
+        """The batch for `step` — bitwise identical to
+        `source.batch(step)` post-staging, regardless of what was
+        speculatively produced before."""
+        with self._lock:
+            if self._closed:
+                return self._produce(step)
+            fut = self._pending.pop(step, None)
+            # a seek (restart/resume) invalidates speculation for other
+            # steps; drop it so memory stays at O(depth) batches
+            stale = [s for s in self._pending
+                     if s < step or s > step + self.depth]
+            for s in stale:
+                self._pending.pop(s)
+            for i in range(1, self.depth + 1):
+                self._schedule(step + i)
+        if fut is None:
+            self.misses += 1
+            return self._produce(step)
+        self.hits += 1
+        return fut.result()
+
+    def close(self):
+        with self._lock:
+            self._closed = True
+            self._pending.clear()
+        self._pool.shutdown(wait=False)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class DelayedSource:
+    """Injects a fixed host-side latency in front of a deterministic
+    source — the workload model for the prefetch-overlap benchmark and
+    tests (a slow tokenizer / storage read / augmentation stage)."""
+
+    def __init__(self, source, delay_s: float):
+        self.source = source
+        self.delay_s = delay_s
+
+    def batch(self, step: int):
+        import time
+        time.sleep(self.delay_s)
+        return self.source.batch(step)
+
+    def __getattr__(self, name):
+        return getattr(self.source, name)

@@ -1,11 +1,15 @@
-"""Tensor fusion layout tests (paper §4.4.3) incl. hypothesis round-trips."""
+"""Tensor fusion layout tests (paper §4.4.3): deterministic bucketize /
+round-trip coverage that always runs, plus hypothesis property tests when
+hypothesis is installed (the container may not ship it)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # property tests skip; deterministic ones run
+    given = settings = st = None
 
 from repro.core import fusion
 
@@ -16,37 +20,40 @@ def tree_from(sizes):
             for i, s in enumerate(sizes)}
 
 
-@settings(max_examples=50, deadline=None)
-@given(st.lists(st.integers(1, 300), min_size=1, max_size=8),
-       st.sampled_from([1, 4, 16]), st.sampled_from([1, 8, 64]))
-def test_pack_unpack_roundtrip(sizes, align, leaf_align):
-    tree = tree_from(sizes)
+# ------------------------------------------------- deterministic: round-trip
+
+ALIGN_CASES = [
+    ([1], 1, 1, "float32"),
+    ([3, 5, 7], 4, 8, "float32"),
+    ([128, 1, 64], 16, 64, "float32"),
+    ([100, 200, 300, 17], 1, 8, "bfloat16"),
+    ([8192], 2, 64, "bfloat16"),
+]
+
+
+@pytest.mark.parametrize("sizes,align,leaf_align,dtype", ALIGN_CASES)
+def test_pack_unpack_roundtrip_under_alignment(sizes, align, leaf_align,
+                                               dtype):
+    """Round-trip with alignment gaps + tail padding + a dtype that
+    upcasts through the fused buffer: values and dtypes must survive."""
+    rng = np.random.default_rng(len(sizes))
+    tree = {f"l{i}": jnp.asarray(rng.standard_normal(s), jnp.dtype(dtype))
+            for i, s in enumerate(sizes)}
     layout = fusion.make_layout(tree, align=align, leaf_align=leaf_align)
-    buf = fusion.pack(tree, layout)
+    buf = fusion.pack(tree, layout, dtype=jnp.float32)
+    assert buf.dtype == jnp.float32
     assert buf.shape[0] == layout.padded_len
     assert layout.padded_len % (align * leaf_align) == 0
     out = fusion.unpack(buf, layout)
     for k in tree:
-        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(tree[k]))
-
-
-@settings(max_examples=50, deadline=None)
-@given(st.lists(st.integers(1, 200), min_size=1, max_size=6),
-       st.sampled_from([8, 32]))
-def test_leaf_alignment_contract(sizes, leaf_align):
-    """Every leaf starts at a multiple of leaf_align (the Pallas block
-    contract) and segment ids agree with offsets."""
-    tree = tree_from(sizes)
-    layout = fusion.make_layout(tree, leaf_align=leaf_align)
+        assert out[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(
+            np.asarray(jax.device_get(out[k])).astype(np.float32),
+            np.asarray(jax.device_get(tree[k])).astype(np.float32))
+    # the gaps the round-trip skipped really are zero (wire payload)
     seg = layout.segment_ids()
-    for i, (off, sz) in enumerate(zip(layout.offsets, layout.sizes)):
-        assert off % leaf_align == 0
-        assert (seg[off:off + sz] == i).all()
-    # padding/gaps are the dummy segment
-    mask = np.ones(layout.padded_len, bool)
-    for off, sz in zip(layout.offsets, layout.sizes):
-        mask[off:off + sz] = False
-    assert (seg[mask] == layout.num_segments).all()
+    gaps = np.asarray(buf)[seg == layout.num_segments]
+    assert (gaps == 0).all()
 
 
 def test_multidim_leaves():
@@ -58,15 +65,104 @@ def test_multidim_leaves():
     assert out["a"].shape == (2, 3, 4)
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.lists(st.integers(1, 10_000), min_size=1, max_size=20),
-       st.integers(1, 64))
-def test_bucketize_never_splits_layers(sizes, kb):
+# -------------------------------------------------- deterministic: bucketize
+
+def test_bucketize_oversized_single_leaf():
+    """A leaf bigger than the bucket budget gets a bucket of its own —
+    never split, never merged with its neighbours."""
+    tree = {"small0": jax.ShapeDtypeStruct((4,), jnp.float32),
+            "huge": jax.ShapeDtypeStruct((100_000,), jnp.float32),
+            "small1": jax.ShapeDtypeStruct((4,), jnp.float32)}
+    layout = fusion.make_layout(tree)
+    buckets = fusion.bucketize(layout, bucket_bytes=1024)
+    hi = list(layout.sizes).index(100_000)
+    owner = [b for b in buckets if b[0] <= hi < b[1]]
+    assert len(owner) == 1 and owner[0][1] - owner[0][0] == 1, buckets
+
+
+def test_bucketize_single_oversized_only_leaf():
+    tree = {"huge": jax.ShapeDtypeStruct((100_000,), jnp.float32)}
+    layout = fusion.make_layout(tree)
+    assert fusion.bucketize(layout, bucket_bytes=16) == [(0, 1)]
+
+
+def test_bucketize_exact_boundary_fill():
+    """Leaves that exactly fill the budget must not spill the last one
+    into the next bucket (> vs >= off-by-one guard)."""
+    # four 64-element fp32 leaves = 256 B each; budget = exactly 2 leaves
+    tree = {f"l{i}": jax.ShapeDtypeStruct((64,), jnp.float32)
+            for i in range(4)}
+    layout = fusion.make_layout(tree)
+    buckets = fusion.bucketize(layout, bucket_bytes=2 * 64 * 4)
+    assert buckets == [(0, 2), (2, 4)], buckets
+
+
+@pytest.mark.parametrize("sizes,budget_b", [
+    ([4, 4, 4, 4], 16),
+    ([1000, 1, 1, 1000, 1], 512),
+    ([64] * 7, 64 * 4),
+    ([3000, 3000], 1024),
+])
+def test_bucketize_budget_respected_unless_oversized(sizes, budget_b):
+    """Contiguous cover; every bucket fits the budget except single-leaf
+    buckets whose one leaf is itself oversized."""
     tree = {f"l{i}": jax.ShapeDtypeStruct((s,), jnp.float32)
             for i, s in enumerate(sizes)}
     layout = fusion.make_layout(tree)
-    buckets = fusion.bucketize(layout, bucket_bytes=kb * 1024)
-    # contiguous cover, no overlap
+    buckets = fusion.bucketize(layout, bucket_bytes=budget_b)
     assert buckets[0][0] == 0 and buckets[-1][1] == len(sizes)
     for (s1, e1), (s2, e2) in zip(buckets, buckets[1:]):
         assert e1 == s2
+    for s, e in buckets:
+        nbytes = sum(layout.sizes[s:e]) * 4
+        assert nbytes <= budget_b or e - s == 1
+
+
+# ------------------------------------------------------ hypothesis variants
+
+if st is not None:
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(1, 300), min_size=1, max_size=8),
+           st.sampled_from([1, 4, 16]), st.sampled_from([1, 8, 64]))
+    def test_pack_unpack_roundtrip(sizes, align, leaf_align):
+        tree = tree_from(sizes)
+        layout = fusion.make_layout(tree, align=align, leaf_align=leaf_align)
+        buf = fusion.pack(tree, layout)
+        assert buf.shape[0] == layout.padded_len
+        assert layout.padded_len % (align * leaf_align) == 0
+        out = fusion.unpack(buf, layout)
+        for k in tree:
+            np.testing.assert_array_equal(np.asarray(out[k]),
+                                          np.asarray(tree[k]))
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(1, 200), min_size=1, max_size=6),
+           st.sampled_from([8, 32]))
+    def test_leaf_alignment_contract(sizes, leaf_align):
+        """Every leaf starts at a multiple of leaf_align (the Pallas block
+        contract) and segment ids agree with offsets."""
+        tree = tree_from(sizes)
+        layout = fusion.make_layout(tree, leaf_align=leaf_align)
+        seg = layout.segment_ids()
+        for i, (off, sz) in enumerate(zip(layout.offsets, layout.sizes)):
+            assert off % leaf_align == 0
+            assert (seg[off:off + sz] == i).all()
+        # padding/gaps are the dummy segment
+        mask = np.ones(layout.padded_len, bool)
+        for off, sz in zip(layout.offsets, layout.sizes):
+            mask[off:off + sz] = False
+        assert (seg[mask] == layout.num_segments).all()
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.integers(1, 10_000), min_size=1, max_size=20),
+           st.integers(1, 64))
+    def test_bucketize_never_splits_layers(sizes, kb):
+        tree = {f"l{i}": jax.ShapeDtypeStruct((s,), jnp.float32)
+                for i, s in enumerate(sizes)}
+        layout = fusion.make_layout(tree)
+        buckets = fusion.bucketize(layout, bucket_bytes=kb * 1024)
+        # contiguous cover, no overlap
+        assert buckets[0][0] == 0 and buckets[-1][1] == len(sizes)
+        for (s1, e1), (s2, e2) in zip(buckets, buckets[1:]):
+            assert e1 == s2

@@ -1,16 +1,20 @@
 """Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
-(interpret mode on CPU)."""
+(interpret mode on CPU). Hypothesis-based tests skip individually when
+hypothesis isn't installed; the deterministic sweeps always run."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = settings = st = None
 
 from repro.kernels import ops, ref
 from repro.kernels.adasum_dots import block_dots
 from repro.kernels.adasum_combine import block_combine
+from repro.kernels.backend import interpret_default, resolve_interpret
 
 BLOCKS = [1024, 2048, 8192]
 DTYPES = [jnp.float32, jnp.bfloat16]
@@ -60,22 +64,39 @@ def test_segment_dots_respects_layer_boundaries():
                                rtol=1e-5, atol=1e-3)
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(1, 6), st.integers(0, 2**31 - 1))
-def test_segment_combine_property(nblk, seed):
-    """kernel combine == s1[seg]*a + s2[seg]*b for random segment maps."""
-    block = 1024
-    rng = np.random.default_rng(seed)
-    nseg = rng.integers(1, nblk + 1)
-    blk_seg = np.sort(rng.integers(0, nseg, size=nblk)).astype(np.int32)
-    seg = jnp.asarray(np.repeat(blk_seg, block))
-    a, b = data(nblk * block, seed, jnp.float32)
-    s1 = jnp.asarray(rng.standard_normal(nseg), jnp.float32)
-    s2 = jnp.asarray(rng.standard_normal(nseg), jnp.float32)
-    got = ops.adasum_combine(a, b, s1, s2, seg, block_elems=block)
-    want = s1[seg] * a + s2[seg] * b
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5,
-                               atol=1e-5)
+if st is not None:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 6), st.integers(0, 2**31 - 1))
+    def test_segment_combine_property(nblk, seed):
+        """kernel combine == s1[seg]*a + s2[seg]*b for random segments."""
+        block = 1024
+        rng = np.random.default_rng(seed)
+        nseg = rng.integers(1, nblk + 1)
+        blk_seg = np.sort(rng.integers(0, nseg, size=nblk)).astype(np.int32)
+        seg = jnp.asarray(np.repeat(blk_seg, block))
+        a, b = data(nblk * block, seed, jnp.float32)
+        s1 = jnp.asarray(rng.standard_normal(nseg), jnp.float32)
+        s2 = jnp.asarray(rng.standard_normal(nseg), jnp.float32)
+        got = ops.adasum_combine(a, b, s1, s2, seg, block_elems=block)
+        want = s1[seg] * a + s2[seg] * b
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_interpret_autodetect():
+    """interpret=None resolves per backend: interpreted off-TPU, compiled
+    on TPU; an explicit flag always wins. On this container the
+    auto-resolved path must match the pinned interpret=True result."""
+    on_tpu = jax.default_backend() == "tpu"
+    assert interpret_default() == (not on_tpu)
+    assert resolve_interpret(None) == (not on_tpu)
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    a, b = data(2048, 3, jnp.float32)
+    auto = block_dots(a, b, block_elems=1024)          # interpret=None
+    pinned = block_dots(a, b, block_elems=1024, interpret=True)
+    if not on_tpu:
+        np.testing.assert_array_equal(np.asarray(auto), np.asarray(pinned))
 
 
 def test_fp32_accumulation_beats_bf16_inputs():

@@ -1,0 +1,332 @@
+"""Pipelined runtime tests: prefetch determinism + overlap, async
+checkpointing barriers, elastic restart, and the adascale combiner."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_in_subprocess
+
+from repro.checkpoint import AsyncCheckpointManager
+from repro.core.combine import CombineConfig
+from repro.data import DataConfig, make_source
+from repro.engine import EngineConfig, TrainSession, make_combiner
+from repro.runtime import DelayedSource, Prefetcher, plan_shrink
+
+
+def small_source(seed=0):
+    return make_source(DataConfig(seq_len=16, global_batch=4,
+                                  vocab_size=64, seed=seed))
+
+
+# ----------------------------------------------------------------- prefetch
+
+class TestPrefetcher:
+    def test_stream_bitwise_identical(self):
+        """Prefetched batches == synchronous batches, bit for bit."""
+        src = small_source()
+        with Prefetcher(src) as pf:
+            for step in (0, 1, 2, 3):
+                got = pf.get(step)
+                want = src.batch(step)
+                for k in want:
+                    np.testing.assert_array_equal(np.asarray(got[k]),
+                                                  want[k])
+
+    def test_seek_preserves_determinism(self):
+        """A restart (seek to an arbitrary step) must not consume stale
+        speculative batches — the pure-(seed, step) contract."""
+        src = small_source()
+        with Prefetcher(src) as pf:
+            pf.get(0)
+            pf.get(1)           # step 2 now speculatively in flight
+            got = pf.get(7)     # simulated resume at step 7
+            np.testing.assert_array_equal(np.asarray(got["tokens"]),
+                                          src.batch(7)["tokens"])
+            got = pf.get(8)     # the speculation after the seek is used
+            np.testing.assert_array_equal(np.asarray(got["tokens"]),
+                                          src.batch(8)["tokens"])
+        assert pf.hits >= 1     # at least one overlap won after warmup
+
+    def test_overlap_hides_host_latency(self):
+        """With a slow host stage, sequential gets must not pay the
+        latency serially once the pipeline is warm."""
+        delay = 0.05
+        src = DelayedSource(small_source(), delay)
+        with Prefetcher(src) as pf:
+            pf.get(0)           # warmup (paid synchronously)
+            t0 = time.perf_counter()
+            for step in (1, 2, 3):
+                pf.get(step)
+                time.sleep(delay * 1.5)   # "device step" longer than host
+            waited = time.perf_counter() - t0 - 3 * delay * 1.5
+        # three synchronous pulls would add 3*delay of waiting; the
+        # prefetched path should wait far less than that
+        assert waited < 2 * delay, waited
+
+    def test_limit_stops_end_of_run_speculation(self):
+        """No batch is ever produced past the end of the run (wasted
+        host work), but explicit gets beyond the limit still answer."""
+        src = small_source()
+        with Prefetcher(src, limit=4) as pf:
+            pf.get(3)                  # final step: nothing to speculate
+            assert not pf._pending
+            np.testing.assert_array_equal(
+                np.asarray(pf.get(4)["tokens"]), src.batch(4)["tokens"])
+
+    def test_close_falls_back_synchronous(self):
+        src = small_source()
+        pf = Prefetcher(src)
+        pf.close()
+        np.testing.assert_array_equal(
+            np.asarray(pf.get(3)["tokens"]), src.batch(3)["tokens"])
+
+
+# --------------------------------------------------------- async checkpoint
+
+def state_like(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"w": jnp.asarray(rng.standard_normal((4, 3)),
+                                        jnp.float32)},
+            "step": jnp.asarray(seed, jnp.int32)}
+
+
+class TestAsyncCheckpoint:
+    def test_roundtrip_through_barrier(self, tmp_path):
+        cm = AsyncCheckpointManager(tmp_path)
+        s = state_like(7)
+        cm.save(7, s)
+        # latest_step is a barrier: the write must be visible after it
+        assert cm.latest_step() == 7
+        r = cm.restore(jax.tree.map(jnp.zeros_like, s))
+        for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(r)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        cm.close()
+
+    def test_snapshot_survives_donation(self, tmp_path):
+        """The host snapshot is taken before save() returns, so the
+        donated/reused device buffer cannot corrupt the checkpoint."""
+        cm = AsyncCheckpointManager(tmp_path)
+        w = np.arange(12, dtype=np.float32).reshape(4, 3)
+        state = {"w": jnp.asarray(w)}
+        cm.save(1, state)
+        # simulate the runtime overwriting the buffer right after save()
+        state["w"] = state["w"] * 0 - 1.0
+        cm.wait()
+        r = cm.restore({"w": jnp.zeros((4, 3), jnp.float32)})
+        np.testing.assert_array_equal(np.asarray(r["w"]), w)
+        cm.close()
+
+    def test_overlapping_saves_serialize(self, tmp_path):
+        cm = AsyncCheckpointManager(tmp_path, keep=10)
+        for s in range(5):
+            cm.save(s, state_like(s))
+        assert cm.all_steps() == [0, 1, 2, 3, 4]
+        cm.close()
+
+    def test_sigterm_drains_inflight_write_then_saves(self, tmp_path):
+        """SIGTERM during a background write must not be dropped: drain,
+        final save, exit 143 — with both checkpoints durable."""
+        run_in_subprocess(rf"""
+import os, signal
+import jax.numpy as jnp
+from repro.checkpoint import AsyncCheckpointManager
+cm = AsyncCheckpointManager(r"{tmp_path}/ck")
+state = {{"w": jnp.zeros((4, 3)), "step": jnp.asarray(1)}}
+cm.install_preemption_handler(lambda: (cm.save(9, state), cm.wait()))
+cm.save(1, state)                      # in-flight background write
+try:
+    os.kill(os.getpid(), signal.SIGTERM)
+except SystemExit as e:
+    assert e.code == 143, e.code
+    assert cm.all_steps() == [1, 9], cm.all_steps()
+    print("OK")
+""", devices=1)
+
+    def test_writer_error_surfaces_at_barrier(self, tmp_path):
+        cm = AsyncCheckpointManager(tmp_path)
+        cm.save(1, {"w": jnp.zeros(3)})
+        cm.wait()
+        cm._future = cm._pool.submit(lambda: (_ for _ in ()).throw(
+            OSError("disk full")))
+        with pytest.raises(OSError, match="disk full"):
+            cm.wait()
+        cm.close()
+
+
+# ----------------------------------------------------------------- adascale
+
+class TestAdaScale:
+    def stacked(self, lanes):
+        return {"w": jnp.stack(lanes)}
+
+    def test_equals_mean_at_gain_one(self):
+        """Identical lanes => zero variance => gain 1 => adascale == mean
+        (the satellite's required equivalence)."""
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+        stacked = self.stacked([x] * 4)
+        for per_layer in (True, False):
+            out = make_combiner(CombineConfig(op="adascale",
+                                              per_layer=per_layer))(stacked)
+            np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(x),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_orthogonal_lanes_reach_full_gain(self):
+        """Orthogonal equal-norm lanes => gain S => adascale == sum."""
+        eye = np.eye(4, dtype=np.float32) * 3.0
+        stacked = self.stacked([jnp.asarray(eye[i]) for i in range(4)])
+        out = make_combiner(CombineConfig(op="adascale"))(stacked)
+        np.testing.assert_allclose(np.asarray(out["w"]), eye.sum(0),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_gain_bounded_by_span(self):
+        rng = np.random.default_rng(1)
+        lanes = [jnp.asarray(rng.standard_normal(32), jnp.float32)
+                 for _ in range(4)]
+        stacked = self.stacked(lanes)
+        out = make_combiner(CombineConfig(op="adascale"))(stacked)
+        mean = np.mean([np.asarray(l) for l in lanes], axis=0)
+        summ = np.sum([np.asarray(l) for l in lanes], axis=0)
+        # combined = r * mean with r in [1, 4]: between mean and sum
+        r = np.asarray(out["w"]) / np.where(np.abs(mean) < 1e-12, 1, mean)
+        r = np.median(r)
+        assert 1.0 - 1e-4 <= r <= 4.0 + 1e-4, r
+
+    def test_selectable_via_engine_config(self):
+        EngineConfig(combine="adascale").validate()
+        from repro.configs.base import ModelConfig
+        from repro.launch.mesh import make_local_mesh
+        from repro.models import build_model
+        mcfg = ModelConfig("tiny", "dense", 1, 32, 2, 1, 64, 97,
+                           head_dim=16)
+        sess = TrainSession.from_config(
+            EngineConfig(combine="adascale", seq_len=16, global_batch=4,
+                         optimizer="sgd"),
+            model=build_model(mcfg, attn_chunk=16),
+            mesh=make_local_mesh(1, 1), callbacks=[])
+        m = sess.step(sess.batch(0))
+        assert np.isfinite(m["loss"])
+
+
+# ------------------------------------------------------------ pipelined fit
+
+class TestPipelinedFit:
+    def test_prefetch_bitwise_equals_synchronous_across_resume(
+            self, tmp_path):
+        """Acceptance: the prefetched stream (and hence the loss curve)
+        is bitwise identical to the synchronous one across a
+        save/restore/resume cycle."""
+        from repro.configs.base import ModelConfig
+        from repro.launch.mesh import make_local_mesh
+        from repro.models import build_model
+
+        from repro.engine import CheckpointCallback
+
+        def run(prefetch, async_ckpt, root):
+            mcfg = ModelConfig("tiny", "dense", 1, 32, 2, 1, 64, 97,
+                               head_dim=16)
+            cfg = EngineConfig(combine="adasum", seq_len=16,
+                               global_batch=4, ckpt_dir=str(root),
+                               ckpt_every=2, prefetch=prefetch,
+                               async_checkpoint=async_ckpt)
+            mk = lambda: TrainSession.from_config(
+                cfg, model=build_model(mcfg, attn_chunk=16),
+                mesh=make_local_mesh(1, 1),
+                callbacks=[CheckpointCallback(2)])
+            h = mk().fit(2)
+            h += mk().fit(4)          # fresh session resumes from ckpt
+            return [(e["step"], e["loss"]) for e in h]
+
+        pipelined = run(True, True, tmp_path / "a")
+        synchronous = run(False, False, tmp_path / "b")
+        assert [s for s, _ in pipelined] == [0, 1, 2, 3]
+        assert pipelined == synchronous      # bitwise: same floats
+
+    def test_elastic_restart_halves_dp_and_resumes(self):
+        """Acceptance: injected failure + flagged straggler => checkpoint
+        -> mesh rebuild at halved DP degree -> resume from the manifest,
+        loss continuing from the restored step with the same config."""
+        run_in_subprocess(r"""
+import numpy as np
+from repro.engine import (Callback, EngineConfig, FailureInjectionCallback,
+                          LoggingCallback, StragglerCallback, fit_elastic)
+import tempfile
+root = tempfile.mkdtemp()
+cfg = EngineConfig(arch="hymba-1p5b", reduced=True, combine="adasum",
+                   seq_len=32, global_batch=8, ckpt_dir=root + "/ck",
+                   ckpt_every=100, log_every=1, elastic=True)
+
+scb = StragglerCallback()
+class FlagAt(Callback):
+    # simulate the monitor flagging a persistent straggler at step 5
+    def on_step_end(self, session, step, metrics, dt):
+        if step == 5:
+            scb.monitor.flagged = True
+
+dps = []
+class RecordDP(Callback):
+    def on_fit_start(self, session, start):
+        dps.append((start, session.runtime.dp_total, session.runtime.span))
+
+cbs = [LoggingCallback(1), scb, FlagAt(), RecordDP(),
+       FailureInjectionCallback([3])]
+hist, session = fit_elastic(cfg, 7, callbacks=cbs)
+
+# two restarts: node loss at step 3 (8 -> 4), straggler flag after
+# step 5 (4 -> 2); each resumed from the checkpointed step
+assert dps == [(0, 8, 8), (3, 4, 4), (6, 2, 2)], dps
+assert [h["step"] for h in hist] == list(range(7)), hist
+assert np.isfinite([h["loss"] for h in hist]).all()
+assert session.runtime.dp_total == 2
+# no hyperparameter change across restarts (paper §5.4)
+assert session.config.lr == cfg.lr and session.config.combine == "adasum"
+print("OK")
+""", devices=8, timeout=900)
+
+
+class TestPipelineConfig:
+    def test_new_fields_roundtrip(self):
+        cfg = EngineConfig(prefetch=False, async_checkpoint=False,
+                           elastic=True, ckpt_dir="/tmp/x")
+        assert EngineConfig.from_dict(cfg.to_dict()) == cfg
+        cfg.validate()
+
+    def test_elastic_requires_ckpt_dir(self):
+        with pytest.raises(ValueError, match="elastic"):
+            EngineConfig(elastic=True).validate()
+        from repro.engine import fit_elastic
+        with pytest.raises(ValueError, match="ckpt_dir"):
+            fit_elastic(EngineConfig(arch="gemma-7b"))
+
+    def test_cli_flags(self):
+        cfg = EngineConfig.from_cli(
+            ["--arch", "gemma-7b", "--no-prefetch", "--sync-checkpoint",
+             "--elastic", "--ckpt-dir", "/tmp/x"])
+        assert not cfg.prefetch and not cfg.async_checkpoint
+        assert cfg.elastic and cfg.ckpt_dir == "/tmp/x"
+        assert EngineConfig.from_dict(cfg.to_dict()) == cfg
+        # defaults: pipelined on, elastic off
+        dflt = EngineConfig.from_cli(["--arch", "gemma-7b"])
+        assert dflt.prefetch and dflt.async_checkpoint and not dflt.elastic
+
+
+def test_plan_shrink_powers_of_two():
+    assert plan_shrink(8).new_dp == 4
+    assert plan_shrink(6).new_dp == 4
+    assert plan_shrink(2).new_dp == 1
+    assert not plan_shrink(1).shrunk
+
+
+def test_failure_injector_raises_typed_node_loss():
+    """The elastic driver catches exactly NodeLossError — generic
+    RuntimeErrors (even ones mentioning 'failure') must propagate."""
+    from repro.runtime import FailureInjector, NodeLossError
+    inj = FailureInjector([2])
+    inj.check(1)
+    with pytest.raises(NodeLossError, match="injected node failure"):
+        inj.check(2)
+    inj.check(2)            # fires exactly once
+    assert issubclass(NodeLossError, RuntimeError)   # legacy callers
