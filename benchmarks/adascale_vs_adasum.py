@@ -1,0 +1,74 @@
+"""AdaScale vs Adasum on the paper's Fig. 6 regime: convergence as the
+effective batch grows.
+
+The paper's Fig. 6 claim is that Adasum keeps converging (in steps to a
+target loss) as batch size scales into the regime where plain averaging
+stalls; AdaScale (Johnson et al.) is the published gain-ratio alternative
+the PR-2 combiner registry grew. This benchmark races the two combiners
+(`adascale` vs `adasum` on the gspmd_tree backend, 8 lanes) at growing
+global batch on the tiny LM and records steps-to-target + final loss per
+batch size. Emits `BENCH_adascale_fig6.json`.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit, run_devices
+
+OUT = Path(__file__).resolve().parents[1] / "BENCH_adascale_fig6.json"
+
+CODE = r"""
+import json, numpy as np
+from repro.configs.base import ModelConfig
+from repro.engine import EngineConfig, TrainSession
+from repro.models import build_model
+from repro.launch.mesh import make_mesh_compat
+
+mcfg = ModelConfig("bench", "dense", 2, 64, 4, 2, 128, 257, head_dim=16)
+model = build_model(mcfg, attn_chunk=32)
+mesh = make_mesh_compat((8, 1), ("data", "model"))
+TARGET = 3.5
+MAX_STEPS = 120
+for rows in (16, 64, 128):              # growing effective batch
+    for name in ("adascale", "adasum"):
+        cfg = EngineConfig(combine=name, span=8, backend="gspmd_tree",
+                           optimizer="momentum", lr=0.05, seq_len=32,
+                           global_batch=rows, data_seed=11)
+        sess = TrainSession.from_config(cfg, model=model, mesh=mesh,
+                                        callbacks=[])
+        steps_to = -1
+        loss = float("nan")
+        for step in range(MAX_STEPS):
+            loss = sess.step(sess.batch(step))["loss"]
+            if not np.isfinite(loss):
+                break
+            if loss < TARGET and steps_to < 0:
+                steps_to = step + 1
+        print("RESULT " + json.dumps({
+            "batch": rows, "combine": name, "steps_to_target": steps_to,
+            "final_loss": round(float(loss), 4)}))
+"""
+
+
+def main():
+    out = run_devices(CODE, devices=8, timeout=3600)
+    runs = [json.loads(line[len("RESULT "):])
+            for line in out.splitlines() if line.startswith("RESULT ")]
+    by_batch = {}
+    for r in runs:
+        by_batch.setdefault(r["batch"], {})[r["combine"]] = {
+            "steps_to_target": r["steps_to_target"],
+            "final_loss": r["final_loss"]}
+        emit(f"fig6_b{r['batch']}_{r['combine']}", 0.0,
+             f"steps_to_target={r['steps_to_target']};"
+             f"final_loss={r['final_loss']}")
+    result = {"target_loss": 3.5, "span": 8, "max_steps": 120,
+              "batches": by_batch}
+    OUT.write_text(json.dumps(result, indent=2) + "\n")
+    emit("fig6_done", 0.0, f"wrote {OUT.name}")
+    return result
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=2))

@@ -46,6 +46,14 @@ def _leaf_files(tree: PyTree) -> List[str]:
     return [f"leaf-{i:05d}.npy" for i in range(len(leaves))]
 
 
+def _leaf_paths(tree: PyTree) -> List[str]:
+    """Stable string path per leaf (jax keystr), e.g. "['params']['embed']".
+    Written into the manifest so subtree restores (restore_params) can
+    address leaves by name instead of by flatten position."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(path) for path, _ in flat]
+
+
 class CheckpointManager:
     def __init__(self, root: str, keep: int = 3):
         self.root = Path(root)
@@ -68,15 +76,17 @@ class CheckpointManager:
             tmp.mkdir(parents=True)
             leaves, treedef = jax.tree.flatten(state)
             files = _leaf_files(state)
+            paths = _leaf_paths(state)
             meta = {"step": step, "n_leaves": len(leaves),
                     "time": time.time(),
                     "leaves": []}
-            for i, (leaf, fname) in enumerate(zip(leaves, files)):
+            for i, (leaf, fname, lpath) in enumerate(
+                    zip(leaves, files, paths)):
                 if host_owns is not None and not host_owns(i):
                     continue
                 arr = np.asarray(jax.device_get(leaf))
                 np.save(tmp / fname, arr)
-                meta["leaves"].append({"file": fname,
+                meta["leaves"].append({"file": fname, "path": lpath,
                                        "shape": list(arr.shape),
                                        "dtype": str(arr.dtype)})
             (tmp / "manifest.json").write_text(json.dumps(meta))
@@ -134,6 +144,46 @@ class CheckpointManager:
             else:
                 out.append(jnp.asarray(arr))
         return jax.tree.unflatten(treedef, out)
+
+    def restore_params(self, template: PyTree, step: Optional[int] = None,
+                       shardings: Optional[PyTree] = None) -> PyTree:
+        """Params-only restore from a full train-state checkpoint: loads
+        the leaves under the "params" subtree, addressed by manifest
+        *path* (not flatten position), into the structure of `template`
+        (a params pytree — concrete arrays or ShapeDtypeStructs).
+
+        This is what lets a ServeEngine/ServeSession serve trained
+        weights without reconstructing the optimizer state the training
+        run checkpointed alongside them."""
+        step = step if step is not None else self.latest_step()
+        assert step is not None, f"no checkpoints under {self.root}"
+        d = self.root / f"step_{step:08d}"
+        meta = json.loads((d / "manifest.json").read_text())
+        by_path = {l["path"]: l["file"] for l in meta["leaves"]
+                   if "path" in l}
+        if not by_path:
+            raise ValueError(
+                f"{d} predates path-indexed manifests; re-save the "
+                f"checkpoint (or restore the full state and take "
+                f"state['params'])")
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        shard_leaves = (jax.tree.leaves(shardings)
+                        if shardings is not None else [None] * len(flat))
+        out = []
+        for (path, leaf), sh in zip(flat, shard_leaves):
+            key = "['params']" + jax.tree_util.keystr(path)
+            if key not in by_path:
+                raise KeyError(f"checkpoint {d} has no leaf {key}; "
+                               f"was it saved from a compatible model?")
+            arr = np.load(d / by_path[key])
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                                 f"model shape {tuple(leaf.shape)}")
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jnp.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)
 
     # ------------------------------------------------- SIGTERM handling
     def install_preemption_handler(self, save_fn):
@@ -202,6 +252,10 @@ class AsyncCheckpointManager(CheckpointManager):
     def restore(self, like: PyTree, step=None, shardings=None) -> PyTree:
         self.wait()
         return super().restore(like, step, shardings)
+
+    def restore_params(self, template, step=None, shardings=None) -> PyTree:
+        self.wait()
+        return super().restore_params(template, step, shardings)
 
     def close(self):
         self.wait()

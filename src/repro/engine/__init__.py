@@ -7,28 +7,36 @@
 
 Layers:
   config    EngineConfig — one round-trippable config (policy + combiner
-            + data + optimizer + checkpointing + pipeline knobs) with
-            per-arch presets
+            + data + optimizer + checkpointing + pipeline + serving
+            knobs) with per-arch presets
   registry  string-keyed combiner registry (@register_combiner)
   build     build_runtime — model + mesh + policy -> step functions
   session   TrainSession / ServeSession + callback hooks
   pipeline  StepPipeline (prefetch + async-checkpoint overlapped loop)
             and fit_elastic (straggler flag -> halve-DP restart driver)
+  serving   ServeEngine — request-level serving: continuous batching
+            over a slotted KV cache, fused prefill, checkpoint
+            hot-reload (GenerationRequest / RequestHandle surface)
 """
 from .config import EngineConfig
 from .registry import (available_combiners, get_combiner_factory,
                        make_combiner, register_combiner, registry_key)
-from .build import (EngineWarning, Runtime, build_runtime, make_serve_step)
+from .build import (EngineWarning, Runtime, build_runtime,
+                    make_batched_decode_step, make_serve_step)
 from .session import (Callback, CheckpointCallback, FailureInjectionCallback,
                       LoggingCallback, ServeSession, StragglerCallback,
                       TrainSession, default_callbacks)
 from .pipeline import StepPipeline, fit_elastic
+from .serving import (GenerationRequest, HotReloader, RequestHandle,
+                      ServeEngine)
 
 __all__ = [
     "EngineConfig", "TrainSession", "ServeSession",
+    "ServeEngine", "GenerationRequest", "RequestHandle", "HotReloader",
     "register_combiner", "make_combiner", "available_combiners",
     "get_combiner_factory", "registry_key",
-    "build_runtime", "make_serve_step", "Runtime", "EngineWarning",
+    "build_runtime", "make_serve_step", "make_batched_decode_step",
+    "Runtime", "EngineWarning",
     "Callback", "LoggingCallback", "CheckpointCallback",
     "StragglerCallback", "FailureInjectionCallback", "default_callbacks",
     "StepPipeline", "fit_elastic",

@@ -308,3 +308,18 @@ def make_serve_step(model: Model, greedy: bool = True):
         nxt = jnp.argmax(logits[:, -1:, :], axis=-1).astype(tokens.dtype)
         return nxt, cache
     return serve_step
+
+
+def make_batched_decode_step(model: Model):
+    """Slotted decode step for continuous batching: the cache carries a
+    per-slot position vector ([B], from `init_cache(per_slot=True)`), so
+    one jitted call advances B requests sitting at *different* sequence
+    lengths — each row writes its KV at its own position and masks its
+    own length. Rows whose slot is free compute garbage that the next
+    admission's prefill insert fully overwrites; shapes never depend on
+    the active set, so the scheduler's churn never recompiles."""
+    def decode_step(params, tokens, cache):
+        logits, cache = model.decode_step(params, tokens, cache)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+    return decode_step

@@ -79,6 +79,14 @@ class EngineConfig:
     elastic: bool = False       # consume straggler flags: checkpoint +
                                 # halve-DP restart (needs ckpt_dir)
 
+    # ---- serving (engine/serving.ServeEngine) ----
+    max_slots: int = 8          # continuous-batching decode slot pool
+    max_len: int = 0            # per-slot cache capacity; 0 => seq_len
+    hot_reload: bool = False    # poll ckpt_dir mid-stream; new requests
+                                # see new weights, in-flight finish on old
+    prefill_mode: str = "auto"  # 'parallel' (one fused forward) | 'scan'
+                                # (fused decode scan) | 'auto' (by family)
+
     # ------------------------------------------------------------ validation
     def validate(self, dp_total: Optional[int] = None) -> "EngineConfig":
         """Cross-field checks that used to live ad hoc in launch/train.py.
@@ -105,6 +113,16 @@ class EngineConfig:
         if self.elastic and not self.ckpt_dir:
             raise ValueError("elastic=True needs ckpt_dir (restarts "
                              "resume from the checkpoint manifest)")
+        if self.max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {self.max_slots}")
+        if self.max_len < 0:
+            raise ValueError(f"max_len must be >= 0, got {self.max_len}")
+        if self.hot_reload and not self.ckpt_dir:
+            raise ValueError("hot_reload=True needs ckpt_dir (the serve "
+                             "engine watches it for new checkpoints)")
+        if self.prefill_mode not in ("auto", "parallel", "scan"):
+            raise ValueError(f"prefill_mode={self.prefill_mode!r}; "
+                             f"expected auto | parallel | scan")
         if dp_total is not None:
             span = self.span or dp_total
             if span > dp_total or dp_total % span:
@@ -225,6 +243,16 @@ class EngineConfig:
         ap.add_argument("--elastic", action="store_true", default=None,
                         help="straggler flag => checkpoint + halve-DP "
                         "restart (needs --ckpt-dir)")
+        ap.add_argument("--max-slots", type=int, default=None,
+                        dest="max_slots",
+                        help="serving: continuous-batching slot pool size")
+        ap.add_argument("--max-len", type=int, default=None, dest="max_len",
+                        help="serving: per-slot cache capacity (0 => seq)")
+        ap.add_argument("--hot-reload", action="store_true", default=None,
+                        dest="hot_reload",
+                        help="serving: pick up new checkpoints mid-stream")
+        ap.add_argument("--prefill-mode", default=None, dest="prefill_mode",
+                        choices=["auto", "parallel", "scan"])
         args, extra = ap.parse_known_args(argv)
         if extra:
             raise SystemExit(f"unknown arguments: {extra}")

@@ -1,0 +1,23 @@
+"""repro.engine.serving — request-level serving subsystem.
+
+    ServeEngine      submit/step/drain engine: continuous batching over a
+                     slotted KV cache, fused prefill, hot-reload
+    GenerationRequest / RequestHandle
+                     the request/response surface (streaming callbacks)
+    ContinuousBatchingScheduler
+                     host-side slot admission/retirement policy
+    HotReloader      checkpoint watcher -> versioned param swaps
+    insert_rows / select_rows / slot_positions
+                     the slotted-cache device primitives
+"""
+from .engine import ServeEngine
+from .reload import HotReloader
+from .scheduler import (ContinuousBatchingScheduler, GenerationRequest,
+                        RequestHandle)
+from .slots import insert_rows, select_rows, slot_positions
+
+__all__ = [
+    "ServeEngine", "GenerationRequest", "RequestHandle",
+    "ContinuousBatchingScheduler", "HotReloader",
+    "insert_rows", "select_rows", "slot_positions",
+]

@@ -1,0 +1,382 @@
+"""ServeEngine — request-level serving over the EngineConfig surface.
+
+    engine = ServeEngine.from_config(
+        EngineConfig(arch="qwen3-32b", reduced=True, max_slots=8,
+                     max_len=128))
+    h = engine.submit(GenerationRequest(prompt, max_new_tokens=32))
+    engine.drain()                       # or: while engine.step(): ...
+    h.tokens                             # generated ids (streamed too)
+
+Compared to the legacy `ServeSession.generate(prompts, gen_len)` batch
+loop this is a different shape of API — requests, not batches:
+
+  * **continuous batching** — a fixed pool of `max_slots` decode slots
+    over ONE slotted KV cache (per-slot write positions / length masks);
+    requests are admitted the moment a slot frees and retired on
+    EOS/budget, with no recompilation as the active set churns;
+  * **fused prefill** — the whole prompt runs through one
+    `model.prefill_cache` forward (flash-attention path on TPU) instead
+    of T sequential jitted `decode_step` dispatches; recurrent-state
+    families (mamba/RWKV) use a fused `lax.scan` of decode steps —
+    still one dispatch, bitwise-faithful to stepped decode;
+  * **checkpoint hot-reload** — params are versioned; a `HotReloader`
+    watching a (possibly shared, barrier-protected) CheckpointManager
+    swaps in new weights for NEW admissions while in-flight slots keep
+    decoding on the version they started with.
+
+The engine is deliberately single-threaded and tick-driven (`step()` =
+admit + one batched decode + retire): callers own the concurrency story,
+and tests get determinism for free.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .reload import HotReloader
+from .scheduler import (ContinuousBatchingScheduler, GenerationRequest,
+                        RequestHandle)
+from .slots import insert_rows_at, select_rows
+
+PyTree = Any
+
+_PREFILL_MODES = ("auto", "parallel", "scan")
+
+
+def _bucket(n: int, max_len: int) -> int:
+    """Prompt padding bucket: next power of two (min 8), clipped to the
+    cache capacity — bounds prefill recompilation at log2(max_len)."""
+    b = 8
+    while b < n:
+        b *= 2
+    return min(b, max_len)
+
+
+def resolve_serve_parts(config, *, model=None, mesh=None, params=None,
+                        checkpoint=None, attn_chunk: int = 64):
+    """Shared ServeEngine/ServeSession bootstrap: local mesh, arch ->
+    model (preset head padding), checkpoint manager from ckpt_dir, and
+    params — freshly initialized, or the params-only restore of the
+    latest checkpoint when one exists. Returns
+    (model, mesh, params, checkpoint, loaded_step)."""
+    from repro.checkpoint import CheckpointManager
+    from repro.configs.base import get_config, get_reduced, pad_heads_for_tp
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import build_model
+
+    config.validate()
+    if mesh is None:
+        mesh = make_local_mesh(config.data_mesh or 1, config.model_mesh)
+    if model is None:
+        if not config.arch:
+            raise ValueError("EngineConfig.arch is empty — pass a built "
+                             "Model via from_config(model=...)")
+        mcfg = (get_reduced(config.arch) if config.reduced
+                else get_config(config.arch))
+        if config.pad_heads:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            mcfg = pad_heads_for_tp(mcfg, sizes.get("model", 1))
+        model = build_model(mcfg, attn_chunk=attn_chunk,
+                            param_dtype=jnp.dtype(config.param_dtype))
+    if checkpoint is None and config.ckpt_dir:
+        checkpoint = CheckpointManager(config.ckpt_dir)
+    loaded_step = None
+    if params is None:
+        if checkpoint is not None and checkpoint.latest_step() is not None:
+            template = jax.eval_shape(model.init, jax.random.key(0))
+            loaded_step = checkpoint.latest_step()
+            params = checkpoint.restore_params(template, loaded_step)
+        else:
+            params = model.init(jax.random.key(0))
+    return model, mesh, params, checkpoint, loaded_step
+
+
+def _make_parallel_prefill(model, cap: int):
+    def prefill(params, tokens, lengths):
+        logits, cache = model.prefill_cache(params, tokens, lengths, cap)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+    return prefill
+
+
+def _steady_cache_dtypes(model, params, batch: int, cap: int):
+    """Fixed-point of decode_step's output dtypes: recurrent families
+    (mamba conv history, RWKV token shifts) re-emit state in the compute
+    dtype, so a freshly-initialized cache can change leaf dtypes after
+    the first step. Serving needs the steady layout up front — the decode
+    tick must never retrace and the prefill scan carry must be stable —
+    and starting there is exact: the initial zeros are representable in
+    either dtype."""
+    cache = model.init_cache(params, batch, cap, per_slot=True)
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    for _ in range(3):
+        new = jax.eval_shape(model.decode_step, params, tok, cache)[1]
+        drift = jax.tree.leaves(jax.tree.map(
+            lambda c, n: c.dtype != n.dtype, cache, new))
+        if not any(drift):
+            break
+        cache = jax.tree.map(lambda c, n: jnp.zeros(c.shape, n.dtype),
+                             cache, new)
+    else:
+        raise ValueError(f"{model.cfg.name}: decode cache dtypes do not "
+                         f"reach a fixed point")
+    return jax.tree.map(lambda c: c.dtype, cache)
+
+
+def _make_scan_prefill(model, cap: int, dtypes):
+    """Fused stepped prefill: a lax.scan of decode steps — ONE dispatch
+    per prompt (vs T), bitwise-identical math to sequential decode. The
+    fused path for recurrent-state families whose chunked training
+    forward cannot surrender its state mid-sequence."""
+    def prefill(params, tokens, lengths):
+        B, P = tokens.shape
+        cache0 = jax.tree.map(
+            lambda c, dt: c.astype(dt),
+            model.init_cache(params, B, cap, per_slot=True), dtypes)
+        last0 = jnp.zeros((B, 1), jnp.int32)
+
+        def body(carry, t):
+            cache, last = carry
+            tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+            logits, new_cache = model.decode_step(params, tok, cache)
+            cache = select_rows(t < lengths, new_cache, cache)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            last = jnp.where((t == lengths - 1)[:, None], nxt[:, None], last)
+            return (cache, last), None
+
+        (cache, last), _ = jax.lax.scan(body, (cache0, last0),
+                                        jnp.arange(P))
+        return last, cache
+    return prefill
+
+
+class ServeEngine:
+    """Continuous-batching serving engine for one (model, mesh, config)."""
+
+    def __init__(self, config, model, mesh, params: PyTree, *,
+                 checkpoint=None, loaded_step: Optional[int] = None):
+        cfg = model.cfg
+        if cfg.is_encoder_decoder or cfg.frontend != "none":
+            raise ValueError(
+                f"ServeEngine serves decoder-only text models; "
+                f"{cfg.name} (frontend={cfg.frontend}, "
+                f"enc-dec={cfg.is_encoder_decoder}) still goes through "
+                f"ServeSession.generate(stepped_prefill=True)")
+        self.config = config
+        self.model = model
+        self.mesh = mesh
+        self.max_slots = config.max_slots
+        self.max_len = config.max_len or config.seq_len
+        self.scheduler = ContinuousBatchingScheduler(self.max_slots,
+                                                     self.max_len)
+        mode = config.prefill_mode
+        if mode not in _PREFILL_MODES:
+            raise ValueError(f"prefill_mode={mode!r}; one of {_PREFILL_MODES}")
+        if mode == "auto":
+            mode = "parallel" if model.prefill_cache is not None else "scan"
+        if mode == "parallel" and model.prefill_cache is None:
+            raise ValueError(
+                f"{cfg.name} ({cfg.family}) has no parallel prefill "
+                f"(recurrent state); use prefill_mode='scan'")
+        self.prefill_mode = mode
+
+        # versioned params: in-flight slots pin the version they were
+        # admitted with; hot-reload bumps _version for new admissions
+        self._params: Dict[int, PyTree] = {0: params}
+        self._version = 0
+        self._loaded_step = loaded_step
+        self.checkpoint = checkpoint
+        self._reloader: Optional[HotReloader] = None
+        if checkpoint is not None and config.hot_reload:
+            template = jax.eval_shape(model.init, jax.random.key(0))
+            self._reloader = HotReloader(checkpoint, template,
+                                         loaded_step=loaded_step)
+
+        # steady-state leaf dtypes: the decode tick never retraces and
+        # the prefill paths land rows in exactly this layout
+        self._cache_dtypes = _steady_cache_dtypes(model, params,
+                                                  self.max_slots,
+                                                  self.max_len)
+        self.cache = jax.tree.map(
+            lambda c, dt: c.astype(dt),
+            model.init_cache(params, self.max_slots, self.max_len,
+                             per_slot=True), self._cache_dtypes)
+        self._tokens = np.zeros((self.max_slots, 1), np.int32)
+        # NOTE: no buffer donation — hot-reload may decode the same cache
+        # under two param versions in one tick
+        from ..build import make_batched_decode_step
+        self._decode = jax.jit(make_batched_decode_step(model))
+        self._insert = jax.jit(insert_rows_at)
+        self._select = jax.jit(select_rows)
+        self._prefill = jax.jit(
+            _make_parallel_prefill(model, self.max_len) if mode == "parallel"
+            else _make_scan_prefill(model, self.max_len,
+                                    self._cache_dtypes))
+        self.stats = {"submitted": 0, "completed": 0, "generated_tokens": 0,
+                      "prefill_calls": 0, "decode_steps": 0, "reloads": 0,
+                      "started_at": None}
+
+    # ------------------------------------------------------- construction
+    @classmethod
+    def from_config(cls, config, *, model=None, mesh=None, params=None,
+                    checkpoint=None, attn_chunk: int = 64) -> "ServeEngine":
+        """Build model/mesh/params from the same EngineConfig surface as
+        TrainSession; with `ckpt_dir` set, serves the *trained* weights
+        via the params-only restore (and hot-reloads later saves when
+        `hot_reload=True`)."""
+        model, mesh, params, checkpoint, loaded_step = resolve_serve_parts(
+            config, model=model, mesh=mesh, params=params,
+            checkpoint=checkpoint, attn_chunk=attn_chunk)
+        return cls(config, model, mesh, params, checkpoint=checkpoint,
+                   loaded_step=loaded_step)
+
+    # ------------------------------------------------------------- submit
+    def submit(self, request: GenerationRequest) -> RequestHandle:
+        """Enqueue a request; it is admitted to a slot by a later
+        `step()`. Raises immediately if it can never fit a slot."""
+        handle = RequestHandle(request)
+        self.scheduler.submit(handle)
+        self.stats["submitted"] += 1
+        if self.stats["started_at"] is None:
+            self.stats["started_at"] = time.perf_counter()
+        return handle
+
+    # ------------------------------------------------------------- params
+    def swap_params(self, params: PyTree, step: Optional[int] = None):
+        """Hot-swap: new admissions decode with `params`; slots already
+        in flight finish on their admitted version."""
+        self._version += 1
+        self._params[self._version] = params
+        self._loaded_step = step
+        self.stats["reloads"] += 1
+
+    def _gc_versions(self):
+        live = {h.version for h in self.scheduler.active.values()}
+        live.add(self._version)
+        for v in [v for v in self._params if v not in live]:
+            del self._params[v]
+
+    @property
+    def params(self) -> PyTree:
+        """The params new admissions will see."""
+        return self._params[self._version]
+
+    @property
+    def loaded_step(self) -> Optional[int]:
+        return self._loaded_step
+
+    # --------------------------------------------------------------- tick
+    def step(self) -> bool:
+        """One scheduler tick: hot-reload poll -> admit (fused prefill)
+        -> one batched decode over the active slots -> retire finished.
+        Returns True while queued or in-flight work remains."""
+        if self._reloader is not None:
+            got = self._reloader.poll()
+            if got is not None:
+                self.swap_params(got[1], step=got[0])
+        admitted = self.scheduler.admit()
+        if admitted:
+            self._admit_batch(admitted)
+        if self.scheduler.active:
+            self._decode_tick()
+        self._gc_versions()
+        return self.scheduler.has_work
+
+    def drain(self) -> None:
+        """Run ticks until every submitted request has completed."""
+        while self.step():
+            pass
+
+    # ----------------------------------------------------------- internals
+    def _admit_batch(self, admitted):
+        """Fused prefill for this tick's admissions, grouped by prompt
+        bucket: one prefill dispatch + one cache scatter per group (not
+        per request) — the batched-arrival fast path."""
+        groups: Dict[int, list] = {}
+        for slot, handle in admitted:
+            handle.version = self._version
+            P = _bucket(len(handle.request.prompt), self.max_len)
+            groups.setdefault(P, []).append((slot, handle))
+        params = self._params[self._version]
+        for P, group in groups.items():
+            n = len(group)
+            toks = np.zeros((n, P), np.int32)
+            lengths = np.zeros((n,), np.int32)
+            for i, (_, handle) in enumerate(group):
+                prompt = handle.request.prompt
+                toks[i, :len(prompt)] = prompt
+                lengths[i] = len(prompt)
+            nxt, rows = self._prefill(params, jnp.asarray(toks),
+                                      jnp.asarray(lengths))
+            slots = jnp.asarray([slot for slot, _ in group])
+            self.cache = self._insert(self.cache, rows, slots)
+            self.stats["prefill_calls"] += 1
+            nxt = np.asarray(nxt)
+            for i, (_, handle) in enumerate(group):
+                self._commit(handle, int(nxt[i, 0]))
+
+    def _decode_tick(self):
+        active = dict(self.scheduler.active)       # slot -> handle
+        versions = sorted({h.version for h in active.values()})
+        toks = jnp.asarray(self._tokens)
+        if len(versions) == 1:
+            nxt, self.cache = self._decode(self._params[versions[0]], toks,
+                                           self.cache)
+            nxt = np.asarray(nxt)
+        else:
+            # transition tick(s): decode once per live version, then keep
+            # each slot's row from the version it is pinned to
+            outs = {v: self._decode(self._params[v], toks, self.cache)
+                    for v in versions}
+            merged = outs[versions[0]][1]
+            nxt = np.asarray(outs[versions[0]][0]).copy()
+            for v in versions[1:]:
+                mask = np.zeros((self.max_slots,), bool)
+                for slot, h in active.items():
+                    if h.version == v:
+                        mask[slot] = True
+                merged = self._select(jnp.asarray(mask), outs[v][1], merged)
+                nxt[mask] = np.asarray(outs[v][0])[mask]
+            self.cache = merged
+        self.stats["decode_steps"] += 1
+        for slot, handle in active.items():
+            self._commit(handle, int(nxt[slot, 0]))
+
+    def _commit(self, handle: RequestHandle, token: int):
+        """Record one generated token; stream it; retire if finished."""
+        handle.tokens.append(token)
+        self._tokens[handle.slot, 0] = token
+        self.stats["generated_tokens"] += 1
+        if handle.first_token_at is None:
+            handle.first_token_at = time.perf_counter()
+        if handle.request.stream is not None:
+            handle.request.stream(handle, token)
+        reason = self.scheduler.should_retire(handle, token)
+        if reason is not None:
+            self.scheduler.retire(handle.slot, reason)
+            self.stats["completed"] += 1
+
+    # ---------------------------------------------------------- reporting
+    def throughput(self) -> Dict[str, float]:
+        """Completion/throughput fields (the serve CLI prints these)."""
+        started = self.stats["started_at"]
+        wall = (time.perf_counter() - started) if started else 0.0
+        toks = self.stats["generated_tokens"]
+        return {"completed": self.stats["completed"],
+                "submitted": self.stats["submitted"],
+                "generated_tokens": toks,
+                "decode_steps": self.stats["decode_steps"],
+                "prefill_calls": self.stats["prefill_calls"],
+                "reloads": self.stats["reloads"],
+                "wall_s": wall,
+                "tok_s": toks / wall if wall > 0 else 0.0}
+
+    def close(self):
+        if self.checkpoint is not None:
+            close = getattr(self.checkpoint, "close", None)
+            if close is not None:
+                close()

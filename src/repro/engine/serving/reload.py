@@ -1,0 +1,57 @@
+"""Checkpoint hot-reload: swap serving weights mid-stream.
+
+A `HotReloader` watches a checkpoint directory (written by a concurrent
+TrainSession) and hands new params to the ServeEngine as versioned
+weights: requests admitted after the swap decode with the new params
+while in-flight requests finish on the version they started with — no
+drain, no drop.
+
+Safety comes from two existing mechanisms, reused rather than
+reinvented:
+
+  * atomic checkpoints — `latest_step()` only ever lists fully-renamed
+    step directories, so a reader on its own manager can never observe a
+    partial write;
+  * AsyncCheckpointManager barriers — when the reloader SHARES the
+    training run's async manager (same process, e.g. tests or a sidecar
+    deployment), `latest_step()`/`restore_params()` first drain the
+    in-flight background write, so the reloader sees the checkpoint the
+    trainer just scheduled instead of racing it.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+PyTree = Any
+
+
+class HotReloader:
+    """Polls a CheckpointManager; restores the params subtree on change."""
+
+    def __init__(self, manager, template: PyTree, *,
+                 poll_every: int = 1, loaded_step: Optional[int] = None):
+        """manager: any CheckpointManager (an AsyncCheckpointManager's
+        barriers make shared-manager polling race-free). template: a
+        params pytree (arrays or ShapeDtypeStructs) to restore into.
+        poll_every: only hit the filesystem every N `poll()` calls.
+        loaded_step: step already serving (skip re-loading it)."""
+        self.manager = manager
+        self.template = template
+        self.poll_every = max(1, poll_every)
+        self.loaded_step = loaded_step
+        self._tick = 0
+
+    def poll(self) -> Optional[Tuple[int, PyTree]]:
+        """Returns (step, params) when a newer checkpoint landed, else
+        None. Never raises on an empty directory."""
+        self._tick += 1
+        if (self._tick - 1) % self.poll_every:
+            return None
+        latest = self.manager.latest_step()      # async manager: barrier
+        if latest is None or latest == self.loaded_step:
+            return None
+        if self.loaded_step is not None and latest < self.loaded_step:
+            return None                          # gc'd / rolled back dir
+        params = self.manager.restore_params(self.template, latest)
+        self.loaded_step = latest
+        return latest, params

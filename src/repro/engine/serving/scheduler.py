@@ -1,0 +1,135 @@
+"""Request-level scheduling for ServeEngine: continuous batching.
+
+The scheduler is pure host-side bookkeeping (no jax) so its admission /
+retirement policy is unit-testable without a model: a FIFO queue feeds a
+fixed pool of `max_slots` decode slots; a request is admitted the moment
+a slot frees up (not when the whole batch drains — that is the
+"continuous" in continuous batching) and retired on EOS or on its token
+budget. Slot count and cache capacity are fixed at engine build, so the
+churn of the active set never changes any device-side shapes — no
+recompilation as requests come and go.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+_REQ_IDS = itertools.count()
+
+
+@dataclasses.dataclass
+class GenerationRequest:
+    """One decode job: a prompt and its sampling budget.
+
+    stream: optional per-token callback `fn(handle, token)` fired as each
+    token is committed (including the one produced by the prefill)."""
+    prompt: np.ndarray                      # [T] int token ids
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    stream: Optional[Callable] = None
+    request_id: int = dataclasses.field(
+        default_factory=lambda: next(_REQ_IDS))
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+
+class RequestHandle:
+    """Live view of a submitted request. The engine appends to `tokens`
+    as decode ticks complete; `done` flips on retirement."""
+
+    def __init__(self, request: GenerationRequest):
+        self.request = request
+        self.tokens: List[int] = []          # generated tokens (no prompt)
+        self.status = "queued"               # queued | running | done
+        self.slot: Optional[int] = None
+        self.version: Optional[int] = None   # params version when admitted
+        self.finish_reason: Optional[str] = None   # eos | length
+        self.submitted_at = time.perf_counter()
+        self.first_token_at: Optional[float] = None
+        self.done_at: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.status == "done"
+
+    @property
+    def output(self) -> np.ndarray:
+        """prompt + generated tokens, the legacy `generate` row layout."""
+        return np.concatenate(
+            [self.request.prompt, np.asarray(self.tokens, np.int32)])
+
+    def __repr__(self):
+        return (f"RequestHandle(id={self.request.request_id}, "
+                f"status={self.status}, slot={self.slot}, "
+                f"tokens={len(self.tokens)})")
+
+
+class ContinuousBatchingScheduler:
+    """FIFO admission into a fixed slot pool; retire on EOS/budget."""
+
+    def __init__(self, max_slots: int, max_len: int):
+        assert max_slots >= 1 and max_len >= 2, (max_slots, max_len)
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.queue: deque = deque()
+        self.active: Dict[int, RequestHandle] = {}
+        self._free: List[int] = list(range(max_slots))
+
+    # ---------------------------------------------------------- lifecycle
+    def submit(self, handle: RequestHandle):
+        req = handle.request
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.request_id}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds the slot "
+                f"capacity max_len={self.max_len}")
+        self.queue.append(handle)
+
+    def admit(self) -> List[Tuple[int, RequestHandle]]:
+        """Move queued requests into free slots (FIFO). Returns the
+        (slot, handle) pairs admitted this tick."""
+        out = []
+        while self._free and self.queue:
+            slot = self._free.pop(0)
+            handle = self.queue.popleft()
+            handle.slot, handle.status = slot, "running"
+            self.active[slot] = handle
+            out.append((slot, handle))
+        return out
+
+    def should_retire(self, handle: RequestHandle, token: int) -> Optional[str]:
+        req = handle.request
+        if req.eos_id is not None and token == req.eos_id:
+            return "eos"
+        if len(handle.tokens) >= req.max_new_tokens:
+            return "length"
+        return None
+
+    def retire(self, slot: int, reason: str):
+        handle = self.active.pop(slot)
+        handle.status, handle.finish_reason = "done", reason
+        handle.done_at = time.perf_counter()
+        handle.slot = None
+        self._free.append(slot)
+
+    # -------------------------------------------------------------- state
+    @property
+    def has_work(self) -> bool:
+        return bool(self.active or self.queue)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def occupancy(self) -> float:
+        return len(self.active) / self.max_slots

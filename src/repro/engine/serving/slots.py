@@ -1,0 +1,65 @@
+"""Slotted-cache device ops for continuous batching.
+
+A slotted decode cache (``model.init_cache(..., per_slot=True)``) stacks
+layers on axis 0 and keeps the batch (slot) axis at position 1 of EVERY
+leaf — including the per-slot ``pos`` counters, which become [L, B].
+That invariant is what makes the two primitives here fully generic over
+model families (GQA / MLA / SWA / MoE caches, mamba and RWKV recurrent
+states alike):
+
+  * ``insert_rows``  — admit: overwrite one slot's rows with a freshly
+    prefilled single-row cache (this IS the slot reset: every piece of
+    per-slot state lives on the batch axis);
+  * ``select_rows``  — merge: per-slot choice between two cache versions
+    (used by checkpoint hot-reload, where in-flight slots keep decoding
+    on the params they were admitted with).
+
+Both are shape-stable in the slot index, so the scheduler can admit and
+retire requests at any rate without triggering recompilation.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def insert_rows(cache: PyTree, row: PyTree, slot) -> PyTree:
+    """Write a 1-row cache pytree into `cache` at slot index `slot`
+    (traced scalar — one compilation serves every slot)."""
+    return jax.tree.map(
+        lambda c, r: jax.lax.dynamic_update_slice_in_dim(c, r.astype(c.dtype),
+                                                         slot, axis=1),
+        cache, row)
+
+
+def insert_rows_at(cache: PyTree, rows: PyTree, slots: jnp.ndarray) -> PyTree:
+    """Scatter an n-row cache pytree into `cache` at (possibly
+    non-contiguous) slot indices `slots` [n] — the admission path when
+    several requests prefill together in one tick. Compiles once per
+    group size n <= max_slots."""
+    return jax.tree.map(
+        lambda c, r: c.at[:, slots].set(r.astype(c.dtype)),
+        cache, rows)
+
+
+def select_rows(mask: jnp.ndarray, new: PyTree, old: PyTree) -> PyTree:
+    """Per-slot select: rows where mask[b] take `new`, others keep `old`.
+    mask: bool [B] over the slot axis (axis 1 of every leaf)."""
+    def sel(a, b):
+        m = mask.reshape((1, mask.shape[0]) + (1,) * (a.ndim - 2))
+        return jnp.where(m, a, b)
+    return jax.tree.map(sel, new, old)
+
+
+def slot_positions(cache: PyTree) -> jnp.ndarray:
+    """The per-slot sequence positions [B] (from the first cache leaf
+    carrying them) — introspection for tests and stats."""
+    for leaf in jax.tree.leaves(cache):
+        if leaf.ndim == 2 and leaf.dtype == jnp.int32:
+            return leaf[0]
+    raise ValueError("cache has no per-slot pos leaf; was it built with "
+                     "per_slot=True?")

@@ -251,16 +251,26 @@ class TrainSession:
 # ---------------------------------------------------------------- ServeSession
 
 class ServeSession:
-    """Batched serving over the same config surface: prefill + greedy
-    decode. The second 'one-line' path — mirrors TrainSession."""
+    """Legacy batched-serving surface, now a thin compat wrapper over
+    `repro.engine.serving.ServeEngine`: `generate(prompts, gen_len)`
+    submits one request per row and drains the engine (fused prefill +
+    slotted continuous batching). `stepped_prefill=True` keeps the old
+    one-token-at-a-time loop — the bitwise reference the equivalence
+    tests pin the fused path against. Frontend/enc-dec models (per-batch
+    encoder state, not per-slot) always take the stepped path."""
 
     def __init__(self, config: EngineConfig, model: Model,
-                 mesh: jax.sharding.Mesh, params: PyTree):
+                 mesh: jax.sharding.Mesh, params: PyTree,
+                 checkpoint: Optional[CheckpointManager] = None,
+                 loaded_step: Optional[int] = None):
         self.config = config
         self.model = model
         self.mesh = mesh
         self.params = params
+        self.checkpoint = checkpoint
+        self._loaded_step = loaded_step
         self._step = jax.jit(make_serve_step(model), donate_argnums=(2,))
+        self._engine: Optional[Any] = None      # lazily-built ServeEngine
 
     @classmethod
     def from_config(cls, config: EngineConfig, *,
@@ -268,41 +278,67 @@ class ServeSession:
                     mesh: Optional[jax.sharding.Mesh] = None,
                     params: Optional[PyTree] = None,
                     attn_chunk: int = 64) -> "ServeSession":
-        if mesh is None:
-            mesh = make_local_mesh(config.data_mesh or 1, config.model_mesh)
-        if model is None:
-            if not config.arch:
-                raise ValueError("EngineConfig.arch is empty — pass a "
-                                 "built Model via from_config(model=...)")
-            mcfg = (get_reduced(config.arch) if config.reduced
-                    else get_config(config.arch))
-            if config.pad_heads:
-                sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-                mcfg = pad_heads_for_tp(mcfg, sizes.get("model", 1))
-            model = build_model(mcfg, attn_chunk=attn_chunk,
-                                param_dtype=jnp.dtype(config.param_dtype))
-        if params is None:
-            # fresh init; to serve trained weights pass params= from a
-            # TrainSession (session.state["params"]) — CheckpointManager
-            # leaves are indexed against the full train state, so a
-            # params-only restore is not expressible here
-            params = model.init(jax.random.key(0))
-        return cls(config, model, mesh, params)
+        # shared serve bootstrap (ServeEngine.from_config uses it too):
+        # with ckpt_dir, serves the trained weights via the params-only
+        # restore against the path-indexed manifest
+        from .serving.engine import resolve_serve_parts
+        model, mesh, params, checkpoint, loaded_step = resolve_serve_parts(
+            config, model=model, mesh=mesh, params=params,
+            attn_chunk=attn_chunk)
+        return cls(config, model, mesh, params, checkpoint=checkpoint,
+                   loaded_step=loaded_step)
 
+    # -------------------------------------------------------------- engine
+    def engine(self, max_len: Optional[int] = None):
+        """The ServeEngine behind this session (one engine, lazily built,
+        re-built larger when a call needs more cache capacity). Inherits
+        the session's checkpoint manager, so `hot_reload=True` in the
+        config works here too. Prefer it directly for request-level
+        serving (streaming, staggered arrivals)."""
+        from .serving import ServeEngine
+        need = max_len or self.config.max_len or self.config.seq_len
+        if self._engine is None or self._engine.max_len < need:
+            cap = 1 << (need - 1).bit_length()     # pow2: bounds rebuilds
+            cfg = dataclasses.replace(self.config, max_len=cap)
+            self._engine = ServeEngine(cfg, self.model, self.mesh,
+                                       self.params,
+                                       checkpoint=self.checkpoint,
+                                       loaded_step=self._loaded_step)
+        return self._engine
+
+    # ------------------------------------------------------------ generate
     def generate(self, prompts: jnp.ndarray, gen_len: int,
                  max_len: Optional[int] = None,
-                 frontend_embeds=None) -> jnp.ndarray:
+                 frontend_embeds=None,
+                 stepped_prefill: bool = False) -> jnp.ndarray:
         """prompts: [B, T] int32. Returns [B, T+gen_len]."""
         B, T = prompts.shape
         max_len = max_len or (T + gen_len + 1)
+        cfg = self.model.cfg
+        if (stepped_prefill or frontend_embeds is not None
+                or cfg.is_encoder_decoder or cfg.frontend != "none"):
+            return self._generate_stepped(prompts, gen_len, max_len,
+                                          frontend_embeds)
+        from .serving import GenerationRequest
+        eng = self.engine(max_len)
+        handles = [eng.submit(GenerationRequest(
+            prompt=np.asarray(prompts[i]), max_new_tokens=gen_len))
+            for i in range(B)]
+        eng.drain()
+        return jnp.asarray(np.stack([h.output for h in handles]))
+
+    def _generate_stepped(self, prompts, gen_len, max_len,
+                          frontend_embeds=None) -> jnp.ndarray:
+        """The pre-ServeEngine loop: prompt fed one token at a time
+        through the jitted decode step (T dispatches), then greedy
+        decode. Cache-exact — the fused paths are tested against it."""
+        B, T = prompts.shape
         cfg = self.model.cfg
         if cfg.is_encoder_decoder:
             cache = self.model.init_cache(self.params, B, max_len,
                                           frontend_embeds=frontend_embeds)
         else:
             cache = self.model.init_cache(self.params, B, max_len)
-        # prefill by stepping tokens (cache-exact; a fused prefill is the
-        # prefill_32k dry-run path)
         nxt = prompts[:, :1]
         for t in range(T):
             nxt, cache = self._step(self.params, prompts[:, t:t + 1], cache)

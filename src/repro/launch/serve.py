@@ -1,51 +1,129 @@
-"""Batched serving driver — a thin CLI over `repro.engine.ServeSession`.
+"""Request-level serving driver — a thin CLI over `ServeEngine`.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --reduced \
-        --batch 4 --prompt-len 32 --gen 16
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --reduced \
+        --requests 3 --prompt-len 32 --gen 16 --max-slots 2 --stagger 2
+
+Submits `--requests` synthetic prompts (lengths jittered around
+--prompt-len, arrivals staggered by --stagger decode ticks), drives the
+continuous-batching engine to completion, and prints the throughput
+fields (`completed=`, `tok_s=`, ...). With --ckpt-dir it serves the
+trained weights from the latest checkpoint; add --hot-reload to pick up
+new checkpoints mid-stream. `--legacy` runs the old batch-synchronous
+`ServeSession.generate` stepped loop instead (same workload) for
+comparison.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
-import jax
+import numpy as np
 import jax.numpy as jnp
 
-from repro.engine import EngineConfig, ServeSession
+from repro.engine import (EngineConfig, GenerationRequest, ServeEngine,
+                          ServeSession)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="slot capacity (0 => prompt+gen+1)")
+    ap.add_argument("--stagger", type=int, default=1,
+                    help="decode ticks between request arrivals")
+    ap.add_argument("--prefill-mode", default="auto",
+                    choices=["auto", "parallel", "scan"])
+    ap.add_argument("--ckpt-dir", default="", dest="ckpt_dir")
+    ap.add_argument("--hot-reload", action="store_true", dest="hot_reload")
+    ap.add_argument("--legacy", action="store_true",
+                    help="old ServeSession.generate stepped loop")
     ap.add_argument("--data-mesh", type=int, default=0)
     ap.add_argument("--model-mesh", type=int, default=1)
     args = ap.parse_args(argv)
 
+    max_len = args.max_len or (args.prompt_len + args.gen + 1)
+    if max_len <= args.gen:
+        ap.error(f"--max-len {max_len} leaves no room for a prompt "
+                 f"before --gen {args.gen} tokens")
     cfg = EngineConfig(arch=args.arch, reduced=args.reduced,
-                       data_mesh=args.data_mesh, model_mesh=args.model_mesh)
-    session = ServeSession.from_config(cfg)
-    mcfg = session.model.cfg
-    prompts = jax.random.randint(jax.random.key(1),
-                                 (args.batch, args.prompt_len), 0,
-                                 mcfg.vocab_size)
-    fe = None
-    if mcfg.frontend != "none":
-        ft = mcfg.frontend_tokens or args.prompt_len
-        fe = jnp.zeros((args.batch, ft, mcfg.frontend_dim), jnp.float32)
-    t0 = time.perf_counter()
-    out = session.generate(prompts, args.gen,
-                           max_len=args.prompt_len + args.gen + 1,
-                           frontend_embeds=fe)
-    dt = time.perf_counter() - t0
-    toks = args.batch * args.gen
-    print(f"[serve] generated {out.shape} in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s incl. prefill+compile)")
-    print(out[:, args.prompt_len:])
-    return out
+                       data_mesh=args.data_mesh, model_mesh=args.model_mesh,
+                       max_slots=args.max_slots, max_len=max_len,
+                       prefill_mode=args.prefill_mode,
+                       ckpt_dir=args.ckpt_dir, hot_reload=args.hot_reload)
+    rng = np.random.RandomState(1)
+
+    from repro.configs.base import get_config, get_reduced
+    mcfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    stepped_only = mcfg.is_encoder_decoder or mcfg.frontend != "none"
+    if args.legacy or stepped_only:
+        if stepped_only and not args.legacy:
+            print(f"[serve] {mcfg.name}: frontend/enc-dec archs serve "
+                  f"through the stepped batch path")
+        session = ServeSession.from_config(cfg)
+        mcfg = session.model.cfg
+        V = mcfg.vocab_size
+        prompts = rng.randint(0, V, (args.requests, args.prompt_len))
+        fe = None
+        if mcfg.frontend != "none":
+            ft = mcfg.frontend_tokens or args.prompt_len
+            fe = jnp.zeros((args.requests, ft, mcfg.frontend_dim),
+                           jnp.float32)
+        t0 = time.perf_counter()
+        out = session.generate(jnp.asarray(prompts), args.gen,
+                               max_len=max_len, frontend_embeds=fe,
+                               stepped_prefill=True)
+        wall = time.perf_counter() - t0
+        toks = args.requests * args.gen
+        print(f"[serve] legacy completed={args.requests} "
+              f"generated_tokens={toks} wall_s={wall:.2f} "
+              f"tok_s={toks / wall:.1f}")
+        print(np.asarray(out)[:, args.prompt_len:])
+        return out
+
+    engine = ServeEngine.from_config(cfg)
+    V = engine.model.cfg.vocab_size
+    if engine.loaded_step is not None:
+        print(f"[serve] serving checkpoint step {engine.loaded_step} "
+              f"from {cfg.ckpt_dir}")
+
+    def stream(handle, token):
+        if len(handle.tokens) == 1:
+            dt = handle.first_token_at - handle.submitted_at
+            print(f"[serve] req {handle.request.request_id} first token "
+                  f"after {dt * 1e3:.0f}ms (slot {handle.slot})")
+
+    handles = []
+    for i in range(args.requests):
+        # staggered arrivals at jittered prompt lengths: the continuous-
+        # batching case (admit into a running batch, retire independently)
+        plen = max(1, min(args.prompt_len + int(rng.randint(-4, 5)),
+                          max_len - args.gen))
+        handles.append(engine.submit(GenerationRequest(
+            prompt=rng.randint(0, V, plen), max_new_tokens=args.gen,
+            stream=stream)))
+        for _ in range(args.stagger):
+            engine.step()
+    engine.drain()
+
+    tp = engine.throughput()
+    fields = " ".join(
+        f"{k}={v:.2f}" if isinstance(v, float) else f"{k}={v}"
+        for k, v in tp.items())
+    print(f"[serve] {fields}")
+    for h in handles:
+        print(f"[serve] req {h.request.request_id} "
+              f"({h.finish_reason}): {h.tokens}")
+    if tp["completed"] != args.requests:
+        print(f"[serve] ERROR: {tp['completed']}/{args.requests} completed",
+              file=sys.stderr)
+        sys.exit(1)
+    return handles
 
 
 if __name__ == "__main__":

@@ -32,8 +32,13 @@ class Model:
     loss: Callable            # (params, batch) -> (scalar, metrics)
     forward: Callable         # (params, batch) -> logits
     prefill: Callable         # (params, batch) -> last-position logits
-    init_cache: Callable      # (params, batch, max_len) -> cache
+    init_cache: Callable      # (params, batch, max_len[, per_slot]) -> cache
     decode_step: Callable     # (params, tokens, cache) -> (logits, cache)
+    # fused serving prefill: (params, tokens [B,P], lengths [B], max_len)
+    # -> (last-position logits, slotted cache). None for families whose
+    # recurrent state cannot be captured from the parallel forward
+    # (ssm/hybrid/enc-dec) — engine/serving falls back to a fused scan.
+    prefill_cache: Optional[Callable] = None
 
 
 def build_model(cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
@@ -87,8 +92,8 @@ def build_model(cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
                                attn_chunk, remat, moe_shards=moe_shards)
         return logits
 
-    def init_cache(params, batch, max_len, **_):
-        return TF.init_decode_cache(cfg, batch, max_len)
+    def init_cache(params, batch, max_len, per_slot=False, **_):
+        return TF.init_decode_cache(cfg, batch, max_len, per_slot=per_slot)
 
     def decode_step(params, tokens, cache):
         return TF.decode_step(params, cfg, tokens, cache, compute_dtype)
@@ -107,7 +112,17 @@ def build_model(cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
                                           and jax.default_backend() == "tpu"))
         return logits
 
-    return Model(cfg, init, loss, forward, prefill, init_cache, decode_step)
+    prefill_cache = None
+    if cfg.family not in ("ssm", "hybrid"):
+        def prefill_cache(params, tokens, lengths, max_len):
+            return TF.prefill_decode_cache(
+                params, cfg, tokens, lengths, max_len, compute_dtype,
+                attn_chunk,
+                use_flash=(cfg.attn_type == "gqa"
+                           and jax.default_backend() == "tpu"))
+
+    return Model(cfg, init, loss, forward, prefill, init_cache, decode_step,
+                 prefill_cache)
 
 
 # --------------------------------------------------------------- accounting

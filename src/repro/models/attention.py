@@ -9,6 +9,11 @@ For sliding-window attention the key axis is additionally sliced to
 
 KV caches are fixed-capacity; sliding-window caches are rolling buffers
 (slot = position mod window) with RoPE applied at write time.
+
+Serving (engine/serving) uses *slotted* caches: `pos` is a vector [B] —
+one write position per batch row — so a continuous-batching scheduler can
+run rows at unequal sequence lengths in one decode call. The decode steps
+dispatch on `cache.pos.ndim`; `per_slot=True` at init selects the layout.
 """
 from __future__ import annotations
 
@@ -148,11 +153,14 @@ def _chunked_attention(q, k, v, positions_q, positions_k, *, causal: bool,
 # ------------------------------------------------------------- GQA forward
 def gqa_forward(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
                 positions: jnp.ndarray, compute_dtype=jnp.bfloat16,
-                chunk: int = 512, use_flash: bool = False) -> jnp.ndarray:
+                chunk: int = 512, use_flash: bool = False,
+                return_kv: bool = False):
     """Training / prefill forward. x: [B,T,D]; positions: [T].
 
     use_flash: route the core through the Pallas flash-attention kernel
-    (forward-only: serving/prefill; score tiles never reach HBM)."""
+    (forward-only: serving/prefill; score tiles never reach HBM).
+    return_kv: also return the RoPE'd (k, v) — exactly what a decode
+    cache stores — for the fused serving prefill."""
     B, T, D = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     x = x.astype(compute_dtype)
@@ -173,33 +181,41 @@ def gqa_forward(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
     else:
         out = _chunked_attention(q, k, v, positions, positions, causal=True,
                                  window=cfg.sliding_window, chunk=chunk)
-    return out.reshape(B, T, h * dh) @ params["wo"].astype(compute_dtype)
+    out = out.reshape(B, T, h * dh) @ params["wo"].astype(compute_dtype)
+    if return_kv:
+        return out, (k, v)
+    return out
 
 
 # --------------------------------------------------------------- KV caches
 class KVCache(NamedTuple):
     k: jnp.ndarray      # [B, cap, KV, Dh] (RoPE'd at write)
     v: jnp.ndarray      # [B, cap, KV, Dh]
-    pos: jnp.ndarray    # scalar int32: #tokens seen
+    pos: jnp.ndarray    # int32 #tokens seen: scalar, or [B] (slotted)
 
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
-                  dtype=jnp.bfloat16) -> KVCache:
+                  dtype=jnp.bfloat16, per_slot: bool = False) -> KVCache:
     cap = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
     kv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    pos = jnp.zeros((batch,) if per_slot else (), jnp.int32)
     return KVCache(jnp.zeros((batch, cap, kv, dh), dtype),
-                   jnp.zeros((batch, cap, kv, dh), dtype),
-                   jnp.zeros((), jnp.int32))
+                   jnp.zeros((batch, cap, kv, dh), dtype), pos)
 
 
 def gqa_decode_step(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
                     cache: KVCache, compute_dtype=jnp.bfloat16
                     ) -> Tuple[jnp.ndarray, KVCache]:
-    """One-token decode. x: [B,1,D]."""
+    """One-token decode. x: [B,1,D].
+
+    cache.pos scalar: all rows at the same position (training-style
+    batch decode). cache.pos [B]: slotted serving — each row writes and
+    masks at its own position/length."""
     B = x.shape[0]
     h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     cap = cache.k.shape[1]
     pos = cache.pos
+    per_slot = pos.ndim == 1
     x = x.astype(compute_dtype)
     q = (x @ params["wq"].astype(compute_dtype)).reshape(B, 1, h, dh)
     k = (x @ params["wk"].astype(compute_dtype)).reshape(B, 1, kvh, dh)
@@ -207,26 +223,34 @@ def gqa_decode_step(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
     if cfg.qk_norm:
         q = L.headwise_rmsnorm(params["q_norm"], q)
         k = L.headwise_rmsnorm(params["k_norm"], k)
-    posv = pos[None].astype(jnp.float32)
-    q = L.apply_rope(q, posv[None, :], cfg.rope_theta)
-    k = L.apply_rope(k, posv[None, :], cfg.rope_theta)
-    slot = jnp.where(cfg.sliding_window > 0, pos % cap, jnp.minimum(pos, cap - 1))
-    knew = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype),
-                                               slot, axis=1)
-    vnew = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype),
-                                               slot, axis=1)
+    # rope positions: [B,1] per-slot, [1,1] shared
+    posv = (pos[:, None] if per_slot else pos[None, None]).astype(jnp.float32)
+    q = L.apply_rope(q, posv, cfg.rope_theta)
+    k = L.apply_rope(k, posv, cfg.rope_theta)
+    slot = jnp.where(cfg.sliding_window > 0, pos % cap,
+                     jnp.minimum(pos, cap - 1))
+    if per_slot:
+        rows = jnp.arange(B)
+        knew = cache.k.at[rows, slot].set(k[:, 0].astype(cache.k.dtype))
+        vnew = cache.v.at[rows, slot].set(v[:, 0].astype(cache.v.dtype))
+    else:
+        knew = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), slot, axis=1)
+        vnew = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), slot, axis=1)
     # absolute position held by each slot (rolling for SWA, linear otherwise)
     idx = jnp.arange(cap)
+    posb = pos[:, None] if per_slot else pos[None, None]     # [B|1, 1]
     if cfg.sliding_window:
-        slot_pos = pos - ((pos - idx) % cap)     # most recent pos with p%cap==idx
+        slot_pos = posb - ((posb - idx[None, :]) % cap)  # latest p%cap==idx
     else:
-        slot_pos = idx
-    valid = (slot_pos >= 0) & (slot_pos <= pos)
+        slot_pos = jnp.broadcast_to(idx[None, :], (posb.shape[0], cap))
+    valid = (slot_pos >= 0) & (slot_pos <= posb)             # [B|1, cap]
     scale = 1.0 / math.sqrt(dh)
     qg = q.reshape(B, kvh, h // kvh, dh)
     scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
                         knew.astype(jnp.float32)) * scale
-    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(vnew.dtype)
     out = jnp.einsum("bkgs,bskd->bkgd", probs, vnew).reshape(B, 1, h * dh)
     out = out.astype(compute_dtype) @ params["wo"].astype(compute_dtype)
@@ -241,13 +265,14 @@ class MLACache(NamedTuple):
 
 
 def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
-                   dtype=jnp.bfloat16) -> MLACache:
+                   dtype=jnp.bfloat16, per_slot: bool = False) -> MLACache:
     return MLACache(jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
                     jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
-                    jnp.zeros((), jnp.int32))
+                    jnp.zeros((batch,) if per_slot else (), jnp.int32))
 
 
 def _mla_qkv(params, cfg, x, positions, compute_dtype):
+    """positions: pre-shaped [B|1, T] (per-row for slotted decode)."""
     B, T, _ = x.shape
     h = cfg.n_heads
     qk_n, qk_r = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
@@ -255,24 +280,27 @@ def _mla_qkv(params, cfg, x, positions, compute_dtype):
                    cfg.norm_eps)
     q = (cq @ params["q_up"].astype(compute_dtype)).reshape(B, T, h, qk_n + qk_r)
     q_nope, q_rope = q[..., :qk_n], q[..., qk_n:]
-    q_rope = L.apply_rope(q_rope, positions[None, :], cfg.rope_theta)
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
     ckv_full = x @ params["kv_down"].astype(compute_dtype)
     c_kv = L.rmsnorm(params["kv_norm"], ckv_full[..., :cfg.kv_lora_rank],
                      cfg.norm_eps)
     k_rope = ckv_full[..., cfg.kv_lora_rank:][:, :, None, :]   # 1 shared head
-    k_rope = L.apply_rope(k_rope, positions[None, :], cfg.rope_theta)[:, :, 0]
+    k_rope = L.apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
     return q_nope, q_rope, c_kv, k_rope
 
 
 def mla_forward(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
                 positions: jnp.ndarray, compute_dtype=jnp.bfloat16,
-                chunk: int = 512) -> jnp.ndarray:
-    """Training/prefill MLA: materialize k/v from the latent (naive path)."""
+                chunk: int = 512, return_kv: bool = False):
+    """Training/prefill MLA: materialize k/v from the latent (naive path).
+
+    return_kv: also return the latents (c_kv, k_rope) — the decode-cache
+    contents — for the fused serving prefill."""
     B, T, _ = x.shape
     h = cfg.n_heads
     qk_n, vh = cfg.qk_nope_head_dim, cfg.v_head_dim
     x = x.astype(compute_dtype)
-    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x, positions,
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x, positions[None, :],
                                             compute_dtype)
     kv = (c_kv @ params["kv_up"].astype(compute_dtype)).reshape(
         B, T, h, qk_n + vh)
@@ -283,26 +311,40 @@ def mla_forward(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
     out = _chunked_attention(q, k, v, positions, positions, causal=True,
                              window=0, chunk=chunk)
-    return out.reshape(B, T, h * vh) @ params["wo"].astype(compute_dtype)
+    out = out.reshape(B, T, h * vh) @ params["wo"].astype(compute_dtype)
+    if return_kv:
+        return out, (c_kv, k_rope)
+    return out
 
 
 def mla_decode_step(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
                     cache: MLACache, compute_dtype=jnp.bfloat16
                     ) -> Tuple[jnp.ndarray, MLACache]:
     """Absorbed-latent decode: attention runs in the kv_lora space, so the
-    cache stays compressed (the MLA memory win)."""
+    cache stays compressed (the MLA memory win). cache.pos [B] = slotted
+    per-row positions (serving), scalar = shared position."""
     B = x.shape[0]
     h = cfg.n_heads
     qk_n, qk_r, vh, r = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
                          cfg.v_head_dim, cfg.kv_lora_rank)
     pos = cache.pos
+    per_slot = pos.ndim == 1
+    cap = cache.c_kv.shape[1]
     x = x.astype(compute_dtype)
-    posv = pos[None].astype(jnp.float32)
+    posv = (pos[:, None] if per_slot else pos[None, None]).astype(jnp.float32)
     q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x, posv, compute_dtype)
-    cnew = jax.lax.dynamic_update_slice_in_dim(
-        cache.c_kv, c_kv.astype(cache.c_kv.dtype), pos, axis=1)
-    rnew = jax.lax.dynamic_update_slice_in_dim(
-        cache.k_rope, k_rope.astype(cache.k_rope.dtype), pos, axis=1)
+    if per_slot:
+        rows = jnp.arange(B)
+        wslot = jnp.minimum(pos, cap - 1)
+        cnew = cache.c_kv.at[rows, wslot].set(c_kv[:, 0].astype(
+            cache.c_kv.dtype))
+        rnew = cache.k_rope.at[rows, wslot].set(k_rope[:, 0].astype(
+            cache.k_rope.dtype))
+    else:
+        cnew = jax.lax.dynamic_update_slice_in_dim(
+            cache.c_kv, c_kv.astype(cache.c_kv.dtype), pos, axis=1)
+        rnew = jax.lax.dynamic_update_slice_in_dim(
+            cache.k_rope, k_rope.astype(cache.k_rope.dtype), pos, axis=1)
     kv_up = params["kv_up"].astype(compute_dtype).reshape(r, h, qk_n + vh)
     w_k = kv_up[..., :qk_n]                  # [r, h, qk_n]
     w_v = kv_up[..., qk_n:]                  # [r, h, vh]
@@ -313,8 +355,9 @@ def mla_decode_step(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
               + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
                            rnew.astype(jnp.float32)))
     scores = scores / math.sqrt(qk_n + qk_r)
-    valid = jnp.arange(cnew.shape[1]) <= pos
-    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    posb = pos[:, None] if per_slot else pos[None, None]
+    valid = jnp.arange(cap)[None, :] <= posb                 # [B|1, cap]
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     lat = jnp.einsum("bhs,bsr->bhr", probs.astype(cnew.dtype), cnew)
     out = jnp.einsum("bhr,rhv->bhv", lat, w_v).reshape(B, 1, h * vh)

@@ -131,14 +131,14 @@ def mamba_forward(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
     return y @ params["w_out"].astype(compute_dtype)
 
 
-def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32
-                     ) -> MambaState:
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32,
+                     per_slot: bool = False) -> MambaState:
     d = cfg.d_model
     H = cfg.ssm_heads or cfg.n_heads
     P = d // H
     return MambaState(jnp.zeros((batch, H, cfg.ssm_state, P), jnp.float32),
                       jnp.zeros((batch, cfg.ssm_conv - 1, H * P), dtype),
-                      jnp.zeros((), jnp.int32))
+                      jnp.zeros((batch,) if per_slot else (), jnp.int32))
 
 
 def mamba_decode_step(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,

@@ -56,11 +56,16 @@ def block_init(key, cfg: ModelConfig, dtype, moe_block: bool) -> PyTree:
 def block_apply(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
                 positions: jnp.ndarray, moe_block: bool,
                 compute_dtype=jnp.bfloat16, attn_chunk: int = 512,
-                moe_shards: int = 1, use_flash: bool = False
-                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """[B,T,D] -> ([B,T,D], aux_loss)."""
+                moe_shards: int = 1, use_flash: bool = False,
+                return_kv: bool = False):
+    """[B,T,D] -> ([B,T,D], aux_loss[, kv]).
+
+    return_kv (attention families only): also return this block's
+    decode-cache contribution — (k, v) for GQA, (c_kv, k_rope) for MLA —
+    so a fused prefill can populate a cache in one forward pass."""
     aux = jnp.zeros((), jnp.float32)
     if cfg.family == "ssm":
+        assert not return_kv, "fused kv capture needs an attention family"
         h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
         x = x + SSM.rwkv_time_forward(params["time"], cfg, h, compute_dtype)
         h = L.rmsnorm(params["norm2"], x, cfg.norm_eps)
@@ -69,13 +74,17 @@ def block_apply(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
                                       compute_dtype)
         return x, aux
     h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    kv = None
     if cfg.attn_type == "mla":
         a = ATT.mla_forward(params["attn"], cfg, h, positions, compute_dtype,
-                            attn_chunk)
+                            attn_chunk, return_kv=return_kv)
     else:
         a = ATT.gqa_forward(params["attn"], cfg, h, positions, compute_dtype,
-                            attn_chunk, use_flash)
+                            attn_chunk, use_flash, return_kv=return_kv)
+    if return_kv:
+        a, kv = a
     if cfg.family == "hybrid":
+        assert not return_kv, "fused kv capture needs an attention family"
         a = (a + SSM.mamba_forward(params["mamba"], cfg, h, compute_dtype)) * 0.5
     x = x + a
     h = L.rmsnorm(params["norm2"], x, cfg.norm_eps)
@@ -84,6 +93,8 @@ def block_apply(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
                                moe_shards)
     else:
         m = L.mlp_apply(params["mlp"], h, cfg.mlp_type, compute_dtype)
+    if return_kv:
+        return x + m, aux, kv
     return x + m, aux
 
 
@@ -146,20 +157,29 @@ def project_frontend(params: PyTree, cfg: ModelConfig, embeds: jnp.ndarray,
 # ------------------------------------------------------------------ forward
 def _scan_blocks(blocks: PyTree, cfg: ModelConfig, x, positions, moe_block,
                  compute_dtype, attn_chunk, remat: bool = True,
-                 moe_shards: int = 1, use_flash: bool = False):
+                 moe_shards: int = 1, use_flash: bool = False,
+                 collect_kv: bool = False):
     body = functools.partial(block_apply, cfg=cfg, positions=positions,
                              moe_block=moe_block, compute_dtype=compute_dtype,
                              attn_chunk=attn_chunk, moe_shards=moe_shards,
-                             use_flash=use_flash)
+                             use_flash=use_flash, return_kv=collect_kv)
 
     def step(carry, bparams):
         x, aux = carry
         fn = (jax.checkpoint(lambda p, y: body(p, x=y)) if remat
               else (lambda p, y: body(p, x=y)))
+        if collect_kv:
+            x, a, kv = fn(bparams, x)
+            return (x, aux + a), kv
         x, a = fn(bparams, x)
         return (x, aux + a), None
 
-    (x, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)), blocks)
+    # collect_kv: the scan's ys stack per-layer kv on axis 0 — exactly the
+    # [L, ...] layout of DecodeCache.layers
+    (x, aux), kvs = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)),
+                                 blocks)
+    if collect_kv:
+        return x, aux, kvs
     return x, aux
 
 
@@ -228,34 +248,127 @@ class DecodeCache(NamedTuple):
     dense_layers: Optional[PyTree] = None
 
 
-def _one_layer_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+def _one_layer_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                     per_slot: bool = False):
+    pos0 = jnp.zeros((batch,) if per_slot else (), jnp.int32)
     if cfg.family == "ssm":
         return SSM.RWKVState(
             jnp.zeros((batch, cfg.d_model // cfg.rwkv_head_dim,
                        cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
             jnp.zeros((batch, cfg.d_model), dtype),
             jnp.zeros((batch, cfg.d_model), dtype),
-            jnp.zeros((), jnp.int32))
+            pos0)
     if cfg.attn_type == "mla":
-        att = ATT.init_mla_cache(cfg, batch, max_len, dtype)
+        att = ATT.init_mla_cache(cfg, batch, max_len, dtype, per_slot)
     else:
-        att = ATT.init_kv_cache(cfg, batch, max_len, dtype)
+        att = ATT.init_kv_cache(cfg, batch, max_len, dtype, per_slot)
     if cfg.family == "hybrid":
-        return {"attn": att, "mamba": SSM.mamba_init_state(cfg, batch, dtype)}
+        return {"attn": att,
+                "mamba": SSM.mamba_init_state(cfg, batch, dtype, per_slot)}
     return {"attn": att}
 
 
 def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
-                      dtype=jnp.bfloat16) -> DecodeCache:
+                      dtype=jnp.bfloat16, per_slot: bool = False
+                      ) -> DecodeCache:
+    """per_slot=True: every leaf (including the pos counters, then [B])
+    carries the batch axis at position 1 after layer stacking — the layout
+    engine/serving's slotted-cache ops (row insert/select) rely on."""
     stack = lambda n: jax.tree.map(
         lambda x: jnp.broadcast_to(x, (n,) + x.shape),
-        _one_layer_cache(cfg, batch, max_len, dtype))
+        _one_layer_cache(cfg, batch, max_len, dtype, per_slot))
     dense = None
     n_moe = cfg.n_layers
     if cfg.n_experts and cfg.first_dense_layers:
         dense = stack(cfg.first_dense_layers)
         n_moe = cfg.n_layers - cfg.first_dense_layers
     return DecodeCache(stack(n_moe), dense)
+
+
+def _cache_rows(t: jnp.ndarray, lengths: jnp.ndarray, cap: int,
+                rolling: bool, cache_dtype) -> jnp.ndarray:
+    """Place captured per-position tensors [L,B,P,...] into fixed-capacity
+    cache rows [L,B,cap,...].
+
+    Linear layout (full attention, or a rolling buffer that fits the whole
+    prompt): row p holds position p; rows >= length are dead weight the
+    per-slot pos mask excludes. Rolling layout (SWA, prompt longer than
+    the window): row r holds the most recent prompt position p with
+    p % cap == r — exactly what cap sequential decode writes would leave."""
+    Lyr, B, P = t.shape[:3]
+    tail = t.shape[3:]
+    if not rolling or cap >= P:
+        assert cap >= P, f"cache capacity {cap} < prompt bucket {P}"
+        out = jnp.zeros((Lyr, B, cap) + tail, cache_dtype)
+        return out.at[:, :, :P].set(t.astype(cache_dtype))
+    last = (lengths - 1)[:, None]                       # [B,1]
+    idx = jnp.arange(cap)[None, :]                      # [1,cap]
+    p_r = last - ((last - idx) % cap)                   # [B,cap] winner per row
+    valid = p_r >= 0
+    take = jnp.clip(p_r, 0, P - 1).reshape((1, B, cap) + (1,) * len(tail))
+    rows = jnp.take_along_axis(t, take, axis=2)
+    mask = valid.reshape((1, B, cap) + (1,) * len(tail))
+    return jnp.where(mask, rows, 0).astype(cache_dtype)
+
+
+def prefill_decode_cache(params: PyTree, cfg: ModelConfig,
+                         tokens: jnp.ndarray, lengths: jnp.ndarray,
+                         max_len: int, compute_dtype=jnp.bfloat16,
+                         attn_chunk: int = 512, use_flash: bool = False,
+                         cache_dtype=jnp.bfloat16
+                         ) -> Tuple[jnp.ndarray, DecodeCache]:
+    """Fused serving prefill: ONE full-sequence forward that both computes
+    the last-prompt-position logits and writes every layer's K/V into a
+    fresh slotted DecodeCache — replacing T sequential decode_step
+    dispatches. Attention-only families (the recurrent-state ssm/hybrid
+    families prefill via a fused decode scan in engine/serving).
+
+    tokens: [B,P] prompts right-padded to a common bucket length (causal
+    attention makes the padding inert); lengths: [B] true prompt lengths.
+    Returns (logits [B,1,V] at position lengths-1, cache with per-slot
+    pos = lengths)."""
+    assert cfg.family not in ("ssm", "hybrid") and not cfg.is_encoder_decoder
+    B, P = tokens.shape
+    x = L.embed(params["embed"], tokens, compute_dtype)
+    positions = jnp.arange(P, dtype=jnp.float32)
+    dense_kv = None
+    if "dense_blocks" in params:
+        x, _, dense_kv = _scan_blocks(params["dense_blocks"], cfg, x,
+                                      positions, False, compute_dtype,
+                                      attn_chunk, remat=False,
+                                      collect_kv=True)
+    x, _, kv = _scan_blocks(params["blocks"], cfg, x, positions,
+                            bool(cfg.n_experts), compute_dtype, attn_chunk,
+                            remat=False, use_flash=use_flash,
+                            collect_kv=True)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    last = jnp.take_along_axis(x, (lengths - 1)[:, None, None], axis=1)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], last, compute_dtype)
+    else:
+        logits = L.lm_head(params["lm_head"], last, compute_dtype)
+
+    def seg_cache(pair):
+        Lyr = jax.tree.leaves(pair)[0].shape[0]
+        pos = jnp.broadcast_to(lengths[None, :], (Lyr, B))
+        if cfg.attn_type == "mla":
+            c_kv, k_rope = pair
+            att = ATT.MLACache(
+                _cache_rows(c_kv, lengths, max_len, False, cache_dtype),
+                _cache_rows(k_rope, lengths, max_len, False, cache_dtype),
+                pos)
+        else:
+            k, v = pair
+            cap = (min(max_len, cfg.sliding_window) if cfg.sliding_window
+                   else max_len)
+            rolling = bool(cfg.sliding_window)
+            att = ATT.KVCache(
+                _cache_rows(k, lengths, cap, rolling, cache_dtype),
+                _cache_rows(v, lengths, cap, rolling, cache_dtype), pos)
+        return {"attn": att}
+
+    dense = seg_cache(dense_kv) if dense_kv is not None else None
+    return logits, DecodeCache(seg_cache(kv), dense)
 
 
 def _block_decode(params: PyTree, cfg: ModelConfig, x, cache, moe_block,

@@ -1,0 +1,337 @@
+"""engine/serving: fused prefill == stepped prefill, continuous batching
+== solo decoding, checkpoint hot-reload, params-only restore, and the
+serve config surface.
+
+Token-level equivalence is the contract: greedy argmax ids must be
+identical between the fused request-level paths and the legacy stepped
+loop (fp32 compute keeps the comparisons exact on CPU)."""
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncCheckpointManager, CheckpointManager
+from repro.configs.base import ModelConfig, get_reduced
+from repro.engine import (EngineConfig, GenerationRequest, ServeEngine,
+                          ServeSession, TrainSession)
+from repro.engine.serving import ContinuousBatchingScheduler, RequestHandle
+from repro.engine.serving.scheduler import GenerationRequest as _Req
+from repro.models import build_model
+
+TINY = ModelConfig("serve-tiny", "dense", 2, 64, 4, 2, 128, 257,
+                   head_dim=16)
+
+
+def tiny_model():
+    return build_model(TINY, compute_dtype=jnp.float32, attn_chunk=16)
+
+
+def reduced_model(arch):
+    cfg = get_reduced(arch)
+    if cfg.n_experts:     # no-drop capacity: keep rows independent
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    return build_model(cfg, compute_dtype=jnp.float32, attn_chunk=8)
+
+
+def serve_cfg(**kw):
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_len", 48)
+    return EngineConfig(**kw)
+
+
+# ------------------------------------------------------- fused prefill
+class TestFusedPrefill:
+    """generate() through the engine (fused prefill + slotted decode)
+    must produce tokens identical to the stepped_prefill legacy loop."""
+
+    # gqa: parallel prefill; swa: rolling-layout parallel prefill;
+    # mla: latent-cache parallel prefill; hybrid/rwkv: fused scan prefill
+    CASES = {
+        "gqa": "qwen3-32b",
+        "swa": "mixtral-8x22b",
+        "mla": "minicpm3-4b",
+        "hybrid": "hymba-1.5b",
+        "rwkv": "rwkv6-7b",
+    }
+
+    @pytest.mark.parametrize("name", sorted(CASES))
+    def test_engine_matches_stepped(self, name):
+        model = reduced_model(self.CASES[name])
+        cfg = serve_cfg()
+        sess = ServeSession.from_config(cfg, model=model)
+        B, T, G = 2, 10, 6
+        prompts = jax.random.randint(jax.random.key(2), (B, T), 0,
+                                     model.cfg.vocab_size)
+        ref = sess.generate(prompts, G, max_len=cfg.max_len,
+                            stepped_prefill=True)
+        out = sess.generate(prompts, G, max_len=cfg.max_len)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_swa_prompt_longer_than_window(self):
+        model = reduced_model("mixtral-8x22b")
+        w = model.cfg.sliding_window
+        cfg = serve_cfg(max_len=w + 24)
+        sess = ServeSession.from_config(cfg, model=model)
+        T = w + 7                     # rolling-layout prefill path
+        prompts = jax.random.randint(jax.random.key(3), (2, T), 0,
+                                     model.cfg.vocab_size)
+        ref = sess.generate(prompts, 5, max_len=cfg.max_len,
+                            stepped_prefill=True)
+        out = sess.generate(prompts, 5, max_len=cfg.max_len)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_prefill_mode_validation(self):
+        model = reduced_model("rwkv6-7b")     # recurrent: no parallel path
+        assert model.prefill_cache is None
+        with pytest.raises(ValueError, match="parallel prefill"):
+            ServeEngine(serve_cfg(prefill_mode="parallel"), model, None,
+                        model.init(jax.random.key(0)))
+
+    def test_frontend_rejected(self):
+        cfg = dataclasses.replace(TINY, frontend="vision", frontend_dim=8,
+                                  frontend_tokens=4)
+        model = build_model(cfg, compute_dtype=jnp.float32, attn_chunk=16)
+        with pytest.raises(ValueError, match="decoder-only"):
+            ServeEngine(serve_cfg(), model, None,
+                        model.init(jax.random.key(0)))
+
+
+# ------------------------------------------------- continuous batching
+class TestContinuousBatching:
+    def test_staggered_arrivals_match_solo(self):
+        """Requests of unequal length admitted at different ticks into a
+        2-slot pool produce exactly the tokens each would get decoded
+        alone (per-slot positions/masks keep rows independent)."""
+        model = tiny_model()
+        cfg = serve_cfg(max_slots=2)
+        params = model.init(jax.random.key(0))
+        eng = ServeEngine(cfg, model, None, params)
+        rng = np.random.RandomState(0)
+        V = model.cfg.vocab_size
+        specs = [(7, 5), (13, 9), (4, 12), (21, 3)]   # (prompt_len, gen)
+        handles = []
+        for plen, gen in specs:
+            handles.append(eng.submit(GenerationRequest(
+                prompt=rng.randint(0, V, plen), max_new_tokens=gen)))
+            eng.step()                                # staggered admission
+        eng.drain()
+        assert all(h.done for h in handles)
+
+        sess = ServeSession(cfg, model, None, params)
+        for h in handles:
+            T = len(h.request.prompt)
+            ref = sess.generate(jnp.asarray(h.request.prompt)[None],
+                                h.request.max_new_tokens,
+                                max_len=cfg.max_len, stepped_prefill=True)
+            np.testing.assert_array_equal(
+                np.asarray(h.tokens), np.asarray(ref)[0, T:])
+
+    def test_no_recompilation_as_slots_churn(self):
+        """Slot admission/retirement must never change decode shapes."""
+        model = tiny_model()
+        eng = ServeEngine(serve_cfg(max_slots=2), model, None,
+                          model.init(jax.random.key(0)))
+        rng = np.random.RandomState(1)
+        for plen, gen in [(5, 3), (9, 6), (6, 2), (12, 4)]:
+            eng.submit(GenerationRequest(prompt=rng.randint(0, 257, plen),
+                                         max_new_tokens=gen))
+            eng.step()
+        eng.drain()
+        assert eng.throughput()["completed"] == 4
+        size = getattr(eng._decode, "_cache_size", lambda: 1)()
+        assert size == 1, f"decode retraced {size} times"
+
+    def test_eos_retires_early_and_slot_is_reused(self):
+        model = tiny_model()
+        eng = ServeEngine(serve_cfg(max_slots=1), model, None,
+                          model.init(jax.random.key(0)))
+        rng = np.random.RandomState(2)
+        prompt = rng.randint(0, 257, 6)
+        # find the first greedy token, then use it as the eos id
+        probe = eng.submit(GenerationRequest(prompt=prompt.copy(),
+                                             max_new_tokens=1))
+        eng.drain()
+        eos = probe.tokens[0]
+        h1 = eng.submit(GenerationRequest(prompt=prompt.copy(),
+                                          max_new_tokens=10, eos_id=eos))
+        h2 = eng.submit(GenerationRequest(prompt=rng.randint(0, 257, 5),
+                                          max_new_tokens=2))
+        eng.drain()
+        assert h1.finish_reason == "eos" and len(h1.tokens) == 1
+        assert h2.done and len(h2.tokens) == 2
+
+    def test_streaming_callbacks_fire_per_token(self):
+        model = tiny_model()
+        eng = ServeEngine(serve_cfg(), model, None,
+                          model.init(jax.random.key(0)))
+        seen = []
+        h = eng.submit(GenerationRequest(
+            prompt=np.arange(5), max_new_tokens=4,
+            stream=lambda hd, tok: seen.append(tok)))
+        eng.drain()
+        assert seen == h.tokens and len(seen) == 4
+
+
+# ------------------------------------------------------------ scheduler
+class TestScheduler:
+    def test_fifo_admission_and_slot_reuse(self):
+        s = ContinuousBatchingScheduler(max_slots=2, max_len=32)
+        hs = [RequestHandle(_Req(prompt=np.arange(4), max_new_tokens=4))
+              for _ in range(3)]
+        for h in hs:
+            s.submit(h)
+        admitted = s.admit()
+        assert [h.slot for h in hs[:2]] == [0, 1] and hs[2].slot is None
+        assert len(admitted) == 2 and not s.free_slots
+        s.retire(0, "length")
+        assert hs[0].done and hs[0].finish_reason == "length"
+        (slot, h3), = s.admit()
+        assert h3 is hs[2] and slot == 0
+        assert s.occupancy() == 1.0
+
+    def test_oversized_request_rejected_up_front(self):
+        s = ContinuousBatchingScheduler(max_slots=1, max_len=16)
+        with pytest.raises(ValueError, match="exceeds the slot capacity"):
+            s.submit(RequestHandle(_Req(prompt=np.arange(10),
+                                        max_new_tokens=10)))
+
+    def test_retirement_conditions(self):
+        s = ContinuousBatchingScheduler(max_slots=1, max_len=64)
+        h = RequestHandle(_Req(prompt=np.arange(3), max_new_tokens=2,
+                               eos_id=7))
+        h.tokens = [5]
+        assert s.should_retire(h, 7) == "eos"
+        assert s.should_retire(h, 4) is None
+        h.tokens = [5, 4]
+        assert s.should_retire(h, 4) == "length"
+
+
+# ------------------------------------------------------------ hot reload
+class TestHotReload:
+    def _train(self, tmp, steps):
+        cfg = EngineConfig(combine="mean", optimizer="momentum", lr=0.05,
+                           seq_len=16, global_batch=4, steps=steps,
+                           ckpt_dir=tmp, ckpt_every=10 ** 6,
+                           log_every=10 ** 6)
+        return TrainSession.from_config(cfg, model=tiny_model(),
+                                        callbacks=[])
+
+    def test_mid_stream_swap_preserves_in_flight(self, tmp_path):
+        """A save from a concurrent TrainSession (async manager, write in
+        flight) is picked up by the running engine: the in-flight request
+        finishes on the OLD weights, a later request sees the NEW ones,
+        nothing is dropped. The shared AsyncCheckpointManager's
+        latest_step/restore_params barriers make the poll race-free."""
+        tmp = str(tmp_path)
+        ts = self._train(tmp, 2)
+        assert isinstance(ts.checkpoint, AsyncCheckpointManager)
+        ts.fit(2)
+        ts.save_sync(2)
+
+        cfg = serve_cfg(max_slots=2, max_len=40, ckpt_dir=tmp,
+                        hot_reload=True)
+        eng = ServeEngine.from_config(cfg, model=ts.model,
+                                      checkpoint=ts.checkpoint)
+        assert eng.loaded_step == 2
+        rng = np.random.RandomState(3)
+        V = ts.model.cfg.vocab_size
+        h_old = eng.submit(GenerationRequest(prompt=rng.randint(0, V, 6),
+                                             max_new_tokens=12))
+        eng.step()                     # h_old in flight on version 0
+        assert not h_old.done
+        ts.fit(4)
+        ts.save(4)                     # async write scheduled, NOT waited
+        h_new = eng.submit(GenerationRequest(prompt=rng.randint(0, V, 6),
+                                             max_new_tokens=4))
+        eng.drain()                    # poll hits the barrier, then swaps
+        assert eng.stats["reloads"] == 1 and eng.loaded_step == 4
+        assert h_old.done and len(h_old.tokens) == 12
+        assert h_new.done and len(h_new.tokens) == 4
+        assert h_old.version == 0 and h_new.version == 1
+
+        # reference decodes under each checkpoint's weights
+        mgr = CheckpointManager(tmp)
+        template = jax.eval_shape(ts.model.init, jax.random.key(0))
+        for h, step in ((h_old, 2), (h_new, 4)):
+            sess = ServeSession(cfg, ts.model, None,
+                                mgr.restore_params(template, step))
+            ref = sess.generate(jnp.asarray(h.request.prompt)[None],
+                                h.request.max_new_tokens, max_len=40,
+                                stepped_prefill=True)
+            np.testing.assert_array_equal(
+                np.asarray(h.tokens),
+                np.asarray(ref)[0, len(h.request.prompt):])
+        # old params version garbage-collected once its slots drained
+        assert list(eng._params) == [1]
+        ts.close()
+
+
+# ----------------------------------------------------- restore_params
+class TestRestoreParams:
+    def test_serves_trained_weights(self, tmp_path):
+        tmp = str(tmp_path)
+        tcfg = EngineConfig(combine="mean", optimizer="momentum", lr=0.05,
+                            seq_len=16, global_batch=4, steps=2,
+                            ckpt_dir=tmp, ckpt_every=10 ** 6,
+                            log_every=10 ** 6)
+        ts = TrainSession.from_config(tcfg, model=tiny_model(),
+                                      callbacks=[])
+        ts.fit(2)
+        ts.save_sync(2)
+        ts.close()
+
+        scfg = serve_cfg(ckpt_dir=tmp)
+        sess = ServeSession.from_config(scfg, model=tiny_model())
+        for got, want in zip(jax.tree.leaves(sess.params),
+                             jax.tree.leaves(ts.state["params"])):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+    def test_legacy_manifest_rejected_with_hint(self, tmp_path):
+        import json
+        mgr = CheckpointManager(str(tmp_path))
+        state = {"params": {"w": jnp.ones((2,))}, "step": jnp.zeros(())}
+        path = mgr.save(1, state)
+        meta = json.loads((path / "manifest.json").read_text())
+        for leaf in meta["leaves"]:
+            del leaf["path"]          # simulate a pre-PR-3 checkpoint
+        (path / "manifest.json").write_text(json.dumps(meta))
+        with pytest.raises(ValueError, match="path-indexed"):
+            mgr.restore_params({"w": jnp.zeros((2,))})
+
+    def test_incompatible_model_is_a_clear_error(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        state = {"params": {"w": jnp.ones((2,))}, "step": jnp.zeros(())}
+        mgr.save(1, state)
+        with pytest.raises(KeyError, match="no leaf"):
+            mgr.restore_params({"other": jnp.zeros((2,))})
+        with pytest.raises(ValueError, match="shape"):
+            mgr.restore_params({"w": jnp.zeros((3,))})
+
+
+# ------------------------------------------------------------- config
+class TestServeConfig:
+    def test_serve_fields_roundtrip(self):
+        cfg = EngineConfig(arch="qwen3-32b", max_slots=16, max_len=512,
+                           hot_reload=True, ckpt_dir="/tmp/x",
+                           prefill_mode="scan")
+        assert EngineConfig.from_dict(cfg.to_dict()) == cfg
+
+    def test_from_cli_serve_flags(self):
+        cfg = EngineConfig.from_cli(
+            ["--arch", "hymba-1p5b", "--max-slots", "3", "--max-len",
+             "96", "--hot-reload", "--ckpt-dir", "/tmp/ck",
+             "--prefill-mode", "scan"])
+        assert (cfg.max_slots, cfg.max_len, cfg.hot_reload,
+                cfg.prefill_mode) == (3, 96, True, "scan")
+        assert EngineConfig.from_dict(cfg.to_dict()) == cfg
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="max_slots"):
+            EngineConfig(max_slots=0).validate()
+        with pytest.raises(ValueError, match="hot_reload"):
+            EngineConfig(hot_reload=True).validate()
+        with pytest.raises(ValueError, match="prefill_mode"):
+            EngineConfig(prefill_mode="lazy").validate()

@@ -79,9 +79,9 @@ print("OK")
 def test_serve_driver():
     run_in_subprocess(r"""
 from repro.launch.serve import main
-out = main(["--arch", "minicpm3-4b", "--reduced", "--batch", "2",
-            "--prompt-len", "8", "--gen", "4"])
-assert out.shape == (2, 12)
+handles = main(["--arch", "minicpm3-4b", "--reduced", "--requests", "2",
+                "--prompt-len", "8", "--gen", "4", "--max-slots", "2"])
+assert len(handles) == 2 and all(len(h.tokens) == 4 for h in handles)
 print("OK")
 """, devices=1, timeout=900)
 

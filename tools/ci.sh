@@ -18,4 +18,13 @@ echo "== train smoke run (3 steps, reduced hymba) =="
 python -m repro.launch.train --arch hymba-1p5b --reduced --steps 3 \
     --seq 32 --batch 8
 
+echo "== serve smoke (3 staggered requests, continuous batching) =="
+serve_out=$(python -m repro.launch.serve --arch qwen3-32b --reduced \
+    --requests 3 --prompt-len 16 --gen 8 --max-slots 2 --stagger 2)
+echo "$serve_out"
+echo "$serve_out" | grep -q "completed=3" || {
+    echo "serve smoke: not all requests completed"; exit 1; }
+echo "$serve_out" | grep -q "tok_s=" || {
+    echo "serve smoke: missing throughput fields"; exit 1; }
+
 echo "== ci.sh OK =="
