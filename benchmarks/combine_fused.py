@@ -1,0 +1,165 @@
+"""Fused bucketed combine benchmark (the paper's Fig. 8 regime).
+
+Races three combiners on growing synthetic gradient trees:
+
+    sum            plain lane sum — the paper's "simply summing
+                   gradients" baseline every Adasum cost is judged
+                   against (and AdaScale-style baselines share)
+    adasum-gspmd   the per-leaf reference tree (fused=False): O(leaves)
+                   reductions + FMAs per tree level
+    adasum-fused   the bucketed single-pass path (default): O(buckets)
+                   block_dots / block_combine ops per level
+
+Two leaf-size regimes, each swept over leaf count and span:
+
+    dispatch mix   many small/medium leaves (norms, biases, slivers) —
+                   the "hundreds of tiny reductions per tree level"
+                   regime the fusion targets; per-op dispatch dominates
+    model mix      a transformer-ish mix including multi-MB matrices —
+                   bandwidth-bound; the fused path pays its pack/unpack
+                   copies here and the win is HLO op count (the TPU
+                   dispatch/HBM-reread proxy), not CPU wall-clock
+
+Per case we report median-of-N *interleaved* wall-clock (this container's
+load drifts; interleaving hits all contestants with the same weather),
+the compiled HLO op count, compile time, and the Adasum-vs-sum overhead
+the paper claims is small (§4.4). A fused-vs-reference allclose runs on
+every tree so the race can't quietly diverge. Emits
+`BENCH_combine_fused.json`.
+
+    python -m benchmarks.combine_fused [--smoke]
+
+--smoke: one tiny tree (8 leaves, span 2), used by tools/ci.sh to keep
+the fused path exercised end-to-end in the workflow matrix.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+from .common import emit
+
+OUT = Path(__file__).resolve().parents[1] / "BENCH_combine_fused.json"
+
+# dispatch-bound: the small/medium tensors that dominate leaf COUNT in a
+# real model tree (norms, biases, per-layer slivers, small projections)
+_DISPATCH_MIX = (64, 7, 256, 1024, 31, 512, 2048, 128, 4096, 16)
+# bandwidth-bound: transformer-ish mix including big matrices
+_MODEL_MIX = (4096, 64, 16384, 1024, 7, 8192, 256, 3000, 65536, 31)
+
+_KINDS = ("sum", "adasum-gspmd", "adasum-fused")
+
+
+def make_tree(n_leaves: int, span: int, mix):
+    import jax.numpy as jnp
+    import numpy as np
+    rng = np.random.default_rng(n_leaves * 31 + span)
+    return {f"l{i:03d}": jnp.asarray(
+        rng.standard_normal((span, mix[i % len(mix)])), jnp.float32)
+        for i in range(n_leaves)}
+
+
+def build(kind: str, span: int):
+    from repro.core.combine import CombineConfig
+    from repro.engine.registry import make_combiner
+    cfgs = {
+        "sum": CombineConfig(op="sum"),
+        "adasum-gspmd": CombineConfig(op="adasum", backend="gspmd_tree",
+                                      span=span, fused=False),
+        "adasum-fused": CombineConfig(op="adasum", backend="fused",
+                                      span=span),
+    }
+    return make_combiner(cfgs[kind])
+
+
+def run_case(regime: str, n_leaves: int, span: int, iters: int = 11):
+    import jax
+    import numpy as np
+
+    mix = _DISPATCH_MIX if regime == "dispatch" else _MODEL_MIX
+    tree = make_tree(n_leaves, span, mix)
+    case = {"regime": regime, "leaves": n_leaves, "span": span,
+            "elements": int(sum(np.prod(v.shape) for v in tree.values()))}
+    fns, outs = {}, {}
+    for kind in _KINDS:
+        t0 = time.perf_counter()
+        compiled = jax.jit(build(kind, span)).lower(tree).compile()
+        case[f"{kind}_compile_s"] = time.perf_counter() - t0
+        case[f"{kind}_hlo_ops"] = sum(
+            1 for line in compiled.as_text().splitlines() if " = " in line)
+        # time the AOT-compiled executable itself — a fresh jit wrapper
+        # would recompile the identical computation (at 1024 leaves the
+        # reference compile alone is ~5 min)
+        fns[kind] = compiled
+        outs[kind] = jax.block_until_ready(compiled(tree))    # warm + result
+    # interleaved timing: every round runs all contestants back to back
+    samples = {k: [] for k in _KINDS}
+    for _ in range(iters):
+        for kind in _KINDS:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fns[kind](tree))
+            samples[kind].append(time.perf_counter() - t0)
+    for kind in _KINDS:
+        s = sorted(samples[kind])
+        case[f"{kind}_us"] = s[len(s) // 2] * 1e6
+        emit(f"combine_{kind}_{regime}_L{n_leaves}_S{span}",
+             case[f"{kind}_us"], f"hlo_ops={case[f'{kind}_hlo_ops']}")
+    # the race is void if the contestants disagree
+    for k in tree:
+        np.testing.assert_allclose(
+            np.asarray(outs["adasum-fused"][k]),
+            np.asarray(outs["adasum-gspmd"][k]), rtol=1e-4, atol=1e-4)
+    case["fused_vs_reference_speedup"] = (
+        case["adasum-gspmd_us"] / case["adasum-fused_us"])
+    case["fused_vs_reference_hlo_ratio"] = (
+        case["adasum-gspmd_hlo_ops"] / case["adasum-fused_hlo_ops"])
+    case["fused_overhead_vs_sum"] = (
+        case["adasum-fused_us"] / case["sum_us"])
+    case["reference_overhead_vs_sum"] = (
+        case["adasum-gspmd_us"] / case["sum_us"])
+    return case
+
+
+def main(smoke: bool = False):
+    if smoke:
+        grid = [("dispatch", 8, 2)]
+    else:
+        grid = [("dispatch", 16, 4), ("dispatch", 64, 2),
+                ("dispatch", 64, 4), ("dispatch", 256, 2),
+                ("dispatch", 256, 4), ("dispatch", 1024, 4),
+                ("model", 64, 4)]
+    cases = [run_case(r, n, s, iters=3 if smoke else 11) for r, n, s in grid]
+    big = [c for c in cases
+           if c["regime"] == "dispatch" and c["leaves"] >= 64]
+    speedups = sorted(c["fused_vs_reference_speedup"] for c in big)
+    result = {
+        "smoke": smoke,
+        "cases": cases,
+        # acceptance: at >=64-leaf trees the fused path wins the
+        # dispatch-bound regime — median wall-clock speedup over the
+        # >=64-leaf cases (single cases swing +-30% on this container)
+        # and the HLO op count (the structural claim) on every case
+        "median_speedup_at_64plus_leaves": (
+            speedups[len(speedups) // 2] if speedups else None),
+        "fused_beats_reference_at_64_leaves": bool(
+            speedups and speedups[len(speedups) // 2] > 1.0),
+        "fused_fewer_hlo_ops_everywhere": bool(all(
+            c["fused_vs_reference_hlo_ratio"] > 1.0 for c in cases)),
+        "max_fused_overhead_vs_sum": max(
+            c["fused_overhead_vs_sum"] for c in cases),
+    }
+    if not smoke:
+        OUT.write_text(json.dumps(result, indent=2) + "\n")
+        emit("combine_fused_written", 0.0, f"wrote {OUT.name}")
+    return result
+
+
+if __name__ == "__main__":
+    res = main(smoke="--smoke" in sys.argv[1:])
+    print(json.dumps(res, indent=2))
+    if res["smoke"]:
+        c = res["cases"][0]
+        assert c["fused_vs_reference_hlo_ratio"] > 1.0, c
+        print("combine_fused smoke OK")

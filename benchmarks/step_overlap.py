@@ -9,6 +9,12 @@ stage), across the pipeline knobs:
     async_ckpt      off-thread checkpoint writes (ckpt every step)
     pipelined       both
 
+plus the prefetch-depth / device-staging sweep (ROADMAP open item):
+
+    depth1/2/4      speculative batches in flight (prefetch_depth)
+    device_stage    the prefetch thread also jax.device_put()s batches
+                    onto the mesh (DP-sharded dim 0)
+
 Emits `BENCH_step_overlap.json` (the perf-trajectory artifact) and the
 harness CSV. The injected latency is sized to the measured device step so
 the prefetch stage can hide ~all of it; the acceptance bar is simply
@@ -81,6 +87,20 @@ def main():
         emit(f"step_overlap_{name}", times[name] * 1e6,
              f"delay_us={delay * 1e6:.0f}")
 
+    # prefetch-depth / device-staging sweep (ROADMAP): does a deeper
+    # speculation pipeline or explicit device_put staging buy anything
+    # beyond the double buffer on this host?
+    sweep = {}
+    for depth in (1, 2, 4):
+        for stage in (False, True):
+            key = f"depth{depth}" + ("_device_stage" if stage else "")
+            sweep[key] = _time_fit(
+                dict(prefetch=True, async_checkpoint=True,
+                     prefetch_depth=depth, device_stage=stage),
+                delay, steps, f"{base}/{key}")
+            emit(f"step_overlap_{key}", sweep[key] * 1e6,
+                 f"delay_us={delay * 1e6:.0f}")
+
     result = {
         "device_step_s": probe,
         "injected_host_delay_s": delay,
@@ -89,6 +109,8 @@ def main():
         "speedup_prefetch": times["sync"] / times["prefetch"],
         "speedup_pipelined": times["sync"] / times["pipelined"],
         "overlap_hidden_s": times["sync"] - times["pipelined"],
+        "depth_sweep_step_time_s": sweep,
+        "best_depth_config": min(sweep, key=sweep.get),
     }
     OUT.write_text(json.dumps(result, indent=2) + "\n")
     emit("step_overlap_speedup", result["speedup_pipelined"],

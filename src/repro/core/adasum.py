@@ -43,6 +43,17 @@ def adasum_scalars(dot: jnp.ndarray, n1sq: jnp.ndarray, n2sq: jnp.ndarray):
     return s1, s2
 
 
+def adasum_segment_scalars(v: jnp.ndarray):
+    """`adasum_scalars` over stacked per-segment dot triples.
+
+    v: [..., 3] with the last axis holding [g1·g2, ‖g1‖², ‖g2‖²] (the
+    layout `block_dots` / `segment_dots` emit). Returns (s1, s2) of shape
+    [...]. All-zero rows (padding segments, untouched MoE experts) yield
+    s1 = s2 = 1 — the plain-sum limit, so zero padding survives a fused
+    combine unchanged."""
+    return adasum_scalars(v[..., 0], v[..., 1], v[..., 2])
+
+
 def adasum_pair(g1: jnp.ndarray, g2: jnp.ndarray, *, acc_dtype=jnp.float32) -> jnp.ndarray:
     """Adasum of two gradient arrays (whole-tensor granularity)."""
     dot = _flat_dot(g1, g2, acc_dtype)

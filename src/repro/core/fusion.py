@@ -80,20 +80,18 @@ def make_layout(tree: PyTree, *, align: int = 1, leaf_align: int = 1
 
 
 def pack(tree: PyTree, layout: FusionLayout, dtype=None) -> jnp.ndarray:
-    """Flattens + concatenates leaves into the fused buffer (zero padded,
-    including alignment gaps between leaves)."""
+    """Flattens leaves into the fused buffer (zero padded, including
+    alignment gaps between leaves). Writes each leaf into a zeroed
+    buffer via dynamic_update_slice — XLA:CPU lowers a many-operand
+    concatenate orders of magnitude slower (measured 65 ms vs 2 ms for a
+    64-leaf fp32 pack), and on TPU the updates fuse identically."""
     leaves = layout.treedef.flatten_up_to(tree)
     dtype = dtype or jnp.result_type(*layout.dtypes)
-    parts: List[jnp.ndarray] = []
-    pos = 0
-    for leaf, off, sz in zip(leaves, layout.offsets, layout.sizes):
-        if off > pos:
-            parts.append(jnp.zeros((off - pos,), dtype))
-        parts.append(leaf.astype(dtype).reshape(-1))
-        pos = off + sz
-    if layout.padded_len > pos:
-        parts.append(jnp.zeros((layout.padded_len - pos,), dtype))
-    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+    buf = jnp.zeros((layout.padded_len,), dtype)
+    for leaf, off in zip(leaves, layout.offsets):
+        buf = jax.lax.dynamic_update_slice(
+            buf, leaf.astype(dtype).reshape(-1), (off,))
+    return buf
 
 
 def unpack(buf: jnp.ndarray, layout: FusionLayout) -> PyTree:
@@ -106,17 +104,59 @@ def unpack(buf: jnp.ndarray, layout: FusionLayout) -> PyTree:
     return jax.tree.unflatten(layout.treedef, leaves)
 
 
-def bucketize(layout: FusionLayout, bucket_bytes: int, itemsize: int = 4
-              ) -> List[Tuple[int, int]]:
-    """Splits the layout into buckets of ~bucket_bytes, never splitting a
-    layer across buckets (Horovod's fusion threshold). Returns a list of
-    (leaf_start, leaf_end) index ranges."""
+def bucketize_sizes(sizes_bytes: Sequence[int], bucket_bytes: int
+                    ) -> List[Tuple[int, int]]:
+    """Splits a run of per-leaf byte sizes into contiguous buckets of
+    ~bucket_bytes, never splitting a leaf across buckets (Horovod's
+    fusion threshold). Returns (leaf_start, leaf_end) index ranges."""
     buckets: List[Tuple[int, int]] = []
     start, acc = 0, 0
-    for i, sz in enumerate(layout.sizes):
-        if acc > 0 and (acc + sz) * itemsize > bucket_bytes:
+    for i, nbytes in enumerate(sizes_bytes):
+        if acc > 0 and acc + nbytes > bucket_bytes:
             buckets.append((start, i))
             start, acc = i, 0
-        acc += sz
-    buckets.append((start, len(layout.sizes)))
+        acc += nbytes
+    buckets.append((start, len(sizes_bytes)))
     return buckets
+
+
+def bucketize(layout: FusionLayout, bucket_bytes: int, itemsize: int = 4
+              ) -> List[Tuple[int, int]]:
+    """`bucketize_sizes` over a layout's leaves at a uniform itemsize."""
+    return bucketize_sizes([sz * itemsize for sz in layout.sizes],
+                           bucket_bytes)
+
+
+def select_block_elems(sizes: Sequence[int], *, unit: int = 1024,
+                       max_block: int = 8192, max_waste: float = 0.25
+                       ) -> int:
+    """Pick a kernel block size for a bucket of leaf element counts: the
+    largest power-of-two multiple of `unit` (<= max_block) whose
+    leaf-alignment padding wastes at most `max_waste` of the raw payload.
+    Big-matrix buckets get the full 8192-element blocks; buckets of tiny
+    leaves (norms, biases) degrade to the 1024 granule so per-leaf
+    padding stays bounded."""
+    raw = max(sum(int(s) for s in sizes), 1)
+    b = max(max_block, unit)
+    while b > unit:
+        padded = sum((int(s) + b - 1) // b * b for s in sizes)
+        if padded - raw <= max_waste * raw:
+            return b
+        b //= 2
+    return unit
+
+
+def pack_stacked(leaves: Sequence[jnp.ndarray], layout: FusionLayout,
+                 dtype=None) -> jnp.ndarray:
+    """Like `pack`, but every leaf carries a leading stack (lane) axis:
+    [k, *shape] leaves -> [k, padded_len] fused buffer (alignment gaps +
+    tail zero-padded). The layout describes the *payload* shapes (no
+    stack axis)."""
+    dtype = dtype or jnp.result_type(*layout.dtypes)
+    k = leaves[0].shape[0]
+    # dynamic_update_slice writes, not concatenate — see pack()
+    buf = jnp.zeros((k, layout.padded_len), dtype)
+    for leaf, off in zip(leaves, layout.offsets):
+        buf = jax.lax.dynamic_update_slice(
+            buf, leaf.astype(dtype).reshape(k, -1), (0, off))
+    return buf

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from .adasum import EPS
+from .adasum import adasum_segment_scalars
 from . import fusion
 
 PyTree = Any
@@ -58,10 +58,9 @@ def segment_dots(a: jnp.ndarray, b: jnp.ndarray, seg: jnp.ndarray,
 
 def combine_halves(a: jnp.ndarray, b: jnp.ndarray, v: jnp.ndarray,
                    seg: jnp.ndarray, use_pallas: bool = False) -> jnp.ndarray:
-    """x' = a·(1 - v0/(2 v1)) + b·(1 - v0/(2 v2)) with per-segment scalars
+    """x' = s1·a + s2·b with per-segment scalars from the dot triples
     (Algorithm 1 line 18, per-layer per §3.6)."""
-    s1 = 1.0 - v[:, 0] / (2.0 * v[:, 1] + EPS)
-    s2 = 1.0 - v[:, 0] / (2.0 * v[:, 2] + EPS)
+    s1, s2 = adasum_segment_scalars(v)
     if use_pallas:
         from repro.kernels import ops as kops
         return kops.adasum_combine(a, b, s1, s2, seg)
@@ -222,7 +221,8 @@ def adasum_rvh_pytree(stacked: PyTree, mesh: jax.sharding.Mesh,
                       leaf_specs: Optional[PyTree] = None,
                       *, per_layer: bool = True, acc_dtype=jnp.float32,
                       use_pallas: bool = False,
-                      compress: str = "none") -> PyTree:
+                      compress: str = "none",
+                      bucket_bytes: Optional[int] = None) -> PyTree:
     """Applies ADASUMRVH to a stacked gradient pytree.
 
     stacked: pytree with leaves [n_lanes, *shape]; the lane axis is sharded
@@ -230,6 +230,12 @@ def adasum_rvh_pytree(stacked: PyTree, mesh: jax.sharding.Mesh,
       lane per DP rank.
     leaf_specs: optional pytree of PartitionSpecs describing how *shape is
       sharded over the TP axes (without the lane dim). None => replicated.
+    bucket_bytes: split the fused buffer into buckets of ~this size (never
+      splitting a leaf) and run one independent RVH chain per bucket —
+      the chains have no data dependence, so XLA overlaps bucket k+1's
+      half-exchanges with bucket k's dots/combine (communication/compute
+      pipelining). None (or per_layer=False, which needs whole-model
+      dots) keeps the single fused buffer.
     Returns the combined pytree [*shape] (no lane dim), replicated over dp.
     """
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -271,32 +277,50 @@ def adasum_rvh_pytree(stacked: PyTree, mesh: jax.sharding.Mesh,
         if use_pallas:
             from repro.kernels import ops as kops
             leaf_align = kops.BLOCK_ELEMS
-        layout = fusion.make_layout(tree, align=n_lanes, leaf_align=leaf_align)
-        if not per_layer:
-            # whole-model granularity: one segment for everything. With TP
-            # axes this needs a uniform replication factor (heterogeneous
-            # factors cannot be corrected on a single collapsed dot).
-            assert len(set(factors)) <= 1, (
-                "per_layer=False requires uniform TP sharding across leaves")
-            seg_np = np.zeros((layout.padded_len,), np.int32)
-            tail = layout.padded_len - sum(layout.sizes)
-            if tail:
-                seg_np[-tail:] = 1
-            seg = jnp.asarray(seg_np)
-            nseg = 1
-            scale = (jnp.asarray([factors[0], 1.0]).astype(acc_dtype)
-                     if used_model_axes else None)
+        body_leaves, body_treedef = jax.tree.flatten(tree)
+        if per_layer and bucket_bytes and len(body_leaves) > 1:
+            # one independent RVH chain per bucket: XLA pipelines bucket
+            # k+1's exchanges against bucket k's dots/combine
+            nbytes = [
+                (int(np.prod(l.shape)) if l.shape else 1) * l.dtype.itemsize
+                for l in body_leaves]
+            ranges = fusion.bucketize_sizes(nbytes, bucket_bytes)
         else:
-            seg = jnp.asarray(layout.segment_ids())
-            nseg = layout.num_segments
-            scale = (jnp.asarray(factors + [1.0]).astype(acc_dtype)
-                     if used_model_axes else None)
-        buf = fusion.pack(tree, layout, dtype=jnp.result_type(*layout.dtypes))
-        out = adasum_rvh_local(buf, seg, dp_sizes, nseg, seg_scale=scale,
-                               model_axes=used_model_axes,
-                               acc_dtype=acc_dtype, use_pallas=use_pallas,
-                               compress=compress)
-        return fusion.unpack(out, layout)
+            ranges = [(0, len(body_leaves))]
+        out_leaves: List = [None] * len(body_leaves)
+        for lo, hi in ranges:
+            sub = tuple(body_leaves[lo:hi])
+            layout = fusion.make_layout(sub, align=n_lanes,
+                                        leaf_align=leaf_align)
+            if not per_layer:
+                # whole-model granularity: one segment for everything.
+                # With TP axes this needs a uniform replication factor
+                # (heterogeneous factors cannot be corrected on a single
+                # collapsed dot).
+                assert len(set(factors)) <= 1, (
+                    "per_layer=False requires uniform TP sharding "
+                    "across leaves")
+                seg_np = np.zeros((layout.padded_len,), np.int32)
+                tail = layout.padded_len - sum(layout.sizes)
+                if tail:
+                    seg_np[-tail:] = 1
+                seg = jnp.asarray(seg_np)
+                nseg = 1
+                scale = (jnp.asarray([factors[0], 1.0]).astype(acc_dtype)
+                         if used_model_axes else None)
+            else:
+                seg = jnp.asarray(layout.segment_ids())
+                nseg = layout.num_segments
+                scale = (jnp.asarray(factors[lo:hi] + [1.0]).astype(acc_dtype)
+                         if used_model_axes else None)
+            buf = fusion.pack(sub, layout,
+                              dtype=jnp.result_type(*layout.dtypes))
+            out = adasum_rvh_local(buf, seg, dp_sizes, nseg, seg_scale=scale,
+                                   model_axes=used_model_axes,
+                                   acc_dtype=acc_dtype, use_pallas=use_pallas,
+                                   compress=compress)
+            out_leaves[lo:hi] = list(fusion.unpack(out, layout))
+        return jax.tree.unflatten(body_treedef, out_leaves)
 
     fn = _shard_map_compat(body, mesh, (in_specs,), out_specs)
     return fn(stacked)

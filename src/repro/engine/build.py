@@ -91,7 +91,8 @@ def _resolve_combine_cfg(rpol: RunPolicy, span: int, dp_total: int,
             op=rpol.combine_op, point=rpol.combine_point,
             backend=requested, span=span, per_layer=rpol.per_layer,
             acc_dtype=rpol.acc_dtype, use_pallas=rpol.use_pallas,
-            compress=rpol.compress)
+            compress=rpol.compress, fused=rpol.fused_combine,
+            fusion_threshold_mb=rpol.fusion_threshold_mb)
     if ccfg.op in ("sum", "mean"):
         return ccfg
     if requested == "rvh" and span != dp_total:
@@ -128,16 +129,6 @@ def build_runtime(model: Model, mesh: jax.sharding.Mesh, rpol: RunPolicy,
     ccfg = _resolve_combine_cfg(rpol, span, dp_total, combine, strict)
     # RVH lane order: innermost mesh axis first (adjacent ranks pair first)
     rvh_axes = tuple(reversed(dp_axes))
-    combiner = make_combiner(ccfg, mesh=mesh, dp_axes=rvh_axes,
-                             leaf_specs=pspecs)
-    opt_kwargs = {}
-    if rpol.optimizer in ("adam", "lamb"):
-        opt_kwargs["state_dtype"] = jnp.dtype(rpol.opt_state_dtype)
-    opt = optimizer or get_optimizer(rpol.optimizer, lr, **opt_kwargs)
-
-    to_shardings = lambda specs: jax.tree.map(
-        lambda s: NamedSharding(mesh, s), specs,
-        is_leaf=lambda x: isinstance(x, P))
 
     # Lane-gradient/delta sharding: when span==dp each lane's tensors live
     # on their DP rank (RVH input layout); when span<dp lanes are
@@ -146,12 +137,28 @@ def build_runtime(model: Model, mesh: jax.sharding.Mesh, rpol: RunPolicy,
     # which is catastrophic at MoE scale (found via memory_analysis).
     if span == dp_total:
         lane_axes = tuple(dp_axes)        # pod-major lane index (RVH layout)
+        lane_specs = pspecs               # payload sharding of a lane tensor
         gspecs = jax.tree.map(lambda s: _prepend(s, lane_axes), pspecs)
     else:
         zpol2 = dataclasses.replace(
             spol, fsdp_axis="data" if rpol.scatter_grads else spol.fsdp_axis)
-        base = param_specs(cfg, pshapes, zpol2)
-        gspecs = jax.tree.map(lambda s: _prepend(s, None), base)
+        lane_specs = param_specs(cfg, pshapes, zpol2)
+        gspecs = jax.tree.map(lambda s: _prepend(s, None), lane_specs)
+
+    # The combiner sees the stacked lane tensors, so it gets their true
+    # payload sharding (lane_specs == pspecs in the RVH regime; the
+    # ZeRO-2-scattered specs in the hierarchical span<dp regime) — the
+    # fused bucketed path packs local shards along exactly these specs.
+    combiner = make_combiner(ccfg, mesh=mesh, dp_axes=rvh_axes,
+                             leaf_specs=lane_specs)
+    opt_kwargs = {}
+    if rpol.optimizer in ("adam", "lamb"):
+        opt_kwargs["state_dtype"] = jnp.dtype(rpol.opt_state_dtype)
+    opt = optimizer or get_optimizer(rpol.optimizer, lr, **opt_kwargs)
+
+    to_shardings = lambda specs: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
 
     dopt = DistributedOptimizer(
         opt, ccfg, combiner, span,
@@ -310,6 +317,40 @@ def make_serve_step(model: Model, greedy: bool = True):
     return serve_step
 
 
+def sample_logits(logits: jnp.ndarray, keys: jnp.ndarray, pos: jnp.ndarray,
+                  temperature: jnp.ndarray, top_k: jnp.ndarray,
+                  top_p: jnp.ndarray) -> jnp.ndarray:
+    """Per-row token sampling: [B, V] logits -> [B] int32 tokens.
+
+    Rows with temperature <= 0 take the greedy argmax — bitwise the
+    pre-sampling decode path. Sampled rows apply temperature, then top-k
+    (k == 0 disables) and nucleus top-p (p >= 1 disables) truncation,
+    then a Gumbel-max draw keyed by fold_in(request key, pos): token t of
+    a request is a pure function of (seed, t), so decode stays
+    reproducible across batch compositions and admission timings.
+
+    keys: [B, 2] uint32 raw PRNG keys (jax.random.PRNGKey rows);
+    pos: [B] int32 per-request token positions (generated so far).
+    """
+    V = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def row(lg, key, p, t, k, tp):
+        lg = lg.astype(jnp.float32) / jnp.maximum(t, 1e-6)
+        order = jnp.argsort(-lg)                    # descending
+        xs = lg[order]
+        ranks = jnp.arange(V)
+        xs = jnp.where((k > 0) & (ranks >= k), -jnp.inf, xs)
+        probs = jax.nn.softmax(xs)
+        cum = jnp.cumsum(probs) - probs             # exclusive prefix mass
+        xs = jnp.where((cum < tp) | (tp >= 1.0), xs, -jnp.inf)
+        g = jax.random.gumbel(jax.random.fold_in(key, p), (V,))
+        return order[jnp.argmax(xs + g)].astype(jnp.int32)
+
+    sampled = jax.vmap(row)(logits, keys, pos, temperature, top_k, top_p)
+    return jnp.where(temperature > 0, sampled, greedy)
+
+
 def make_batched_decode_step(model: Model):
     """Slotted decode step for continuous batching: the cache carries a
     per-slot position vector ([B], from `init_cache(per_slot=True)`), so
@@ -321,5 +362,19 @@ def make_batched_decode_step(model: Model):
     def decode_step(params, tokens, cache):
         logits, cache = model.decode_step(params, tokens, cache)
         nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], cache
+    return decode_step
+
+
+def make_sampling_decode_step(model: Model):
+    """`make_batched_decode_step` with per-slot sampling policies: extra
+    [B]-shaped key/pos/temperature/top_k/top_p rows select each slot's
+    policy (greedy rows stay bitwise-argmax via `sample_logits`). Shapes
+    are fixed at [max_slots], so policy churn never recompiles."""
+    def decode_step(params, tokens, cache, keys, pos, temperature,
+                    top_k, top_p):
+        logits, cache = model.decode_step(params, tokens, cache)
+        nxt = sample_logits(logits[:, -1, :], keys, pos, temperature,
+                            top_k, top_p)
         return nxt[:, None], cache
     return decode_step

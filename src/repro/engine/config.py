@@ -21,7 +21,7 @@ from repro.data.pipeline import DataConfig
 from repro.parallel.policy import RunPolicy
 
 _COMBINE_OPS = ("adasum", "sum", "mean")
-_BACKENDS = ("", "rvh", "gspmd_tree", "linear")
+_BACKENDS = ("", "rvh", "gspmd_tree", "fused", "linear")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +40,10 @@ class EngineConfig:
     acc_dtype: str = "float32"  # dot-product accumulation dtype (§4.4.1)
     use_pallas: bool = False    # Pallas kernels for the RVH dots/combine
     compress: str = "none"      # 'int8': quantized RVH wire payloads
+    fused_combine: bool = True  # bucketed single-pass combine for the
+                                # gspmd_tree backend (opt out to get the
+                                # per-leaf reference tree.map)
+    fusion_threshold_mb: int = 64   # Horovod-style packing bucket budget
 
     # ---- parallelism ----
     data_mesh: int = 0          # 0 => all devices not used by model_mesh
@@ -75,6 +79,11 @@ class EngineConfig:
 
     # ---- pipelined runtime (engine/pipeline.py) ----
     prefetch: bool = True       # double-buffered host->device batch stage
+    prefetch_depth: int = 1     # speculative batches in flight (1 =
+                                # double-buffered; >1 = deeper pipeline)
+    device_stage: bool = False  # prefetch thread also jax.device_put()s
+                                # the batch onto the mesh (DP-sharded
+                                # dim 0), not just onto the host heap
     async_checkpoint: bool = True   # off-thread checkpoint writes
     elastic: bool = False       # consume straggler flags: checkpoint +
                                 # halve-DP restart (needs ckpt_dir)
@@ -103,6 +112,18 @@ class EngineConfig:
                     f"{_COMBINE_OPS}, registry {available_combiners()}")
         if self.span < 0:
             raise ValueError(f"span must be >= 0, got {self.span}")
+        if self.fusion_threshold_mb < 1:
+            raise ValueError(f"fusion_threshold_mb must be >= 1, got "
+                             f"{self.fusion_threshold_mb}")
+        if self.prefetch_depth < 1:
+            raise ValueError(f"prefetch_depth must be >= 1, got "
+                             f"{self.prefetch_depth}")
+        if not self.prefetch and (self.prefetch_depth > 1
+                                  or self.device_stage):
+            raise ValueError(
+                "prefetch_depth > 1 / device_stage require prefetch=True "
+                "(they configure the prefetch stage; with prefetch off "
+                "they would be silently ignored)")
         if self.local_steps < 1 or self.accum_steps < 1:
             raise ValueError("local_steps/accum_steps must be >= 1")
         if self.local_steps > 1 and self.accum_steps > 1:
@@ -185,7 +206,8 @@ class EngineConfig:
             opt_state_dtype=self.opt_state_dtype, pad_heads=self.pad_heads,
             combine_point=self.combine_point, per_layer=self.per_layer,
             acc_dtype=self.acc_dtype, use_pallas=self.use_pallas,
-            compress=self.compress)
+            compress=self.compress, fused_combine=self.fused_combine,
+            fusion_threshold_mb=self.fusion_threshold_mb)
 
     def data_config(self, vocab_size: int) -> DataConfig:
         return DataConfig(seq_len=self.seq_len,
@@ -211,7 +233,14 @@ class EngineConfig:
         ap.add_argument("--combine", default=None,
                         help="adasum | sum | mean | any registry entry")
         ap.add_argument("--backend", default=None,
-                        choices=["rvh", "gspmd_tree", "linear"])
+                        choices=["rvh", "gspmd_tree", "fused", "linear"])
+        ap.add_argument("--no-fused-combine", action="store_true",
+                        help="per-leaf reference tree.map instead of the "
+                        "bucketed single-pass gspmd_tree combine")
+        ap.add_argument("--fusion-threshold-mb", type=int, default=None,
+                        dest="fusion_threshold_mb",
+                        help="packing bucket budget for the fused combine "
+                        "(Horovod fusion threshold analogue)")
         ap.add_argument("--span", type=int, default=None)
         ap.add_argument("--local-steps", type=int, default=None,
                         dest="local_steps")
@@ -238,6 +267,14 @@ class EngineConfig:
         ap.add_argument("--no-prefetch", action="store_true",
                         help="synchronous batch pulls (disable the "
                         "double-buffered prefetch stage)")
+        ap.add_argument("--prefetch-depth", type=int, default=None,
+                        dest="prefetch_depth",
+                        help="speculative batches in flight (1 = "
+                        "double-buffered)")
+        ap.add_argument("--device-stage", action="store_true", default=None,
+                        dest="device_stage",
+                        help="prefetch thread device_put()s batches onto "
+                        "the mesh (DP-sharded) instead of host staging")
         ap.add_argument("--sync-checkpoint", action="store_true",
                         help="block the step loop on checkpoint writes")
         ap.add_argument("--elastic", action="store_true", default=None,
@@ -265,6 +302,8 @@ class EngineConfig:
                 over[f.name] = v
         if args.no_per_layer:
             over["per_layer"] = False
+        if args.no_fused_combine:
+            over["fused_combine"] = False
         if args.no_prefetch:
             over["prefetch"] = False
         if args.sync_checkpoint:

@@ -35,13 +35,32 @@ from repro.runtime import (NodeLossError, Prefetcher, RestartSignal,
 PyTree = Any
 
 
+def make_device_stage(mesh, dp_axes):
+    """Prefetch staging fn that `jax.device_put`s every batch leaf onto
+    the mesh (dim 0 sharded over the DP axes) from the prefetch thread,
+    so the step loop never pays the host->device transfer either —
+    the explicit-staging arm of the ROADMAP's prefetch-depth item."""
+    from jax.sharding import NamedSharding
+    from repro.parallel.sharding import batch_specs
+
+    def stage(batch):
+        import jax.numpy as jnp
+        arrs = {k: jnp.asarray(v) for k, v in batch.items()}
+        specs = batch_specs(arrs, dp_axes)
+        return {k: jax.device_put(arrs[k], NamedSharding(mesh, specs[k]))
+                for k in arrs}
+
+    return stage
+
+
 class StepPipeline:
     """Drives one `TrainSession`'s training loop with overlapped stages.
 
     The session owns model/mesh/runtime/state; the pipeline owns the
-    *schedule*: resume decision, prefetch lifecycle, step timing,
-    callback dispatch, elastic flag consumption, and the end-of-run
-    barriers (pending checkpoint writes, prefetch shutdown).
+    *schedule*: resume decision, prefetch lifecycle (depth + staging per
+    EngineConfig.prefetch_depth/device_stage), step timing, callback
+    dispatch, elastic flag consumption, and the end-of-run barriers
+    (pending checkpoint writes, prefetch shutdown).
     """
 
     def __init__(self, session):
@@ -80,7 +99,11 @@ class StepPipeline:
         for cb in s.callbacks:
             cb.on_fit_start(s, start)
         if s.config.prefetch and start < steps:
-            self.prefetcher = Prefetcher(s.source, limit=steps)
+            stage = (make_device_stage(s.mesh, s.runtime.dp_axes)
+                     if s.config.device_stage else None)
+            self.prefetcher = Prefetcher(s.source, limit=steps,
+                                         depth=s.config.prefetch_depth,
+                                         stage=stage)
             self.prefetcher.schedule(start)
         history: List[Dict[str, float]] = []
         try:

@@ -36,8 +36,8 @@ from typing import Any, Callable, Dict, Optional, Sequence
 
 from repro.core import adasum as A
 from repro.core import rvh as R
-from repro.core.combine import (CombineConfig, tree_combine_per_layer,
-                                tree_combine_whole)
+from repro.core.combine import (CombineConfig, build_fused_combiner,
+                                tree_combine_per_layer, tree_combine_whole)
 
 PyTree = Any
 Combiner = Callable[[PyTree], PyTree]
@@ -75,6 +75,7 @@ def registry_key(op: str, backend: str = "") -> str:
         return op
     if op == "adasum":
         return {"gspmd_tree": "adasum-gspmd", "rvh": "adasum-rvh",
+                "fused": "adasum-fused",
                 "linear": "adasum-linear", "": "adasum-gspmd"}.get(backend,
                                                                    backend)
     return op   # custom registry entries are addressed by op name directly
@@ -103,8 +104,32 @@ def _mean(cfg, *, mesh=None, dp_axes=(), leaf_specs=None):
 
 @register_combiner("adasum-gspmd")
 def _adasum_gspmd(cfg, *, mesh=None, dp_axes=(), leaf_specs=None):
+    """Default backend: bucketed single-pass fused combine (cfg.fused,
+    default on), falling back to the per-leaf reference tree when fusion
+    cannot apply (lane axis device-sharded: span == dp) or is opted out
+    (cfg.fused=False / EngineConfig.fused_combine=False)."""
+    if cfg.fused:
+        fused = build_fused_combiner(cfg, mesh=mesh, dp_axes=dp_axes,
+                                     leaf_specs=leaf_specs)
+        if fused is not None:
+            return fused
     fn = tree_combine_per_layer if cfg.per_layer else tree_combine_whole
     return lambda stacked: fn(stacked, cfg.acc)
+
+
+@register_combiner("adasum-fused")
+def _adasum_fused(cfg, *, mesh=None, dp_axes=(), leaf_specs=None):
+    """The fused bucketed combine, explicitly — no reference fallback.
+    Selected via backend='fused' (or combine='adasum-fused'); errors
+    loudly where adasum-gspmd would silently degrade."""
+    fused = build_fused_combiner(cfg, mesh=mesh, dp_axes=dp_axes,
+                                 leaf_specs=leaf_specs)
+    if fused is None:
+        raise ValueError(
+            "adasum-fused: the lane axis is device-sharded (one lane per "
+            "DP rank); use backend='rvh' (paper Algorithm 1) or "
+            "backend='gspmd_tree' there")
+    return fused
 
 
 @register_combiner("adasum-linear")
@@ -181,4 +206,5 @@ def _adasum_rvh(cfg, *, mesh=None, dp_axes=(), leaf_specs=None):
     return lambda stacked: R.adasum_rvh_pytree(
         stacked, mesh, tuple(dp_axes), leaf_specs=leaf_specs,
         per_layer=cfg.per_layer, acc_dtype=cfg.acc,
-        use_pallas=cfg.use_pallas, compress=cfg.compress)
+        use_pallas=cfg.use_pallas, compress=cfg.compress,
+        bucket_bytes=cfg.fusion_bytes)

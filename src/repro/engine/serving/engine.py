@@ -96,10 +96,12 @@ def resolve_serve_parts(config, *, model=None, mesh=None, params=None,
 
 
 def _make_parallel_prefill(model, cap: int):
+    """Returns the last-position logits [B, V] (not an argmax'd token):
+    the engine applies the per-request sampling policy — greedy argmax
+    by default, bitwise the old fused path."""
     def prefill(params, tokens, lengths):
         logits, cache = model.prefill_cache(params, tokens, lengths, cap)
-        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-        return nxt[:, None], cache
+        return logits[:, -1, :], cache
     return prefill
 
 
@@ -137,15 +139,16 @@ def _make_scan_prefill(model, cap: int, dtypes):
         cache0 = jax.tree.map(
             lambda c, dt: c.astype(dt),
             model.init_cache(params, B, cap, per_slot=True), dtypes)
-        last0 = jnp.zeros((B, 1), jnp.int32)
+        V = model.cfg.vocab_size
+        last0 = jnp.zeros((B, V), jnp.float32)
 
         def body(carry, t):
             cache, last = carry
             tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
             logits, new_cache = model.decode_step(params, tok, cache)
             cache = select_rows(t < lengths, new_cache, cache)
-            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-            last = jnp.where((t == lengths - 1)[:, None], nxt[:, None], last)
+            last = jnp.where((t == lengths - 1)[:, None],
+                             logits[:, -1, :].astype(jnp.float32), last)
             return (cache, last), None
 
         (cache, last), _ = jax.lax.scan(body, (cache0, last0),
@@ -206,10 +209,24 @@ class ServeEngine:
             model.init_cache(params, self.max_slots, self.max_len,
                              per_slot=True), self._cache_dtypes)
         self._tokens = np.zeros((self.max_slots, 1), np.int32)
+        # per-slot sampling policy rows (fixed [max_slots] shapes: policy
+        # churn never retraces). Greedy slots (temperature 0) take the
+        # bitwise argmax path; the all-greedy tick skips sampling math
+        # entirely via the plain decode step.
+        self._temp = np.zeros((self.max_slots,), np.float32)
+        self._topk = np.zeros((self.max_slots,), np.int32)
+        self._topp = np.ones((self.max_slots,), np.float32)
+        self._keys = np.zeros((self.max_slots, 2), np.uint32)
+        self._pos = np.zeros((self.max_slots,), np.int32)
         # NOTE: no buffer donation — hot-reload may decode the same cache
         # under two param versions in one tick
-        from ..build import make_batched_decode_step
+        from ..build import (make_batched_decode_step,
+                             make_sampling_decode_step, sample_logits)
         self._decode = jax.jit(make_batched_decode_step(model))
+        self._decode_sampled = jax.jit(make_sampling_decode_step(model))
+        self._sample = jax.jit(sample_logits)
+        self._argmax = jax.jit(
+            lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
         self._insert = jax.jit(insert_rows_at)
         self._select = jax.jit(select_rows)
         self._prefill = jax.jit(
@@ -299,7 +316,14 @@ class ServeEngine:
         groups: Dict[int, list] = {}
         for slot, handle in admitted:
             handle.version = self._version
-            P = _bucket(len(handle.request.prompt), self.max_len)
+            req = handle.request
+            self._temp[slot] = req.temperature
+            self._topk[slot] = req.top_k
+            self._topp[slot] = req.top_p
+            self._keys[slot] = np.asarray(
+                jax.random.PRNGKey(req.sampling_seed), np.uint32)
+            self._pos[slot] = 0
+            P = _bucket(len(req.prompt), self.max_len)
             groups.setdefault(P, []).append((slot, handle))
         params = self._params[self._version]
         for P, group in groups.items():
@@ -310,28 +334,48 @@ class ServeEngine:
                 prompt = handle.request.prompt
                 toks[i, :len(prompt)] = prompt
                 lengths[i] = len(prompt)
-            nxt, rows = self._prefill(params, jnp.asarray(toks),
-                                      jnp.asarray(lengths))
-            slots = jnp.asarray([slot for slot, _ in group])
-            self.cache = self._insert(self.cache, rows, slots)
+            logits, rows = self._prefill(params, jnp.asarray(toks),
+                                         jnp.asarray(lengths))
+            slots = [slot for slot, _ in group]
+            self.cache = self._insert(self.cache, rows, jnp.asarray(slots))
             self.stats["prefill_calls"] += 1
-            nxt = np.asarray(nxt)
+            # first generated token: the group's sampling policies at
+            # pos 0 (all-greedy groups stay on the bitwise argmax path)
+            if all(h.request.temperature <= 0 for _, h in group):
+                nxt = np.asarray(self._argmax(logits))
+            else:
+                nxt = np.asarray(self._sample(
+                    logits, jnp.asarray(self._keys[slots]),
+                    jnp.asarray(self._pos[slots]),
+                    jnp.asarray(self._temp[slots]),
+                    jnp.asarray(self._topk[slots]),
+                    jnp.asarray(self._topp[slots])))
             for i, (_, handle) in enumerate(group):
-                self._commit(handle, int(nxt[i, 0]))
+                self._commit(handle, int(nxt[i]))
 
     def _decode_tick(self):
         active = dict(self.scheduler.active)       # slot -> handle
         versions = sorted({h.version for h in active.values()})
         toks = jnp.asarray(self._tokens)
+        # all-greedy ticks take the plain argmax decode (bitwise the
+        # pre-sampling path, no wasted sort/gumbel work); any sampled
+        # slot switches the tick to the sampling step, where greedy rows
+        # still resolve to the identical argmax
+        if any(h.request.temperature > 0 for h in active.values()):
+            policy = (jnp.asarray(self._keys), jnp.asarray(self._pos),
+                      jnp.asarray(self._temp), jnp.asarray(self._topk),
+                      jnp.asarray(self._topp))
+            decode = lambda params: self._decode_sampled(
+                params, toks, self.cache, *policy)
+        else:
+            decode = lambda params: self._decode(params, toks, self.cache)
         if len(versions) == 1:
-            nxt, self.cache = self._decode(self._params[versions[0]], toks,
-                                           self.cache)
+            nxt, self.cache = decode(self._params[versions[0]])
             nxt = np.asarray(nxt)
         else:
             # transition tick(s): decode once per live version, then keep
             # each slot's row from the version it is pinned to
-            outs = {v: self._decode(self._params[v], toks, self.cache)
-                    for v in versions}
+            outs = {v: decode(self._params[v]) for v in versions}
             merged = outs[versions[0]][1]
             nxt = np.asarray(outs[versions[0]][0]).copy()
             for v in versions[1:]:
@@ -350,6 +394,9 @@ class ServeEngine:
         """Record one generated token; stream it; retire if finished."""
         handle.tokens.append(token)
         self._tokens[handle.slot, 0] = token
+        # next sample position = #tokens generated so far: token t is a
+        # pure function of (seed, t) regardless of batch composition
+        self._pos[handle.slot] = len(handle.tokens)
         self.stats["generated_tokens"] += 1
         if handle.first_token_at is None:
             handle.first_token_at = time.perf_counter()

@@ -24,14 +24,25 @@ _REQ_IDS = itertools.count()
 
 @dataclasses.dataclass
 class GenerationRequest:
-    """One decode job: a prompt and its sampling budget.
+    """One decode job: a prompt, its sampling budget, and its policy.
 
     stream: optional per-token callback `fn(handle, token)` fired as each
-    token is committed (including the one produced by the prefill)."""
+    token is committed (including the one produced by the prefill).
+
+    Sampling: `temperature=0` (the default) is greedy argmax — the
+    tested-bitwise path. With `temperature>0` the engine samples, after
+    optional `top_k` (0 = off) and nucleus `top_p` (1.0 = off)
+    truncation. Decode stays reproducible: token t of a request is a
+    pure function of (`seed`, t) — `seed` defaults to the request_id —
+    independent of batch composition or admission timing."""
     prompt: np.ndarray                      # [T] int token ids
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     stream: Optional[Callable] = None
+    temperature: float = 0.0                # 0 => greedy argmax
+    top_k: int = 0                          # 0 => no top-k truncation
+    top_p: float = 1.0                      # 1.0 => no nucleus truncation
+    seed: Optional[int] = None              # None => request_id
     request_id: int = dataclasses.field(
         default_factory=lambda: next(_REQ_IDS))
 
@@ -41,6 +52,17 @@ class GenerationRequest:
             raise ValueError("empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, "
+                             f"got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def sampling_seed(self) -> int:
+        return self.request_id if self.seed is None else self.seed
 
 
 class RequestHandle:

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .adasum_dots import LANES, SUBLANES
+from .adasum_dots import LANES, SUBLANES, auto_block_elems
 from .backend import resolve_interpret
 
 
@@ -28,12 +28,17 @@ def _combine_kernel(s1_ref, s2_ref, a_ref, b_ref, o_ref):
 
 @functools.partial(jax.jit, static_argnames=("block_elems", "interpret"))
 def block_combine(a: jnp.ndarray, b: jnp.ndarray, s1b: jnp.ndarray,
-                  s2b: jnp.ndarray, *, block_elems: int = 8192,
+                  s2b: jnp.ndarray, *, block_elems: Optional[int] = 8192,
                   interpret: Optional[bool] = None) -> jnp.ndarray:
     """(n,), (n,), (nblk,), (nblk,) -> (n,) fused scale-add.
+    block_elems=None derives the block from the scalar count (n // nblk)
+    so callers that auto-selected their dots block stay consistent.
     interpret=None: compiled on TPU, interpreted elsewhere."""
     interpret = resolve_interpret(interpret)
     n = a.shape[0]
+    if block_elems is None:
+        block_elems = n // max(s1b.shape[0], 1)
+        auto_block_elems(block_elems)   # validates the granule contract
     assert n % block_elems == 0, (n, block_elems)
     assert block_elems % (SUBLANES * LANES) == 0, block_elems
     rows = block_elems // LANES

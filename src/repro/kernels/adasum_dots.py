@@ -27,6 +27,23 @@ from .backend import resolve_interpret
 
 LANES = 128      # TPU VPU lane width
 SUBLANES = 8     # fp32 sublane tile
+UNIT = SUBLANES * LANES   # minimum block granule (fp32 tile)
+
+
+def auto_block_elems(n: int, max_elems: int = 8192) -> int:
+    """Largest multiple of UNIT (=1024) that divides `n`, capped at
+    `max_elems`. This is the `block_elems=None` resolution rule for the
+    block kernels: any buffer padded by FusionLayout (leaf_align >= UNIT)
+    always has a valid block, so odd-sized buckets never trip the shape
+    asserts."""
+    if n <= 0 or n % UNIT:
+        raise ValueError(
+            f"buffer length {n} is not a positive multiple of {UNIT}; pad "
+            f"it via fusion.make_layout(leaf_align={UNIT}) (or larger)")
+    b = min(max_elems - max_elems % UNIT, n) or UNIT
+    while b > UNIT and n % b:
+        b -= UNIT
+    return b
 
 
 def _dots_kernel(a_ref, b_ref, o_ref):
@@ -38,15 +55,19 @@ def _dots_kernel(a_ref, b_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_elems", "interpret"))
-def block_dots(a: jnp.ndarray, b: jnp.ndarray, *, block_elems: int = 8192,
+def block_dots(a: jnp.ndarray, b: jnp.ndarray, *,
+               block_elems: Optional[int] = 8192,
                interpret: Optional[bool] = None) -> jnp.ndarray:
     """(n,) x2 -> (n//block_elems, 3) fp32 partial dots.
 
     n must be a multiple of block_elems; block_elems a multiple of
-    SUBLANES*LANES (=1024). interpret=None: compiled on TPU,
-    interpreted elsewhere (kernels.backend)."""
+    SUBLANES*LANES (=1024) — or None to auto-select the largest valid
+    block from the buffer length (auto_block_elems). interpret=None:
+    compiled on TPU, interpreted elsewhere (kernels.backend)."""
     interpret = resolve_interpret(interpret)
     n = a.shape[0]
+    if block_elems is None:
+        block_elems = auto_block_elems(n)
     assert n % block_elems == 0, (n, block_elems)
     assert block_elems % (SUBLANES * LANES) == 0, block_elems
     rows = block_elems // LANES

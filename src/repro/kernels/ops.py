@@ -5,13 +5,20 @@ scalars), built on the block kernels + FusionLayout alignment.
 `interpret` resolution lives in `kernels.backend`: interpreted off-TPU
 (CPU validation per the brief), compiled on real TPU backends. The block
 kernels now resolve it themselves, so these wrappers pass nothing.
+
+`block_elems=None` auto-selects a valid block from the buffer length
+(see `adasum_dots.auto_block_elems`); callers relying on auto must have
+built their FusionLayout with `leaf_align` a multiple of the resolved
+block so segment boundaries never cross a kernel block.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from .adasum_dots import block_dots
+from .adasum_dots import auto_block_elems, block_dots
 from .adasum_combine import block_combine
 
 # Alignment contract with repro.core.fusion: every layer starts at a
@@ -22,11 +29,14 @@ BLOCK_ELEMS = 8192
 
 def adasum_segment_dots(a: jnp.ndarray, b: jnp.ndarray, seg: jnp.ndarray,
                         num_segments: int, acc_dtype=jnp.float32,
-                        block_elems: int = BLOCK_ELEMS) -> jnp.ndarray:
+                        block_elems: Optional[int] = BLOCK_ELEMS
+                        ) -> jnp.ndarray:
     """[n] x2 + seg[n] -> [num_segments, 3] per-segment [a·b,a·a,b·b].
 
     Requires the FusionLayout block-alignment contract (each block is a
     single segment)."""
+    if block_elems is None:
+        block_elems = auto_block_elems(a.shape[0])
     blocks = block_dots(a, b, block_elems=block_elems)
     block_seg = seg[::block_elems]
     out = jax.ops.segment_sum(blocks, block_seg, num_segments=num_segments)
@@ -35,8 +45,10 @@ def adasum_segment_dots(a: jnp.ndarray, b: jnp.ndarray, seg: jnp.ndarray,
 
 def adasum_combine(a: jnp.ndarray, b: jnp.ndarray, s1: jnp.ndarray,
                    s2: jnp.ndarray, seg: jnp.ndarray,
-                   block_elems: int = BLOCK_ELEMS) -> jnp.ndarray:
+                   block_elems: Optional[int] = BLOCK_ELEMS) -> jnp.ndarray:
     """x' = s1[seg]·a + s2[seg]·b via the fused combine kernel."""
+    if block_elems is None:
+        block_elems = auto_block_elems(a.shape[0])
     block_seg = seg[::block_elems]
     s1b = s1[block_seg]
     s2b = s2[block_seg]

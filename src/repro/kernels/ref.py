@@ -35,3 +35,14 @@ def segment_dots_ref(a, b, seg, num_segments, acc_dtype=jnp.float32):
     bf = b.astype(acc_dtype)
     prods = jnp.stack([af * bf, af * af, bf * bf], axis=-1)
     return jax.ops.segment_sum(prods, seg, num_segments=num_segments)
+
+
+def block_segment_dots_ref(a, b, block_seg, num_segments, block_elems,
+                           acc_dtype=jnp.float32):
+    """Per-segment dots via per-block partials + a tiny block-level
+    segment reduction — the non-Pallas arm of the fused bucketed combine
+    (same structure as block_dots + segment_sum, pure jnp). Valid under
+    the FusionLayout alignment contract (no segment crosses a block)."""
+    blocks = block_dots_ref(a, b, block_elems, acc_dtype)
+    return jax.ops.segment_sum(blocks, block_seg,
+                               num_segments=num_segments).astype(acc_dtype)

@@ -39,6 +39,15 @@ def main(argv=None):
                     help="decode ticks between request arrivals")
     ap.add_argument("--prefill-mode", default="auto",
                     choices=["auto", "parallel", "scan"])
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy argmax (default); >0 samples")
+    ap.add_argument("--top-k", type=int, default=0, dest="top_k",
+                    help="top-k truncation (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0, dest="top_p",
+                    help="nucleus truncation (1.0 = off)")
+    ap.add_argument("--sample-seed", type=int, default=None,
+                    dest="sample_seed",
+                    help="base sampling seed (default: per request_id)")
     ap.add_argument("--ckpt-dir", default="", dest="ckpt_dir")
     ap.add_argument("--hot-reload", action="store_true", dest="hot_reload")
     ap.add_argument("--legacy", action="store_true",
@@ -104,9 +113,11 @@ def main(argv=None):
         # batching case (admit into a running batch, retire independently)
         plen = max(1, min(args.prompt_len + int(rng.randint(-4, 5)),
                           max_len - args.gen))
+        seed = None if args.sample_seed is None else args.sample_seed + i
         handles.append(engine.submit(GenerationRequest(
             prompt=rng.randint(0, V, plen), max_new_tokens=args.gen,
-            stream=stream)))
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p, seed=seed, stream=stream)))
         for _ in range(args.stagger):
             engine.step()
     engine.drain()

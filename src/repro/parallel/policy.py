@@ -38,6 +38,8 @@ class RunPolicy:
     acc_dtype: str = "float32"        # dot accumulation dtype (§4.4.1)
     use_pallas: bool = False          # Pallas kernels for dots/combine
     compress: str = "none"            # 'int8' RVH wire compression
+    fused_combine: bool = True        # bucketed single-pass gspmd_tree path
+    fusion_threshold_mb: int = 64     # Horovod-style bucket budget (§4.4.3)
 
 
 def get_policy(arch: str) -> RunPolicy:

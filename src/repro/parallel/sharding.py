@@ -45,6 +45,21 @@ def _fits(dim: int, size: int) -> bool:
     return size > 1 and dim % size == 0
 
 
+def spec_axes(spec: Optional[P]) -> Tuple[str, ...]:
+    """The sorted set of mesh axes a PartitionSpec shards over — the
+    grouping/psum key for sharding-aware fused combines (leaves sharded
+    over the same axes can share one fused buffer: their local shards
+    are disjoint slices, so one psum over exactly these axes finishes
+    every dot without replication corrections)."""
+    axes = set()
+    for entry in (spec or ()):
+        if entry is None:
+            continue
+        for ax in (entry if isinstance(entry, tuple) else (entry,)):
+            axes.add(ax)
+    return tuple(sorted(axes))
+
+
 def _spec2(shape, pol: ShardingPolicy, tp_dim: int, lead: int = 0):
     """Spec for a matrix whose dim `tp_dim` gets TP and the other big dim
     gets FSDP. `lead` leading dims (layer-stack) stay unsharded."""

@@ -88,6 +88,7 @@ class TestRegistry:
         assert registry_key("adasum", "gspmd_tree") == "adasum-gspmd"
         assert registry_key("adasum", "rvh") == "adasum-rvh"
         assert registry_key("adasum", "linear") == "adasum-linear"
+        assert registry_key("adasum", "fused") == "adasum-fused"
         assert registry_key("custom-op", "") == "custom-op"
 
     def test_register_and_dispatch_custom(self):
@@ -111,7 +112,11 @@ class TestRegistry:
 
     def test_registry_matches_reference_combiners(self):
         """Registry-dispatched outputs must be bit-identical to the
-        reference implementations build_combiner used pre-refactor."""
+        reference implementations build_combiner used pre-refactor.
+        gspmd_tree is pinned with fused=False (the opt-out keeps the
+        exact per-leaf reference tree); the fused default is covered
+        within fp32-accumulation tolerance below and exhaustively in
+        tests/test_combine_fused.py."""
         from repro.core import adasum as A
         from repro.core.combine import (tree_combine_per_layer,
                                         tree_combine_whole)
@@ -126,10 +131,10 @@ class TestRegistry:
              lambda s: A.sum_reduce(s, mean=False)),
             (CombineConfig(op="mean"),
              lambda s: A.sum_reduce(s, mean=True)),
-            (CombineConfig(op="adasum", backend="gspmd_tree"),
+            (CombineConfig(op="adasum", backend="gspmd_tree", fused=False),
              lambda s: tree_combine_per_layer(s, jnp.float32)),
             (CombineConfig(op="adasum", backend="gspmd_tree",
-                           per_layer=False),
+                           per_layer=False, fused=False),
              lambda s: tree_combine_whole(s, jnp.float32)),
             (CombineConfig(op="adasum", backend="linear"),
              lambda s: A.adasum_linear_reduce(
@@ -146,6 +151,17 @@ class TestRegistry:
                                               err_msg=str(ccfg))
                 np.testing.assert_array_equal(
                     a, np.asarray(via_legacy_api[k]), err_msg=str(ccfg))
+
+        # the fused default (and the explicit fused backend) agree with
+        # the reference within fp32-accumulation tolerance
+        ref = tree_combine_per_layer(stacked, jnp.float32)
+        for backend in ("gspmd_tree", "fused"):
+            out = make_combiner(
+                CombineConfig(op="adasum", backend=backend))(stacked)
+            for k in stacked:
+                np.testing.assert_allclose(
+                    np.asarray(out[k]), np.asarray(ref[k]),
+                    rtol=1e-5, atol=1e-5, err_msg=backend)
 
     def test_registry_rvh_matches_reference(self):
         """adasum-rvh through the registry == single-device tree reduce

@@ -18,6 +18,10 @@ echo "== train smoke run (3 steps, reduced hymba) =="
 python -m repro.launch.train --arch hymba-1p5b --reduced --steps 3 \
     --seq 32 --batch 8
 
+echo "== fused combine benchmark smoke (tiny shapes) =="
+python -m benchmarks.combine_fused --smoke | grep -q "combine_fused smoke OK" || {
+    echo "combine_fused smoke failed"; exit 1; }
+
 echo "== serve smoke (3 staggered requests, continuous batching) =="
 serve_out=$(python -m repro.launch.serve --arch qwen3-32b --reduced \
     --requests 3 --prompt-len 16 --gen 8 --max-slots 2 --stagger 2)
