@@ -91,10 +91,21 @@ class EngineConfig:
     # ---- serving (engine/serving.ServeEngine) ----
     max_slots: int = 8          # continuous-batching decode slot pool
     max_len: int = 0            # per-slot cache capacity; 0 => seq_len
+                                # (rounded up to a page multiple when
+                                # kv_layout='paged' — see serve_max_len())
     hot_reload: bool = False    # poll ckpt_dir mid-stream; new requests
                                 # see new weights, in-flight finish on old
     prefill_mode: str = "auto"  # 'parallel' (one fused forward) | 'scan'
                                 # (fused decode scan) | 'auto' (by family)
+    kv_layout: str = "paged"    # 'paged' (page-pool arena, the default)
+                                # | 'dense' (per-slot max_len buffers)
+    page_size: int = 16         # tokens per KV page (paged layout)
+    kv_pages: int = 0           # physical pages in the arena (incl. the
+                                # reserved trash page); 0 => enough for
+                                # every slot at full capacity
+    prefix_sharing: bool = True # map page-aligned shared prompt prefixes
+                                # onto the same read-only pages; prefill
+                                # computes only the unshared tail
 
     # ------------------------------------------------------------ validation
     def validate(self, dp_total: Optional[int] = None) -> "EngineConfig":
@@ -144,6 +155,25 @@ class EngineConfig:
         if self.prefill_mode not in ("auto", "parallel", "scan"):
             raise ValueError(f"prefill_mode={self.prefill_mode!r}; "
                              f"expected auto | parallel | scan")
+        if self.kv_layout not in ("paged", "dense"):
+            raise ValueError(f"kv_layout={self.kv_layout!r}; "
+                             f"expected paged | dense")
+        if self.kv_layout == "paged":
+            if self.page_size < 1:
+                raise ValueError(
+                    f"page_size must be >= 1 for kv_layout='paged', got "
+                    f"{self.page_size} (each KV page holds page_size "
+                    f"token rows)")
+            if self.kv_pages < 0:
+                raise ValueError(f"kv_pages must be >= 0 (0 = full "
+                                 f"provisioning), got {self.kv_pages}")
+            if self.kv_pages == 1:
+                raise ValueError(
+                    f"kv_pages=1 is only the reserved trash page; the "
+                    f"engine needs at least one allocatable page (the "
+                    f"model-aware one-full-slot minimum — sliding "
+                    f"windows cap it below max_len — is checked at "
+                    f"ServeEngine build)")
         if dp_total is not None:
             span = self.span or dp_total
             if span > dp_total or dp_total % span:
@@ -168,6 +198,17 @@ class EngineConfig:
                     f"accum_steps={self.accum_steps} needs lane batch "
                     f"({lane_rows}) divisible by it")
         return self
+
+    def serve_max_len(self) -> int:
+        """The per-slot cache capacity the serve engine actually builds:
+        `max_len` (0 => seq_len — the old default now composes with
+        paging), rounded UP to a page multiple under kv_layout='paged'
+        so logical rows tile pages exactly. Rounding only ever loosens
+        the request-capacity check."""
+        n = self.max_len or self.seq_len
+        if self.kv_layout == "paged" and self.page_size > 0:
+            n = -(-n // self.page_size) * self.page_size
+        return n
 
     # ------------------------------------------------------------ round-trip
     def to_dict(self) -> Dict[str, Any]:
@@ -290,6 +331,19 @@ class EngineConfig:
                         help="serving: pick up new checkpoints mid-stream")
         ap.add_argument("--prefill-mode", default=None, dest="prefill_mode",
                         choices=["auto", "parallel", "scan"])
+        ap.add_argument("--kv-layout", default=None, dest="kv_layout",
+                        choices=["paged", "dense"],
+                        help="serving: paged KV arena (default) or dense "
+                        "per-slot buffers")
+        ap.add_argument("--page-size", type=int, default=None,
+                        dest="page_size",
+                        help="serving: token rows per KV page")
+        ap.add_argument("--kv-pages", type=int, default=None,
+                        dest="kv_pages",
+                        help="serving: physical pages in the KV arena "
+                        "(0 = enough for every slot at full capacity)")
+        ap.add_argument("--no-prefix-sharing", action="store_true",
+                        help="serving: disable shared-prefix page reuse")
         args, extra = ap.parse_known_args(argv)
         if extra:
             raise SystemExit(f"unknown arguments: {extra}")
@@ -308,6 +362,8 @@ class EngineConfig:
             over["prefetch"] = False
         if args.sync_checkpoint:
             over["async_checkpoint"] = False
+        if args.no_prefix_sharing:
+            over["prefix_sharing"] = False
         # Local CLI runs ride small host meshes: FSDP/ZeRO-2 presets from
         # the pod-scale table are switched off (as launch/train.py always
         # did) unless explicitly re-enabled via defaults.

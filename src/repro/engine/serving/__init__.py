@@ -7,17 +7,22 @@
     ContinuousBatchingScheduler
                      host-side slot admission/retirement policy
     HotReloader      checkpoint watcher -> versioned param swaps
+    PagePool         host-side paged-KV allocator (refcounts, COW,
+                     trash page 0)
+    PrefixIndex      shared-prefix page registry (exact byte-chain keys,
+                     LRU eviction)
     insert_rows / select_rows / slot_positions
-                     the slotted-cache device primitives
+                     the slotted-cache device primitives (paged
+                     counterparts live in .slots too)
 """
 from .engine import ServeEngine
 from .reload import HotReloader
 from .scheduler import (ContinuousBatchingScheduler, GenerationRequest,
-                        RequestHandle)
-from .slots import insert_rows, select_rows, slot_positions
+                        PrefixIndex, RequestHandle)
+from .slots import PagePool, insert_rows, select_rows, slot_positions
 
 __all__ = [
     "ServeEngine", "GenerationRequest", "RequestHandle",
-    "ContinuousBatchingScheduler", "HotReloader",
+    "ContinuousBatchingScheduler", "HotReloader", "PagePool", "PrefixIndex",
     "insert_rows", "select_rows", "slot_positions",
 ]

@@ -27,6 +27,20 @@ loop this is a different shape of API — requests, not batches:
 The engine is deliberately single-threaded and tick-driven (`step()` =
 admit + one batched decode + retire): callers own the concurrency story,
 and tests get determinism for free.
+
+KV layout (PR 5): the default is **paged** — attention K/V lives in a
+global page arena sized in `page_size`-token pages, slots address it
+through int32 page tables, and a host-side `PagePool` allocates on
+admission/growth, frees on retirement, copies-on-write shared pages and
+evicts cold prefix pages under pressure. Short requests hold only the
+pages their tokens occupy (not `max_len` capacity), page-aligned shared
+prompt prefixes are mapped read-only onto the same physical pages with
+prefill computing only the unshared tail, and when the arena is
+undersized (`kv_pages`) the engine preempts the youngest request
+vLLM-style (recompute on re-admission — bitwise-identical continuation,
+though a preempted request restarts on the CURRENT param version).
+Greedy tokens are bitwise-identical to `kv_layout='dense'`; page churn
+never changes a device shape, so the no-retrace contract holds.
 """
 from __future__ import annotations
 
@@ -39,8 +53,11 @@ import numpy as np
 
 from .reload import HotReloader
 from .scheduler import (ContinuousBatchingScheduler, GenerationRequest,
-                        RequestHandle)
-from .slots import insert_rows_at, select_rows
+                        PrefixIndex, RequestHandle)
+from .slots import (PagePool, cast_paged_like as _cast_paged, copy_pages,
+                    dense_kv_bytes, gather_prefix, insert_rows_at,
+                    paged_insert_rows, paged_kv_page_bytes, select_rows,
+                    select_rows_paged, set_page_tables)
 
 PyTree = Any
 
@@ -112,17 +129,20 @@ def _steady_cache_dtypes(model, params, batch: int, cap: int):
     the first step. Serving needs the steady layout up front — the decode
     tick must never retrace and the prefill scan carry must be stable —
     and starting there is exact: the initial zeros are representable in
-    either dtype."""
-    cache = model.init_cache(params, batch, cap, per_slot=True)
-    tok = jnp.zeros((batch, 1), jnp.int32)
+    either dtype. Runs entirely under eval_shape: nothing is allocated
+    on device (a paged engine must not spike to the dense footprint it
+    exists to avoid)."""
+    cache = jax.eval_shape(
+        lambda p: model.init_cache(p, batch, cap, per_slot=True), params)
+    tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
     for _ in range(3):
         new = jax.eval_shape(model.decode_step, params, tok, cache)[1]
         drift = jax.tree.leaves(jax.tree.map(
             lambda c, n: c.dtype != n.dtype, cache, new))
         if not any(drift):
             break
-        cache = jax.tree.map(lambda c, n: jnp.zeros(c.shape, n.dtype),
-                             cache, new)
+        cache = jax.tree.map(
+            lambda c, n: jax.ShapeDtypeStruct(c.shape, n.dtype), cache, new)
     else:
         raise ValueError(f"{model.cfg.name}: decode cache dtypes do not "
                          f"reach a fixed point")
@@ -173,7 +193,10 @@ class ServeEngine:
         self.model = model
         self.mesh = mesh
         self.max_slots = config.max_slots
-        self.max_len = config.max_len or config.seq_len
+        # max_len=0 => seq_len, rounded up to a page multiple when paged
+        # (the old bare `max_len or seq_len` default now composes with
+        # page_size instead of tripping the tiling assert)
+        self.max_len = config.serve_max_len()
         self.scheduler = ContinuousBatchingScheduler(self.max_slots,
                                                      self.max_len)
         mode = config.prefill_mode
@@ -200,14 +223,73 @@ class ServeEngine:
                                          loaded_step=loaded_step)
 
         # steady-state leaf dtypes: the decode tick never retraces and
-        # the prefill paths land rows in exactly this layout
+        # the prefill paths land rows in exactly this layout (the DENSE
+        # per-slot layout — also what every prefill path emits; the
+        # paged arena borrows its dtypes leaf-for-leaf)
         self._cache_dtypes = _steady_cache_dtypes(model, params,
                                                   self.max_slots,
                                                   self.max_len)
-        self.cache = jax.tree.map(
-            lambda c, dt: c.astype(dt),
-            model.init_cache(params, self.max_slots, self.max_len,
-                             per_slot=True), self._cache_dtypes)
+        # paged KV arena (the default): recurrent-only families (rwkv)
+        # have no KV to page and quietly keep the dense slotted layout
+        self.paged = (config.kv_layout == "paged" and cfg.family != "ssm")
+        if self.paged:
+            from repro.models.attention import paged_capacity
+            ps = config.page_size
+            cap = paged_capacity(cfg, self.max_len)
+            if cap % ps:
+                raise ValueError(
+                    f"{cfg.name}: paged cache capacity {cap} (sliding "
+                    f"window {cfg.sliding_window}) is not a multiple of "
+                    f"page_size={ps}; pick a page size dividing the "
+                    f"window so paged rows tile pages exactly "
+                    f"(kv_layout='dense' always works)")
+            self._page_size = ps
+            self._pages_per_slot = cap // ps
+            # full provisioning: every slot at capacity + the trash page.
+            # kv_pages can size the arena down (backpressure + preemption
+            # kick in) or up (a larger warm prefix cache).
+            full = self.max_slots * self._pages_per_slot + 1
+            self._num_pages = config.kv_pages or full
+            if self._num_pages < self._pages_per_slot + 1:
+                raise ValueError(
+                    f"kv_pages={self._num_pages} cannot hold even one "
+                    f"full slot: capacity {cap} needs "
+                    f"{self._pages_per_slot} pages of {ps} tokens plus "
+                    f"the reserved trash page "
+                    f"(>= {self._pages_per_slot + 1})")
+            self._pool = PagePool(self._num_pages, ps)
+            share = (config.prefix_sharing and self.prefill_mode == "parallel"
+                     and not cfg.sliding_window)
+            self._prefix = PrefixIndex(ps) if share else None
+            self._tables = np.zeros((self.max_slots, self._pages_per_slot),
+                                    np.int32)
+            self._owned = np.zeros_like(self._tables, bool)
+            self._shared = np.zeros_like(self._tables, bool)
+            self._tables_dirty = False
+            self._host_pos = np.zeros((self.max_slots,), np.int64)
+            self._admit_seq = np.zeros((self.max_slots,), np.int64)
+            self._seq = 0
+            self.cache = _cast_paged(
+                model.init_cache(params, self.max_slots, self.max_len,
+                                 per_slot=True,
+                                 paged=(ps, self._num_pages)),
+                self._cache_dtypes)
+            self._page_bytes = paged_kv_page_bytes(self.cache)
+            self._kv_capacity_bytes = (self._num_pages - 1) * self._page_bytes
+            self._paged_insert = jax.jit(paged_insert_rows)
+            self._set_tables = jax.jit(set_page_tables)
+            self._copy_pages = jax.jit(copy_pages)
+            self._select_paged = jax.jit(select_rows_paged)
+            self._gather_prefix = jax.jit(gather_prefix)
+        else:
+            self.cache = jax.tree.map(
+                lambda c, dt: c.astype(dt),
+                model.init_cache(params, self.max_slots, self.max_len,
+                                 per_slot=True), self._cache_dtypes)
+            self._page_bytes = 0
+            self._kv_capacity_bytes = dense_kv_bytes(self.cache)
+            self._pool = None
+            self._prefix = None
         self._tokens = np.zeros((self.max_slots, 1), np.int32)
         # per-slot sampling policy rows (fixed [max_slots] shapes: policy
         # churn never retraces). Greedy slots (temperature 0) take the
@@ -233,9 +315,31 @@ class ServeEngine:
             _make_parallel_prefill(model, self.max_len) if mode == "parallel"
             else _make_scan_prefill(model, self.max_len,
                                     self._cache_dtypes))
+        if self.paged and self._prefix is not None:
+            # shared-prefix extend: one forward over the UNSHARED TAIL
+            # only, attending to the gathered prefix pages. Compiles per
+            # (tail bucket, prefix page count) pair — prefixes are few
+            # (system prompts); the decode tick itself never retraces.
+            def _ext(params, toks, lengths, pfx, prefix_len):
+                logits, rows = model.prefill_cache(
+                    params, toks, lengths, self.max_len,
+                    prefix_kv=pfx, prefix_len=prefix_len)
+                return logits[:, -1, :], rows
+            self._prefill_ext = jax.jit(_ext,
+                                        static_argnames=("prefix_len",))
         self.stats = {"submitted": 0, "completed": 0, "generated_tokens": 0,
                       "prefill_calls": 0, "decode_steps": 0, "reloads": 0,
+                      "kv_bytes_in_use": 0, "peak_kv_bytes_in_use": 0,
+                      "kv_pages_used": 0, "kv_pages_free": (
+                          self._pool.pages_free if self._pool else 0),
+                      "prefix_hits": 0, "prefix_tokens_reused": 0,
+                      "cow_copies": 0, "preemptions": 0,
                       "started_at": None}
+        if not self.paged:
+            # dense slots pay full capacity up front — that constant IS
+            # the footprint (what paging exists to beat)
+            self.stats["kv_bytes_in_use"] = self._kv_capacity_bytes
+            self.stats["peak_kv_bytes_in_use"] = self._kv_capacity_bytes
 
     # ------------------------------------------------------- construction
     @classmethod
@@ -270,6 +374,16 @@ class ServeEngine:
         self._params[self._version] = params
         self._loaded_step = step
         self.stats["reloads"] += 1
+        # registered prefix pages hold K/V computed under the OLD
+        # weights — flush them so new admissions re-prefill under the
+        # new version (pages still referenced by in-flight old-version
+        # slots survive until those slots retire)
+        if self._prefix is not None:
+            while True:
+                pid = self._prefix.evict_lru()
+                if pid is None:
+                    break
+                self._pool.release([pid])
 
     def _gc_versions(self):
         live = {h.version for h in self.scheduler.active.values()}
@@ -288,19 +402,30 @@ class ServeEngine:
 
     # --------------------------------------------------------------- tick
     def step(self) -> bool:
-        """One scheduler tick: hot-reload poll -> admit (fused prefill)
-        -> one batched decode over the active slots -> retire finished.
-        Returns True while queued or in-flight work remains."""
+        """One scheduler tick: hot-reload poll -> admit (fused prefill;
+        paged admission reserves pages, shared prefixes prefill only the
+        unshared tail) -> one batched decode over the active slots (paged
+        growth/COW first) -> retire finished. Returns True while queued
+        or in-flight work remains."""
         if self._reloader is not None:
             got = self._reloader.poll()
             if got is not None:
                 self.swap_params(got[1], step=got[0])
-        admitted = self.scheduler.admit()
+        admitted = self.scheduler.admit(
+            self._reserve_pages if self.paged else None)
         if admitted:
             self._admit_batch(admitted)
         if self.scheduler.active:
             self._decode_tick()
         self._gc_versions()
+        if self.paged:
+            used = self._pool.pages_used
+            b = used * self._page_bytes
+            self.stats["kv_bytes_in_use"] = b
+            self.stats["peak_kv_bytes_in_use"] = max(
+                self.stats["peak_kv_bytes_in_use"], b)
+            self.stats["kv_pages_used"] = used
+            self.stats["kv_pages_free"] = self._pool.pages_free
         return self.scheduler.has_work
 
     def drain(self) -> None:
@@ -308,12 +433,140 @@ class ServeEngine:
         while self.step():
             pass
 
+    # ------------------------------------------------------ paged plumbing
+    def _full_prompt(self, handle) -> np.ndarray:
+        """Prompt plus any already-generated tokens: preempted requests
+        re-prefill their whole trajectory (recompute preemption), which
+        continues decode bitwise-identically."""
+        if not handle.tokens:
+            return handle.request.prompt
+        return np.concatenate([handle.request.prompt,
+                               np.asarray(handle.tokens, np.int32)])
+
+    def _prompt_pages(self, n_tokens: int) -> int:
+        """Pages the prefill of an n-token prompt touches (rolling SWA
+        prompts longer than the window only ever occupy the window)."""
+        return min(-(-n_tokens // self._page_size), self._pages_per_slot)
+
+    def _evict_until(self, n_free: int) -> bool:
+        """Drop cold prefix-index entries (LRU, leaf pages first) until
+        `n_free` pages are available. Only pages nothing else references
+        are candidates — evicting an entry whose page an active (or
+        reserving) slot still holds frees nothing and would just cold
+        the cache."""
+        while self._pool.pages_free < n_free:
+            if self._prefix is None:
+                return False
+            pid = self._prefix.evict_lru(
+                lambda p: self._pool.refcount(p) == 1)
+            if pid is None:
+                return False
+            self._pool.release([pid])
+        return True
+
+    def _reserve_pages(self, handle) -> bool:
+        """Admission gate + reservation: match the prompt against the
+        prefix index (read-only reuse), then allocate pages for the
+        unshared tail — evicting cold prefix pages if needed. Declines
+        (request stays queued, FIFO) when the pool cannot cover it."""
+        prompt = self._full_prompt(handle)
+        shared: List[int] = []
+        if self._prefix is not None:
+            shared = self._prefix.match(prompt)[:self._pages_per_slot]
+        # pin the matched pages FIRST: with this reference held, evicting
+        # their index entries can never free them, so the allocation below
+        # cannot hand a matched page back as this slot's own page
+        # (aliasing a shared table entry with an owned one)
+        self._pool.ref(shared)
+        n_own = self._prompt_pages(len(prompt)) - len(shared)
+        own = self._pool.alloc(n_own) if self._evict_until(n_own) else None
+        if own is None:
+            self._pool.release(shared)
+            return False
+        handle._admit_plan = (prompt, shared, own)
+        return True
+
+    def _release_slot_pages(self, slot: int):
+        """Drop this slot's page references (owned AND shared); pages
+        the prefix index still holds survive for future reuse."""
+        mask = self._owned[slot] | self._shared[slot]
+        if mask.any():
+            self._pool.release(self._tables[slot][mask].tolist())
+        self._tables[slot] = 0
+        self._owned[slot] = False
+        self._shared[slot] = False
+        self._tables_dirty = True
+
+    def _preempt_youngest(self, keep_slot: int) -> bool:
+        """Pool pressure: push the most recently admitted request (other
+        than `keep_slot`) back to the queue front, freeing its pages. It
+        re-prefills prompt+generated on re-admission — same tokens, but
+        on the CURRENT param version."""
+        others = [s for s in self.scheduler.active if s != keep_slot]
+        if not others:
+            return False
+        victim = max(others, key=lambda s: self._admit_seq[s])
+        self._release_slot_pages(victim)
+        self.scheduler.preempt(victim)
+        self.stats["preemptions"] += 1
+        return True
+
+    def _claim_page(self, slot: int, lp: int):
+        """Make logical page `lp` of `slot` writable: allocate a fresh
+        page (growth) or copy-on-write a shared one, evicting/preempting
+        under pressure."""
+        while not (self._evict_until(1) and self._pool.pages_free >= 1):
+            if not self._preempt_youngest(slot):
+                raise RuntimeError(
+                    f"page pool exhausted growing slot {slot} "
+                    f"(kv_pages={self._num_pages}): no evictable prefix "
+                    f"pages and no other request to preempt")
+        if self._shared[slot, lp]:
+            old = int(self._tables[slot, lp])
+            new = self._pool.cow(old)     # cannot fail: a page is free
+            self.cache = self._copy_pages(self.cache,
+                                          jnp.asarray([old]),
+                                          jnp.asarray([new]))
+            self._shared[slot, lp] = False
+            self.stats["cow_copies"] += 1
+        else:
+            (new,) = self._pool.alloc(1)
+        self._tables[slot, lp] = new
+        self._owned[slot, lp] = True
+        self._tables_dirty = True
+
+    def _grow_active(self):
+        """Before a decode tick: every active slot must own the page its
+        next token writes into. Fresh pages for linear growth; COW when
+        a (forced-)shared page would be written; preemption as the last
+        resort. May shrink the active set."""
+        cap = self._pages_per_slot * self._page_size
+        for slot in sorted(self.scheduler.active):
+            if slot not in self.scheduler.active:   # preempted meanwhile
+                continue
+            p = int(self._host_pos[slot])
+            rolling = self.model.cfg.sliding_window > 0
+            row = p % cap if rolling else min(p, cap - 1)
+            lp = row // self._page_size
+            if not self._owned[slot, lp]:
+                self._claim_page(slot, lp)
+
+    def _sync_tables(self):
+        if self._tables_dirty:
+            self.cache = self._set_tables(self.cache,
+                                          jnp.asarray(self._tables))
+            self._tables_dirty = False
+
     # ----------------------------------------------------------- internals
     def _admit_batch(self, admitted):
         """Fused prefill for this tick's admissions, grouped by prompt
-        bucket: one prefill dispatch + one cache scatter per group (not
-        per request) — the batched-arrival fast path."""
-        groups: Dict[int, list] = {}
+        bucket (and, when paged, by shared-prefix chain): one prefill
+        dispatch + one cache scatter per group (not per request) — the
+        batched-arrival fast path. Shared-prefix groups gather the
+        prefix K/V from its pages once and prefill ONLY the unshared
+        tail."""
+        groups: Dict[Any, list] = {}
+        plans: Dict[int, Any] = {}
         for slot, handle in admitted:
             handle.version = self._version
             req = handle.request
@@ -322,25 +575,79 @@ class ServeEngine:
             self._topp[slot] = req.top_p
             self._keys[slot] = np.asarray(
                 jax.random.PRNGKey(req.sampling_seed), np.uint32)
-            self._pos[slot] = 0
-            P = _bucket(len(req.prompt), self.max_len)
-            groups.setdefault(P, []).append((slot, handle))
+            # sampling position continues across preemption: token t is
+            # a pure function of (seed, t)
+            self._pos[slot] = len(handle.tokens)
+            if self.paged:
+                prompt, shared, own = handle._admit_plan
+                del handle._admit_plan
+                plans[slot] = (prompt, shared, own)
+                n_sh = len(shared)
+                table = np.zeros((self._pages_per_slot,), np.int32)
+                table[:n_sh] = shared
+                table[n_sh:n_sh + len(own)] = own
+                self._tables[slot] = table
+                self._owned[slot] = False
+                self._owned[slot, n_sh:n_sh + len(own)] = True
+                self._shared[slot] = False
+                self._shared[slot, :n_sh] = True
+                # no dirty mark: paged_insert writes this slot's device
+                # table row itself
+                self._host_pos[slot] = len(prompt)
+                self._admit_seq[slot] = self._seq = self._seq + 1
+                if n_sh:
+                    self.stats["prefix_hits"] += 1
+                    self.stats["prefix_tokens_reused"] += (
+                        n_sh * self._page_size)
+                if self._prefix is not None:
+                    # register this prompt's own full pages so later
+                    # requests share them; the index holds one pool ref
+                    # per newly registered page
+                    newly = self._prefix.register(prompt, own, start=n_sh)
+                    self._pool.ref(newly)
+                tail = prompt[n_sh * self._page_size:]
+                # bucket within the capacity left after the prefix: the
+                # cache rows land at offset prefix_len
+                key = (_bucket(len(tail),
+                               self.max_len - n_sh * self._page_size),
+                       tuple(shared))
+            else:
+                prompt = handle.request.prompt
+                key = (_bucket(len(prompt), self.max_len), ())
+            groups.setdefault(key, []).append((slot, handle))
         params = self._params[self._version]
-        for P, group in groups.items():
+        for (P, shared), group in groups.items():
             n = len(group)
+            prefix_len = len(shared) * self._page_size if self.paged else 0
             toks = np.zeros((n, P), np.int32)
             lengths = np.zeros((n,), np.int32)
-            for i, (_, handle) in enumerate(group):
-                prompt = handle.request.prompt
+            for i, (slot, handle) in enumerate(group):
+                prompt = (plans[slot][0][prefix_len:] if self.paged
+                          else handle.request.prompt)
                 toks[i, :len(prompt)] = prompt
                 lengths[i] = len(prompt)
-            logits, rows = self._prefill(params, jnp.asarray(toks),
-                                         jnp.asarray(lengths))
+            if prefix_len:
+                pfx = self._gather_prefix(self.cache,
+                                          jnp.asarray(shared, jnp.int32))
+                logits, rows = self._prefill_ext(params, jnp.asarray(toks),
+                                                 jnp.asarray(lengths), pfx,
+                                                 prefix_len)
+            else:
+                logits, rows = self._prefill(params, jnp.asarray(toks),
+                                             jnp.asarray(lengths))
             slots = [slot for slot, _ in group]
-            self.cache = self._insert(self.cache, rows, jnp.asarray(slots))
+            if self.paged:
+                tables = self._tables[slots]
+                write_tables = np.where(self._owned[slots], tables, 0)
+                self.cache = self._paged_insert(
+                    self.cache, rows, jnp.asarray(slots),
+                    jnp.asarray(write_tables), jnp.asarray(tables))
+            else:
+                self.cache = self._insert(self.cache, rows,
+                                          jnp.asarray(slots))
             self.stats["prefill_calls"] += 1
-            # first generated token: the group's sampling policies at
-            # pos 0 (all-greedy groups stay on the bitwise argmax path)
+            # first generated token: the group's sampling policies (all-
+            # greedy groups stay on the bitwise argmax path)
             if all(h.request.temperature <= 0 for _, h in group):
                 nxt = np.asarray(self._argmax(logits))
             else:
@@ -354,7 +661,14 @@ class ServeEngine:
                 self._commit(handle, int(nxt[i]))
 
     def _decode_tick(self):
+        if self.paged:
+            # every active slot must own its write page before the batch
+            # advances (growth / COW; may preempt under pool pressure)
+            self._grow_active()
+            self._sync_tables()
         active = dict(self.scheduler.active)       # slot -> handle
+        if not active:                             # all preempted
+            return
         versions = sorted({h.version for h in active.values()})
         toks = jnp.asarray(self._tokens)
         # all-greedy ticks take the plain argmax decode (bitwise the
@@ -374,7 +688,10 @@ class ServeEngine:
             nxt = np.asarray(nxt)
         else:
             # transition tick(s): decode once per live version, then keep
-            # each slot's row from the version it is pinned to
+            # each slot's row from the version it is pinned to. Paged:
+            # arena leaves merge by PHYSICAL page ownership (each slot
+            # writes only its own pages; shared prefix pages are
+            # read-only and identical under every version)
             outs = {v: decode(self._params[v]) for v in versions}
             merged = outs[versions[0]][1]
             nxt = np.asarray(outs[versions[0]][0]).copy()
@@ -383,20 +700,33 @@ class ServeEngine:
                 for slot, h in active.items():
                     if h.version == v:
                         mask[slot] = True
-                merged = self._select(jnp.asarray(mask), outs[v][1], merged)
+                if self.paged:
+                    pmask = np.zeros((self._num_pages,), bool)
+                    pmask[self._tables[mask][self._owned[mask]]] = True
+                    pmask[PagePool.TRASH] = False
+                    merged = self._select_paged(jnp.asarray(mask),
+                                                jnp.asarray(pmask),
+                                                outs[v][1], merged)
+                else:
+                    merged = self._select(jnp.asarray(mask), outs[v][1],
+                                          merged)
                 nxt[mask] = np.asarray(outs[v][0])[mask]
             self.cache = merged
         self.stats["decode_steps"] += 1
+        if self.paged:
+            for slot in active:
+                self._host_pos[slot] += 1
         for slot, handle in active.items():
             self._commit(handle, int(nxt[slot, 0]))
 
     def _commit(self, handle: RequestHandle, token: int):
         """Record one generated token; stream it; retire if finished."""
         handle.tokens.append(token)
-        self._tokens[handle.slot, 0] = token
+        slot = handle.slot
+        self._tokens[slot, 0] = token
         # next sample position = #tokens generated so far: token t is a
         # pure function of (seed, t) regardless of batch composition
-        self._pos[handle.slot] = len(handle.tokens)
+        self._pos[slot] = len(handle.tokens)
         self.stats["generated_tokens"] += 1
         if handle.first_token_at is None:
             handle.first_token_at = time.perf_counter()
@@ -404,23 +734,50 @@ class ServeEngine:
             handle.request.stream(handle, token)
         reason = self.scheduler.should_retire(handle, token)
         if reason is not None:
-            self.scheduler.retire(handle.slot, reason)
+            self.scheduler.retire(slot, reason)
             self.stats["completed"] += 1
+            if self.paged:
+                self._release_slot_pages(slot)
 
     # ---------------------------------------------------------- reporting
+    def kv_stats(self) -> Dict[str, Any]:
+        """KV-memory view of the engine: live/peak bytes, page counts,
+        prefix-reuse and pressure counters. Dense layout reports its
+        constant full-capacity footprint."""
+        return {"kv_layout": "paged" if self.paged else "dense",
+                "kv_bytes_in_use": self.stats["kv_bytes_in_use"],
+                "peak_kv_bytes_in_use": self.stats["peak_kv_bytes_in_use"],
+                "kv_capacity_bytes": self._kv_capacity_bytes,
+                "kv_page_bytes": self._page_bytes,
+                "kv_pages_used": self.stats["kv_pages_used"],
+                "kv_pages_free": self.stats["kv_pages_free"],
+                "prefix_hits": self.stats["prefix_hits"],
+                "prefix_tokens_reused": self.stats["prefix_tokens_reused"],
+                "cow_copies": self.stats["cow_copies"],
+                "preemptions": self.stats["preemptions"]}
+
     def throughput(self) -> Dict[str, float]:
         """Completion/throughput fields (the serve CLI prints these)."""
         started = self.stats["started_at"]
         wall = (time.perf_counter() - started) if started else 0.0
         toks = self.stats["generated_tokens"]
-        return {"completed": self.stats["completed"],
-                "submitted": self.stats["submitted"],
-                "generated_tokens": toks,
-                "decode_steps": self.stats["decode_steps"],
-                "prefill_calls": self.stats["prefill_calls"],
-                "reloads": self.stats["reloads"],
-                "wall_s": wall,
-                "tok_s": toks / wall if wall > 0 else 0.0}
+        out = {"completed": self.stats["completed"],
+               "submitted": self.stats["submitted"],
+               "generated_tokens": toks,
+               "decode_steps": self.stats["decode_steps"],
+               "prefill_calls": self.stats["prefill_calls"],
+               "reloads": self.stats["reloads"],
+               "wall_s": wall,
+               "tok_s": toks / wall if wall > 0 else 0.0,
+               "kv_bytes_in_use": self.stats["kv_bytes_in_use"],
+               "peak_kv_bytes": self.stats["peak_kv_bytes_in_use"],
+               "prefix_hits": self.stats["prefix_hits"],
+               "prefix_tokens_reused": self.stats["prefix_tokens_reused"]}
+        if self.paged:
+            out["kv_pages_used"] = self.stats["kv_pages_used"]
+            out["kv_pages_free"] = self.stats["kv_pages_free"]
+            out["preemptions"] = self.stats["preemptions"]
+        return out
 
     def close(self):
         if self.checkpoint is not None:

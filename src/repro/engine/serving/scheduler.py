@@ -14,7 +14,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -117,17 +117,36 @@ class ContinuousBatchingScheduler:
                 f"capacity max_len={self.max_len}")
         self.queue.append(handle)
 
-    def admit(self) -> List[Tuple[int, RequestHandle]]:
+    def admit(self, accept: Optional[Callable] = None
+              ) -> List[Tuple[int, RequestHandle]]:
         """Move queued requests into free slots (FIFO). Returns the
-        (slot, handle) pairs admitted this tick."""
+        (slot, handle) pairs admitted this tick.
+
+        accept(handle) -> bool: optional admission gate (the paged
+        engine declines when the page pool cannot cover the prompt).
+        FIFO order is preserved — a declined head blocks the queue until
+        pages free up, keeping admission starvation-free."""
         out = []
         while self._free and self.queue:
+            if accept is not None and not accept(self.queue[0]):
+                break
             slot = self._free.pop(0)
             handle = self.queue.popleft()
             handle.slot, handle.status = slot, "running"
             self.active[slot] = handle
             out.append((slot, handle))
         return out
+
+    def preempt(self, slot: int) -> RequestHandle:
+        """Evict a running request back to the FRONT of the queue
+        (vLLM-style recompute preemption under page-pool pressure). Its
+        generated tokens are kept; re-admission prefills prompt+generated
+        and decode continues bitwise-identically."""
+        handle = self.active.pop(slot)
+        handle.status, handle.slot = "queued", None
+        self._free.append(slot)
+        self.queue.appendleft(handle)
+        return handle
 
     def should_retire(self, handle: RequestHandle, token: int) -> Optional[str]:
         req = handle.request
@@ -155,3 +174,105 @@ class ContinuousBatchingScheduler:
 
     def occupancy(self) -> float:
         return len(self.active) / self.max_slots
+
+
+class PrefixIndex:
+    """Host-side registry of shared-prefix pages (vLLM-style prefix
+    caching): maps page-aligned token prefixes to the physical pages
+    holding their K/V, so a request whose prompt starts with an
+    already-prefilled prefix (the common one-system-prompt-many-users
+    serve shape) reuses those pages read-only and prefills only its
+    unshared tail.
+
+    Keys are the EXACT token bytes of the prefix up to each page
+    boundary — no hash collisions, correctness by construction. Only
+    FULL pages are ever registered, capped at (len(prompt) - 1) //
+    page_size: the last prompt token always lands in the requester's own
+    pages, so the extend-prefill has at least one tail token to compute
+    logits from, and decode never writes into a registered page
+    (registered pages are immutable). Entries are LRU-ordered; the pool
+    evicts least-recently-matched entries first when it runs dry."""
+
+    def __init__(self, page_size: int):
+        assert page_size >= 1
+        self.page_size = page_size
+        self._pages: "OrderedDict[bytes, int]" = OrderedDict()  # key -> pid
+        self._keys: Dict[int, bytes] = {}                       # pid -> key
+
+    def _key(self, prompt: np.ndarray, n_pages: int) -> bytes:
+        return np.ascontiguousarray(
+            prompt[:n_pages * self.page_size], np.int32).tobytes()
+
+    def max_shareable(self, prompt: np.ndarray) -> int:
+        """Pages a prompt could share: full pages strictly before the
+        final token."""
+        return max(0, (len(prompt) - 1) // self.page_size)
+
+    def match(self, prompt: np.ndarray) -> List[int]:
+        """Physical pages of the longest registered prefix of `prompt`
+        (in logical order). Does NOT take references — the caller owns
+        refcounting via its PagePool. Marks matched entries
+        most-recently-used."""
+        pages: List[int] = []
+        for i in range(1, self.max_shareable(prompt) + 1):
+            pid = self._pages.get(self._key(prompt, i))
+            if pid is None:
+                break
+            pages.append(pid)
+        if pages:
+            # bump deepest-first so shallow chain links end most recent:
+            # LRU eviction then drops leaf pages before their prefix,
+            # never orphaning a reachable chain suffix
+            for i in range(len(pages), 0, -1):
+                self._pages.move_to_end(self._key(prompt, i))
+        return pages
+
+    def register(self, prompt: np.ndarray, page_ids: List[int],
+                 start: int = 0) -> List[int]:
+        """Record pages `start..start+len(page_ids)` of `prompt`'s chain
+        (the caller passes the pages it just prefilled). Returns the
+        subset actually registered (new entries — the caller holds one
+        pool reference per returned page on the index's behalf)."""
+        newly = []
+        limit = min(start + len(page_ids), self.max_shareable(prompt))
+        for i in range(start, limit):
+            key = self._key(prompt, i + 1)
+            if key in self._pages:
+                continue
+            pid = page_ids[i - start]
+            self._pages[key] = pid
+            self._keys[pid] = key
+            newly.append(pid)
+        # deepest-first recency bump (see match): shallow links stay
+        # most recent so LRU eviction trims chains leaf-first
+        for i in range(limit, start, -1):
+            key = self._key(prompt, i)
+            if key in self._pages:
+                self._pages.move_to_end(key)
+        return newly
+
+    def evict_lru(self, evictable: Optional[Callable] = None
+                  ) -> Optional[int]:
+        """Drop the least-recently-used entry whose page `evictable(pid)`
+        (default: any); returns its page id (the caller releases its
+        pool reference). None when nothing qualifies. The filter lets
+        the engine skip pages other slots still reference — evicting
+        those frees nothing and would only cold the cache."""
+        for key, pid in self._pages.items():        # LRU order
+            if evictable is None or evictable(pid):
+                del self._pages[key]
+                del self._keys[pid]
+                return pid
+        return None
+
+    def forget(self, pid: int) -> None:
+        """Remove a page from the index (external eviction)."""
+        key = self._keys.pop(pid, None)
+        if key is not None:
+            del self._pages[key]
+
+    def __contains__(self, pid: int) -> bool:
+        return pid in self._keys
+
+    def __len__(self) -> int:
+        return len(self._pages)

@@ -1,4 +1,4 @@
-"""Slotted-cache device ops for continuous batching.
+"""Slotted-cache device ops for continuous batching, and the page pool.
 
 A slotted decode cache (``model.init_cache(..., per_slot=True)``) stacks
 layers on axis 0 and keeps the batch (slot) axis at position 1 of EVERY
@@ -16,15 +16,35 @@ states alike):
 
 Both are shape-stable in the slot index, so the scheduler can admit and
 retire requests at any rate without triggering recompilation.
+
+Paged layout (``init_cache(..., paged=(page_size, num_pages))``): the
+attention K/V of every slot lives in one global page arena, addressed
+through per-slot int32 page tables (see models/attention.PagedKVCache).
+``PagePool`` is the host-side allocator — refcounted physical pages, a
+free list, copy-on-write — and the ``paged_*`` device ops below are its
+jit-stable counterparts: they rewrite arena rows and tables without ever
+changing a shape, so page churn (admission, growth, COW, eviction)
+NEVER retraces the decode step. Physical page 0 is the reserved trash
+page: free slots and unallocated table entries point at it, making their
+garbage writes inert.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as ATT
 
 PyTree = Any
+
+PAGED_TYPES = ATT.PAGED_CACHE_TYPES
+
+
+def _is_paged(x) -> bool:
+    return isinstance(x, PAGED_TYPES)
 
 
 def insert_rows(cache: PyTree, row: PyTree, slot) -> PyTree:
@@ -63,3 +83,267 @@ def slot_positions(cache: PyTree) -> jnp.ndarray:
             return leaf[0]
     raise ValueError("cache has no per-slot pos leaf; was it built with "
                      "per_slot=True?")
+
+
+# ============================================================== page pool
+class PagePool:
+    """Host-side physical-page allocator for the paged KV arena.
+
+    Pages are refcounted: a page owned by one slot has refcount 1; a
+    shared read-only prefix page holds one reference per slot using it
+    plus (optionally) one held by the prefix index that keeps it warm for
+    future requests. Physical page 0 is the reserved trash page — never
+    allocated, never freed; free slots' table entries point at it.
+
+    The pool is pure bookkeeping (no jax): the engine pairs each
+    transition with the matching device op (``paged_insert_rows``,
+    ``copy_pages``, ``set_page_tables``)."""
+
+    TRASH = 0
+
+    def __init__(self, num_pages: int, page_size: int):
+        assert num_pages >= 2, f"need >= 2 pages (1 is trash), {num_pages}"
+        assert page_size >= 1, page_size
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))  # pop() low
+        self._ref = np.zeros((num_pages,), np.int32)
+        self._ref[self.TRASH] = 1          # never allocatable
+
+    # ------------------------------------------------------------ alloc
+    @property
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_used(self) -> int:
+        return self.num_pages - 1 - len(self._free)
+
+    def alloc(self, n: int = 1) -> Optional[List[int]]:
+        """n fresh pages (refcount 1 each), or None if the pool cannot
+        cover the request (caller evicts/preempts and retries)."""
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        for p in out:
+            self._ref[p] = 1
+        return out
+
+    def ref(self, pages) -> None:
+        """Take one extra reference on each page (prefix sharing)."""
+        for p in pages:
+            assert self._ref[p] > 0, f"ref on free page {p}"
+            self._ref[p] += 1
+
+    def release(self, pages) -> None:
+        """Drop one reference per page; pages hitting zero return to the
+        free list."""
+        for p in pages:
+            assert p != self.TRASH and self._ref[p] > 0, (p, self._ref[p])
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(int(p))
+
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
+
+    def is_shared(self, page: int) -> bool:
+        return self._ref[page] > 1
+
+    def cow(self, page: int) -> Optional[int]:
+        """Copy-on-write: drop this slot's reference on a shared `page`
+        and allocate a private destination page. Returns the new page id
+        (the caller must issue the device ``copy_pages``), or None if the
+        pool is exhausted (caller evicts/preempts first)."""
+        got = self.alloc(1)
+        if got is None:
+            return None
+        self.release([page])
+        return got[0]
+
+    def __repr__(self):
+        return (f"PagePool(pages={self.num_pages}, size={self.page_size}, "
+                f"used={self.pages_used}, free={self.pages_free})")
+
+
+# ====================================================== paged device ops
+def _zip_paged(fn_paged, fn_leaf, cache: PyTree, *rest: PyTree) -> PyTree:
+    """tree.map over `cache` stopping at paged cache nodes: paged nodes
+    get fn_paged(node, *corresponding subtrees), plain leaves fn_leaf."""
+    def f(c, *r):
+        return fn_paged(c, *r) if _is_paged(c) else fn_leaf(c, *r)
+    return jax.tree.map(f, cache, *rest, is_leaf=_is_paged)
+
+
+def paged_insert_rows(cache: PyTree, rows: PyTree, slots: jnp.ndarray,
+                      write_tables: jnp.ndarray, new_tables: jnp.ndarray,
+                      ) -> PyTree:
+    """Admit n freshly-prefilled rows into a paged cache.
+
+    `rows` is the DENSE per-slot cache the prefill paths produce (leaves
+    [L, n, cap, ...]); its attention rows are scattered into the arena
+    through `write_tables` [n, pages_per_slot] — the slot's new table
+    with every non-owned entry (shared prefix pages, unallocated tail)
+    pointing at trash page 0, so shared pages are never clobbered and
+    rolling/partial layouts transfer row-for-row. Non-attention leaves
+    (recurrent state, pos) take the plain per-slot scatter. The slots'
+    page-table rows are set to `new_tables` [n, pages_per_slot]."""
+    def paged(c, r):
+        def scatter(arena, dense_rows):
+            Lyr, n = dense_rows.shape[0], dense_rows.shape[1]
+            P = write_tables.shape[1]
+            psz = arena.shape[2]
+            tail = dense_rows.shape[3:]
+            src = dense_rows.reshape((Lyr, n, P, psz) + tail)
+            return arena.at[:, write_tables].set(src.astype(arena.dtype))
+
+        if isinstance(c, ATT.PagedKVCache):
+            k = scatter(c.k, r.k)
+            v = scatter(c.v, r.v)
+            pt = c.page_table.at[:, slots].set(new_tables)
+            pos = c.pos.at[:, slots].set(r.pos)
+            return ATT.PagedKVCache(k, v, pt, pos)
+        c_kv = scatter(c.c_kv, r.c_kv)
+        k_rope = scatter(c.k_rope, r.k_rope)
+        pt = c.page_table.at[:, slots].set(new_tables)
+        pos = c.pos.at[:, slots].set(r.pos)
+        return ATT.PagedMLACache(c_kv, k_rope, pt, pos)
+
+    def leaf(c, r):
+        return c.at[:, slots].set(r.astype(c.dtype))
+
+    return _zip_paged(paged, leaf, cache, rows)
+
+
+def gather_prefix(cache: PyTree, pages: jnp.ndarray) -> PyTree:
+    """Read a shared-prefix K/V context back out of the arena: `pages`
+    [n_pages] physical ids in logical order -> a DecodeCache-shaped
+    pytree of per-layer pairs [L, 1, n_pages * page_size, ...] (leading
+    singleton batch axis; the prefill broadcasts it across the admission
+    group). Feeds `prefill_cache(prefix_kv=...)`."""
+    def paged(c):
+        def g(arena):
+            sel = arena[:, pages]          # [L, n, ps, ...]
+            Lyr, n, psz = sel.shape[:3]
+            return sel.reshape((Lyr, 1, n * psz) + sel.shape[3:])
+        if isinstance(c, ATT.PagedKVCache):
+            return (g(c.k), g(c.v))
+        return (g(c.c_kv), g(c.k_rope))
+
+    def leaf(c):
+        return None                        # recurrent state has no prefix
+
+    return _zip_paged(paged, leaf, cache)
+
+
+def copy_pages(cache: PyTree, src: jnp.ndarray, dst: jnp.ndarray) -> PyTree:
+    """Copy arena pages src[i] -> dst[i] in every layer (COW backing
+    store move). Page tables / positions / plain leaves untouched."""
+    def paged(c):
+        def cp(arena):
+            return arena.at[:, dst].set(arena[:, src])
+        if isinstance(c, ATT.PagedKVCache):
+            return c._replace(k=cp(c.k), v=cp(c.v))
+        return c._replace(c_kv=cp(c.c_kv), k_rope=cp(c.k_rope))
+
+    return _zip_paged(paged, lambda c: c, cache)
+
+
+def set_page_tables(cache: PyTree, tables: jnp.ndarray) -> PyTree:
+    """Install the host-side page tables [B, pages_per_slot] into every
+    paged node (broadcast over the layer axis). Values-only churn: the
+    decode step never retraces."""
+    def paged(c):
+        return c._replace(page_table=jnp.broadcast_to(
+            tables.astype(jnp.int32), c.page_table.shape))
+
+    return _zip_paged(paged, lambda c: c, cache)
+
+
+def select_rows_paged(slot_mask: jnp.ndarray, page_mask: jnp.ndarray,
+                      new: PyTree, old: PyTree) -> PyTree:
+    """Paged counterpart of `select_rows` (hot-reload transition ticks):
+    arena leaves merge per PHYSICAL page — `page_mask` [num_pages] marks
+    pages owned by slots pinned to the `new` version (shared prefix pages
+    are read-only and identical in both, so either side is correct) —
+    while per-slot leaves (pos, page_table, recurrent state) merge by
+    `slot_mask` [B]."""
+    def paged(n, o):
+        def sel_arena(a, b):
+            m = page_mask.reshape((1, page_mask.shape[0])
+                                  + (1,) * (a.ndim - 2))
+            return jnp.where(m, a, b)
+
+        def sel_slot(a, b):
+            m = slot_mask.reshape((1, slot_mask.shape[0])
+                                  + (1,) * (a.ndim - 2))
+            return jnp.where(m, a, b)
+
+        if isinstance(n, ATT.PagedKVCache):
+            return ATT.PagedKVCache(sel_arena(n.k, o.k),
+                                    sel_arena(n.v, o.v),
+                                    sel_slot(n.page_table, o.page_table),
+                                    sel_slot(n.pos, o.pos))
+        return ATT.PagedMLACache(sel_arena(n.c_kv, o.c_kv),
+                                 sel_arena(n.k_rope, o.k_rope),
+                                 sel_slot(n.page_table, o.page_table),
+                                 sel_slot(n.pos, o.pos))
+
+    def leaf(n, o):
+        m = slot_mask.reshape((1, slot_mask.shape[0]) + (1,) * (n.ndim - 2))
+        return jnp.where(m, n, o)
+
+    return _zip_paged(paged, leaf, new, old)
+
+
+def cast_paged_like(cache: PyTree, dense_dtypes: PyTree) -> PyTree:
+    """Cast a freshly-initialized paged cache to the steady dtypes the
+    engine computed on the DENSE layout (same tree shape apart from the
+    paged attention nodes, whose arena leaves borrow the dense k/v
+    dtypes field-for-field)."""
+    def paged(c, d):
+        if isinstance(c, ATT.PagedKVCache):
+            return c._replace(k=c.k.astype(d.k), v=c.v.astype(d.v))
+        return c._replace(c_kv=c.c_kv.astype(d.c_kv),
+                          k_rope=c.k_rope.astype(d.k_rope))
+
+    return _zip_paged(paged, lambda c, d: c.astype(d), cache, dense_dtypes)
+
+
+def dense_kv_bytes(cache: PyTree) -> int:
+    """Bytes held by the dense attention K/V buffers (pos counters and
+    recurrent state excluded) — the footprint the paged arena's
+    `kv_bytes_in_use` is compared against."""
+    total = 0
+    dense_types = (ATT.KVCache, ATT.MLACache)
+
+    def f(c):
+        nonlocal total
+        if isinstance(c, dense_types):
+            arenas = ((c.k, c.v) if isinstance(c, ATT.KVCache)
+                      else (c.c_kv, c.k_rope))
+            for a in arenas:
+                total += int(np.prod(a.shape)) * a.dtype.itemsize
+        return c
+
+    jax.tree.map(f, cache, is_leaf=lambda x: isinstance(x, dense_types))
+    return total
+
+
+def paged_kv_page_bytes(cache: PyTree) -> int:
+    """Bytes one physical page occupies across all layers and arena
+    leaves — the unit of `kv_bytes_in_use` accounting."""
+    total = 0
+
+    def paged(c):
+        nonlocal total
+        arenas = ((c.k, c.v) if isinstance(c, ATT.PagedKVCache)
+                  else (c.c_kv, c.k_rope))
+        for a in arenas:
+            Lyr = a.shape[0]
+            per_row = int(np.prod(a.shape[3:])) if a.ndim > 3 else 1
+            total += Lyr * a.shape[2] * per_row * a.dtype.itemsize
+        return c
+
+    _zip_paged(paged, lambda c: c, cache)
+    return total

@@ -1,4 +1,5 @@
-"""Pallas TPU flash attention (inference/prefill path).
+"""Pallas TPU flash attention (inference/prefill path) and the
+paged-gather decode kernel.
 
 Beyond-paper optimization (§Perf iteration 3): the llava-next prefill_32k
 cell is memory-bound on the quadratic [T, S] score matrix traffic
@@ -12,6 +13,14 @@ path; serving/prefill uses this kernel.
 Layout: grid over (batch·kv_heads·q_groups, q_blocks); each step streams
 K/V tiles with an online-softmax accumulator. Causal + sliding-window
 masks supported via position blocks.
+
+`paged_decode_attention` is the serving-decode counterpart for the paged
+KV arena (engine/serving paged layout): the page table rides in as a
+scalar-prefetch operand, so each grid step DMAs exactly one physical
+page's K/V tile — the kernel never materialises the gathered [B, cap]
+K/V that the ref path builds in HBM — and an online-softmax accumulator
+carries across the page axis of the grid. Validated in interpret mode
+(PR-4 precedent); compiled on real TPU.
 """
 from __future__ import annotations
 
@@ -22,6 +31,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from .backend import resolve_interpret
 
@@ -115,3 +125,105 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     )(qr, kr, vr)
     return out.reshape(B, KV, G, T, Dh).transpose(0, 3, 1, 2, 4) \
         .reshape(B, T, H, Dh)
+
+
+# ------------------------------------------------------ paged decode kernel
+def _paged_decode_kernel(pt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, page_size: int,
+                         n_pages: int, rolling: bool, scale: float):
+    # grid (B, KV, logical page i); k_ref/v_ref hold ONE physical page's
+    # tile [1, ps, 1, Dh] — the page table routed it here via the
+    # scalar-prefetch index map, so the gather never touches HBM-wide
+    # buffers. Online softmax carries across i in VMEM scratch.
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...][0, 0].astype(jnp.float32) * scale         # [G, Dh]
+    k = k_ref[...][0, :, 0].astype(jnp.float32)              # [ps, Dh]
+    v = v_ref[...][0, :, 0].astype(jnp.float32)
+    s = q @ k.T                                              # [G, ps]
+
+    p = pos_ref[b]
+    cap = n_pages * page_size
+    rows = i * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)                        # [1, ps]
+    if rolling:
+        slot_pos = p - ((p - rows) % cap)    # latest pos with pos%cap==row
+    else:
+        slot_pos = rows
+    valid = (slot_pos >= 0) & (slot_pos <= p)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]                  # [G, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    pexp = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    m_ref[...] = m_new
+    l_ref[...] = l_prev * alpha + jnp.sum(pexp, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + pexp @ v
+
+    @pl.when(i == pl.num_programs(2) - 1)
+    def _():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = out.astype(o_ref.dtype)[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("rolling", "interpret"))
+def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           v_pages: jnp.ndarray, page_table: jnp.ndarray,
+                           pos: jnp.ndarray, *, rolling: bool = False,
+                           interpret: Optional[bool] = None) -> jnp.ndarray:
+    """One-token GQA decode over a paged KV arena.
+
+    q: [B, H, Dh] (current token's queries, RoPE'd); k_pages/v_pages:
+    [num_pages, page_size, KV, Dh] arenas (current token already
+    written); page_table: int32 [B, pages_per_slot]; pos: int32 [B]
+    tokens seen per slot BEFORE this step (rows at slot positions
+    0..pos are attended — the write at pos included).
+
+    rolling: sliding-window layout — logical row r holds the latest
+    position p with p % cap == r (cap = pages_per_slot * page_size, a
+    multiple of page_size by construction); masking reproduces the ref
+    gather path exactly.
+
+    Head h = kv * (H // KV) + g, matching the dense decode's grouping.
+    Returns [B, H, Dh] in q.dtype."""
+    interpret = resolve_interpret(interpret)
+    B, H, Dh = q.shape
+    NP, ps, KV, _ = k_pages.shape
+    P = page_table.shape[1]
+    G = H // KV
+    scale = 1.0 / math.sqrt(Dh)
+    qr = q.reshape(B, KV, G, Dh)
+
+    kernel = functools.partial(_paged_decode_kernel, page_size=ps,
+                               n_pages=P, rolling=rolling, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh),
+                         lambda b, kv, i, pt, ps_: (b, kv, 0, 0)),
+            pl.BlockSpec((1, ps, 1, Dh),
+                         lambda b, kv, i, pt, ps_: (pt[b, i], 0, kv, 0)),
+            pl.BlockSpec((1, ps, 1, Dh),
+                         lambda b, kv, i, pt, ps_: (pt[b, i], 0, kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh),
+                               lambda b, kv, i, pt, ps_: (b, kv, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((G, Dh), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32),
+                        pltpu.VMEM((G, 1), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, Dh), q.dtype),
+        interpret=interpret,
+    )(page_table, pos, qr, k_pages, v_pages)
+    return out.reshape(B, H, Dh)

@@ -39,6 +39,21 @@ def main(argv=None):
                     help="decode ticks between request arrivals")
     ap.add_argument("--prefill-mode", default="auto",
                     choices=["auto", "parallel", "scan"])
+    ap.add_argument("--kv-layout", default="paged",
+                    choices=["paged", "dense"],
+                    help="paged KV arena (default) or dense per-slot "
+                    "buffers")
+    ap.add_argument("--page-size", type=int, default=16, dest="page_size",
+                    help="token rows per KV page")
+    ap.add_argument("--kv-pages", type=int, default=0, dest="kv_pages",
+                    help="physical pages in the KV arena (0 = enough for "
+                    "every slot at full capacity)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable shared-prefix page reuse")
+    ap.add_argument("--system-prompt", type=int, default=0,
+                    dest="system_prompt",
+                    help="prepend this many shared system-prompt tokens "
+                    "to every request (exercises prefix sharing)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy argmax (default); >0 samples")
     ap.add_argument("--top-k", type=int, default=0, dest="top_k",
@@ -56,15 +71,21 @@ def main(argv=None):
     ap.add_argument("--model-mesh", type=int, default=1)
     args = ap.parse_args(argv)
 
-    max_len = args.max_len or (args.prompt_len + args.gen + 1)
-    if max_len <= args.gen:
+    max_len = args.max_len or (args.system_prompt + args.prompt_len
+                               + args.gen + 1)
+    if max_len <= args.gen + args.system_prompt:
         ap.error(f"--max-len {max_len} leaves no room for a prompt "
-                 f"before --gen {args.gen} tokens")
+                 f"beyond --system-prompt {args.system_prompt} + --gen "
+                 f"{args.gen} tokens")
     cfg = EngineConfig(arch=args.arch, reduced=args.reduced,
                        data_mesh=args.data_mesh, model_mesh=args.model_mesh,
                        max_slots=args.max_slots, max_len=max_len,
                        prefill_mode=args.prefill_mode,
-                       ckpt_dir=args.ckpt_dir, hot_reload=args.hot_reload)
+                       kv_layout=args.kv_layout, page_size=args.page_size,
+                       kv_pages=args.kv_pages,
+                       prefix_sharing=not args.no_prefix_sharing,
+                       ckpt_dir=args.ckpt_dir,
+                       hot_reload=args.hot_reload).validate()
     rng = np.random.RandomState(1)
 
     from repro.configs.base import get_config, get_reduced
@@ -107,15 +128,17 @@ def main(argv=None):
             print(f"[serve] req {handle.request.request_id} first token "
                   f"after {dt * 1e3:.0f}ms (slot {handle.slot})")
 
+    system = rng.randint(0, V, args.system_prompt)
     handles = []
     for i in range(args.requests):
         # staggered arrivals at jittered prompt lengths: the continuous-
         # batching case (admit into a running batch, retire independently)
         plen = max(1, min(args.prompt_len + int(rng.randint(-4, 5)),
-                          max_len - args.gen))
+                          max_len - args.gen - args.system_prompt))
+        prompt = np.concatenate([system, rng.randint(0, V, plen)])
         seed = None if args.sample_seed is None else args.sample_seed + i
         handles.append(engine.submit(GenerationRequest(
-            prompt=rng.randint(0, V, plen), max_new_tokens=args.gen,
+            prompt=prompt, max_new_tokens=args.gen,
             temperature=args.temperature, top_k=args.top_k,
             top_p=args.top_p, seed=seed, stream=stream)))
         for _ in range(args.stagger):
@@ -127,6 +150,14 @@ def main(argv=None):
         f"{k}={v:.2f}" if isinstance(v, float) else f"{k}={v}"
         for k, v in tp.items())
     print(f"[serve] {fields}")
+    kv = engine.kv_stats()
+    print(f"[serve] kv layout={kv['kv_layout']} "
+          f"in_use={kv['kv_bytes_in_use']} peak={kv['peak_kv_bytes_in_use']} "
+          f"capacity={kv['kv_capacity_bytes']} "
+          f"pages={kv['kv_pages_used']}/{kv['kv_pages_used'] + kv['kv_pages_free']} "
+          f"prefix_hits={kv['prefix_hits']} "
+          f"prefix_tokens_reused={kv['prefix_tokens_reused']} "
+          f"cow={kv['cow_copies']} preemptions={kv['preemptions']}")
     for h in handles:
         print(f"[serve] req {h.request.request_id} "
               f"({h.finish_reason}): {h.tokens}")

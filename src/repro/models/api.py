@@ -32,12 +32,16 @@ class Model:
     loss: Callable            # (params, batch) -> (scalar, metrics)
     forward: Callable         # (params, batch) -> logits
     prefill: Callable         # (params, batch) -> last-position logits
-    init_cache: Callable      # (params, batch, max_len[, per_slot]) -> cache
+    init_cache: Callable      # (params, batch, max_len[, per_slot][, paged])
+                              # -> cache
     decode_step: Callable     # (params, tokens, cache) -> (logits, cache)
-    # fused serving prefill: (params, tokens [B,P], lengths [B], max_len)
-    # -> (last-position logits, slotted cache). None for families whose
-    # recurrent state cannot be captured from the parallel forward
-    # (ssm/hybrid/enc-dec) — engine/serving falls back to a fused scan.
+    # fused serving prefill: (params, tokens [B,P], lengths [B], max_len
+    # [, prefix_kv, prefix_len]) -> (last-position logits, slotted cache).
+    # prefix_kv/prefix_len: shared-prefix extend — tokens are the unshared
+    # tail, rows land at absolute positions (paged prefix reuse). None for
+    # families whose recurrent state cannot be captured from the parallel
+    # forward (ssm/hybrid/enc-dec) — engine/serving falls back to a fused
+    # scan.
     prefill_cache: Optional[Callable] = None
 
 
@@ -92,8 +96,14 @@ def build_model(cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
                                attn_chunk, remat, moe_shards=moe_shards)
         return logits
 
-    def init_cache(params, batch, max_len, per_slot=False, **_):
-        return TF.init_decode_cache(cfg, batch, max_len, per_slot=per_slot)
+    def init_cache(params, batch, max_len, per_slot=False, paged=None, **_):
+        # cache rows live in the compute dtype: bf16 for real configs,
+        # exact fp32 for the fp32-compute test models (the serving
+        # bitwise contract — incl. shared-prefix reuse — depends on
+        # cached K/V reading back exactly what the forward computed)
+        return TF.init_decode_cache(cfg, batch, max_len,
+                                    dtype=compute_dtype, per_slot=per_slot,
+                                    paged=paged)
 
     def decode_step(params, tokens, cache):
         return TF.decode_step(params, cfg, tokens, cache, compute_dtype)
@@ -114,12 +124,15 @@ def build_model(cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
 
     prefill_cache = None
     if cfg.family not in ("ssm", "hybrid"):
-        def prefill_cache(params, tokens, lengths, max_len):
+        def prefill_cache(params, tokens, lengths, max_len,
+                          prefix_kv=None, prefix_len=0):
             return TF.prefill_decode_cache(
                 params, cfg, tokens, lengths, max_len, compute_dtype,
                 attn_chunk,
                 use_flash=(cfg.attn_type == "gqa"
-                           and jax.default_backend() == "tpu"))
+                           and jax.default_backend() == "tpu"),
+                cache_dtype=compute_dtype,
+                prefix_kv=prefix_kv, prefix_len=prefix_len)
 
     return Model(cfg, init, loss, forward, prefill, init_cache, decode_step,
                  prefill_cache)

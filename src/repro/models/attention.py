@@ -14,6 +14,20 @@ Serving (engine/serving) uses *slotted* caches: `pos` is a vector [B] —
 one write position per batch row — so a continuous-batching scheduler can
 run rows at unequal sequence lengths in one decode call. The decode steps
 dispatch on `cache.pos.ndim`; `per_slot=True` at init selects the layout.
+
+Paged layout (the ServeEngine default): instead of a dense
+`[B, cap, ...]` buffer per slot, K/V rows live in a global page arena
+`[num_pages, page_size, ...]` shared by every slot, addressed through a
+per-slot `page_table` [B, pages_per_slot] of int32 physical page ids.
+Logical row r of slot b is `arena[page_table[b, r // ps], r % ps]`, so
+the gather `arena[page_table[b]]` reconstructs exactly the dense layout
+— the paged decode steps run the *identical* masked-attention math on it
+and greedy tokens stay bitwise-equal to the dense cache. Physical page 0
+is reserved as the trash page: free slots and unallocated table entries
+point at it, so their garbage writes never corrupt live data. The page
+tables are plain int32 leaves; the allocator (engine/serving/slots.
+PagePool) rewrites them without ever changing a shape — admission,
+growth, copy-on-write and eviction churn never retrace the decode step.
 """
 from __future__ import annotations
 
@@ -154,13 +168,17 @@ def _chunked_attention(q, k, v, positions_q, positions_k, *, causal: bool,
 def gqa_forward(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
                 positions: jnp.ndarray, compute_dtype=jnp.bfloat16,
                 chunk: int = 512, use_flash: bool = False,
-                return_kv: bool = False):
+                return_kv: bool = False, prefix_kv=None):
     """Training / prefill forward. x: [B,T,D]; positions: [T].
 
     use_flash: route the core through the Pallas flash-attention kernel
     (forward-only: serving/prefill; score tiles never reach HBM).
     return_kv: also return the RoPE'd (k, v) — exactly what a decode
-    cache stores — for the fused serving prefill."""
+    cache stores — for the fused serving prefill.
+    prefix_kv: (k, v) [B, S0, KV, Dh] of an already-cached shared prefix
+    (RoPE'd at positions 0..S0-1). `positions` must then start at S0:
+    the tail attends to prefix + tail, computing and returning K/V for
+    the tail only — the shared-prefix extend-prefill."""
     B, T, D = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     x = x.astype(compute_dtype)
@@ -172,7 +190,21 @@ def gqa_forward(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
         k = L.headwise_rmsnorm(params["k_norm"], k)
     q = L.apply_rope(q, positions[None, :], cfg.rope_theta)
     k = L.apply_rope(k, positions[None, :], cfg.rope_theta)
-    if use_flash and T % 512 == 0:
+    if prefix_kv is not None:
+        assert cfg.sliding_window == 0, \
+            "shared-prefix extend needs full attention (rolling pages churn)"
+        pk, pv = prefix_kv
+        if pk.shape[0] != B:     # one shared prefix for the whole group
+            pk = jnp.broadcast_to(pk, (B,) + pk.shape[1:])
+            pv = jnp.broadcast_to(pv, (B,) + pv.shape[1:])
+        S0 = pk.shape[1]
+        k_att = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+        v_att = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+        positions_k = jnp.concatenate(
+            [jnp.arange(S0, dtype=positions.dtype), positions])
+        out = _chunked_attention(q, k_att, v_att, positions, positions_k,
+                                 causal=True, window=0, chunk=chunk)
+    elif use_flash and T % 512 == 0:
         from repro.kernels.flash_attention import flash_attention
         # interpret resolves in kernels.backend: compiled on TPU,
         # interpreted elsewhere
@@ -257,6 +289,128 @@ def gqa_decode_step(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
     return out, KVCache(knew, vnew, pos + 1)
 
 
+# ------------------------------------------------------------- paged caches
+class PagedKVCache(NamedTuple):
+    """GQA cache over a global page arena (vLLM-style PagedAttention).
+
+    Logical row r of slot b lives at arena[page_table[b, r // ps], r % ps]
+    where ps = page_size; pages_per_slot * ps == the dense cache capacity,
+    so gathering a slot's pages reproduces the dense layout exactly."""
+    k: jnp.ndarray           # [num_pages, page_size, KV, Dh] (RoPE'd)
+    v: jnp.ndarray           # [num_pages, page_size, KV, Dh]
+    page_table: jnp.ndarray  # int32 [B, pages_per_slot]; 0 = trash page
+    pos: jnp.ndarray         # int32 [B] #tokens seen (always per-slot)
+
+
+class PagedMLACache(NamedTuple):
+    """MLA latent cache over a page arena (same addressing scheme)."""
+    c_kv: jnp.ndarray        # [num_pages, page_size, kv_lora]
+    k_rope: jnp.ndarray      # [num_pages, page_size, qk_rope]
+    page_table: jnp.ndarray  # int32 [B, pages_per_slot]
+    pos: jnp.ndarray         # int32 [B]
+
+
+PAGED_CACHE_TYPES = (PagedKVCache, PagedMLACache)
+
+
+def paged_capacity(cfg: ModelConfig, max_len: int) -> int:
+    """The dense capacity a paged slot must reproduce (rolling window
+    for SWA, max_len otherwise)."""
+    return min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+
+def init_paged_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                        page_size: int, num_pages: int,
+                        dtype=jnp.bfloat16) -> PagedKVCache:
+    cap = paged_capacity(cfg, max_len)
+    assert page_size > 0 and cap % page_size == 0, (cap, page_size)
+    kv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    return PagedKVCache(
+        jnp.zeros((num_pages, page_size, kv, dh), dtype),
+        jnp.zeros((num_pages, page_size, kv, dh), dtype),
+        jnp.zeros((batch, cap // page_size), jnp.int32),
+        jnp.zeros((batch,), jnp.int32))
+
+
+def init_paged_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                         page_size: int, num_pages: int,
+                         dtype=jnp.bfloat16) -> PagedMLACache:
+    assert page_size > 0 and max_len % page_size == 0, (max_len, page_size)
+    return PagedMLACache(
+        jnp.zeros((num_pages, page_size, cfg.kv_lora_rank), dtype),
+        jnp.zeros((num_pages, page_size, cfg.qk_rope_head_dim), dtype),
+        jnp.zeros((batch, max_len // page_size), jnp.int32),
+        jnp.zeros((batch,), jnp.int32))
+
+
+def _paged_slot(table: jnp.ndarray, row: jnp.ndarray, ps: int):
+    """(physical page, offset) per slot for logical row `row` [B]."""
+    pg = jnp.take_along_axis(table, (row // ps)[:, None], axis=1)[:, 0]
+    return pg, row % ps
+
+
+def _paged_write(arena: jnp.ndarray, pg: jnp.ndarray, off: jnp.ndarray,
+                 val: jnp.ndarray) -> jnp.ndarray:
+    """Write one value per slot at (page, offset). Free slots' tables
+    point at trash page 0, so their garbage writes are inert."""
+    return arena.at[pg, off].set(val.astype(arena.dtype))
+
+
+def gqa_paged_decode_step(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
+                          cache: PagedKVCache, compute_dtype=jnp.bfloat16
+                          ) -> Tuple[jnp.ndarray, PagedKVCache]:
+    """One-token decode over the paged arena. Identical math to the
+    per-slot `gqa_decode_step` on the page-gathered K/V (the gather
+    reconstructs the dense layout row-for-row), so greedy tokens are
+    bitwise-equal to the dense slotted cache."""
+    B = x.shape[0]
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ps = cache.k.shape[1]
+    cap = cache.page_table.shape[1] * ps
+    pos = cache.pos
+    x = x.astype(compute_dtype)
+    q = (x @ params["wq"].astype(compute_dtype)).reshape(B, 1, h, dh)
+    k = (x @ params["wk"].astype(compute_dtype)).reshape(B, 1, kvh, dh)
+    v = (x @ params["wv"].astype(compute_dtype)).reshape(B, 1, kvh, dh)
+    if cfg.qk_norm:
+        q = L.headwise_rmsnorm(params["q_norm"], q)
+        k = L.headwise_rmsnorm(params["k_norm"], k)
+    posv = pos[:, None].astype(jnp.float32)
+    q = L.apply_rope(q, posv, cfg.rope_theta)
+    k = L.apply_rope(k, posv, cfg.rope_theta)
+    row = jnp.where(cfg.sliding_window > 0, pos % cap,
+                    jnp.minimum(pos, cap - 1))
+    pg, off = _paged_slot(cache.page_table, row, ps)
+    knew = _paged_write(cache.k, pg, off, k[:, 0])
+    vnew = _paged_write(cache.v, pg, off, v[:, 0])
+    if jax.default_backend() == "tpu":
+        from repro.kernels.flash_attention import paged_decode_attention
+        out = paged_decode_attention(q[:, 0], knew, vnew, cache.page_table,
+                                     pos, rolling=cfg.sliding_window > 0)
+        out = out.reshape(B, 1, h * dh)
+    else:
+        # ref path: gather the slot's pages back into the dense layout
+        kfull = knew[cache.page_table].reshape(B, cap, kvh, dh)
+        vfull = vnew[cache.page_table].reshape(B, cap, kvh, dh)
+        idx = jnp.arange(cap)
+        posb = pos[:, None]
+        if cfg.sliding_window:
+            slot_pos = posb - ((posb - idx[None, :]) % cap)
+        else:
+            slot_pos = jnp.broadcast_to(idx[None, :], (B, cap))
+        valid = (slot_pos >= 0) & (slot_pos <= posb)
+        scale = 1.0 / math.sqrt(dh)
+        qg = q.reshape(B, kvh, h // kvh, dh)
+        scores = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                            kfull.astype(jnp.float32)) * scale
+        scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(vfull.dtype)
+        out = jnp.einsum("bkgs,bskd->bkgd", probs, vfull).reshape(B, 1,
+                                                                  h * dh)
+    out = out.astype(compute_dtype) @ params["wo"].astype(compute_dtype)
+    return out, PagedKVCache(knew, vnew, cache.page_table, pos + 1)
+
+
 # ---------------------------------------------------------------- MLA path
 class MLACache(NamedTuple):
     c_kv: jnp.ndarray    # [B, cap, kv_lora]
@@ -291,25 +445,40 @@ def _mla_qkv(params, cfg, x, positions, compute_dtype):
 
 def mla_forward(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
                 positions: jnp.ndarray, compute_dtype=jnp.bfloat16,
-                chunk: int = 512, return_kv: bool = False):
+                chunk: int = 512, return_kv: bool = False, prefix_kv=None):
     """Training/prefill MLA: materialize k/v from the latent (naive path).
 
     return_kv: also return the latents (c_kv, k_rope) — the decode-cache
-    contents — for the fused serving prefill."""
+    contents — for the fused serving prefill.
+    prefix_kv: (c_kv, k_rope) [B, S0, ...] cached shared-prefix latents;
+    `positions` must then start at S0 (extend-prefill, tail-only
+    compute)."""
     B, T, _ = x.shape
     h = cfg.n_heads
     qk_n, vh = cfg.qk_nope_head_dim, cfg.v_head_dim
     x = x.astype(compute_dtype)
     q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x, positions[None, :],
                                             compute_dtype)
-    kv = (c_kv @ params["kv_up"].astype(compute_dtype)).reshape(
-        B, T, h, qk_n + vh)
+    c_all, r_all, positions_k = c_kv, k_rope, positions
+    if prefix_kv is not None:
+        pc, pr = prefix_kv
+        if pc.shape[0] != B:     # one shared prefix for the whole group
+            pc = jnp.broadcast_to(pc, (B,) + pc.shape[1:])
+            pr = jnp.broadcast_to(pr, (B,) + pr.shape[1:])
+        S0 = pc.shape[1]
+        c_all = jnp.concatenate([pc.astype(c_kv.dtype), c_kv], axis=1)
+        r_all = jnp.concatenate([pr.astype(k_rope.dtype), k_rope], axis=1)
+        positions_k = jnp.concatenate(
+            [jnp.arange(S0, dtype=positions.dtype), positions])
+    S = c_all.shape[1]
+    kv = (c_all @ params["kv_up"].astype(compute_dtype)).reshape(
+        B, S, h, qk_n + vh)
     k_nope, v = kv[..., :qk_n], kv[..., qk_n:]
     # fold the shared rope-key into per-head keys by concatenation
     k = jnp.concatenate([k_nope, jnp.broadcast_to(
-        k_rope[:, :, None, :], (B, T, h, cfg.qk_rope_head_dim))], axis=-1)
+        r_all[:, :, None, :], (B, S, h, cfg.qk_rope_head_dim))], axis=-1)
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
-    out = _chunked_attention(q, k, v, positions, positions, causal=True,
+    out = _chunked_attention(q, k, v, positions, positions_k, causal=True,
                              window=0, chunk=chunk)
     out = out.reshape(B, T, h * vh) @ params["wo"].astype(compute_dtype)
     if return_kv:
@@ -363,3 +532,44 @@ def mla_decode_step(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
     out = jnp.einsum("bhr,rhv->bhv", lat, w_v).reshape(B, 1, h * vh)
     out = out.astype(compute_dtype) @ params["wo"].astype(compute_dtype)
     return out, MLACache(cnew, rnew, pos + 1)
+
+
+def mla_paged_decode_step(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
+                          cache: PagedMLACache, compute_dtype=jnp.bfloat16
+                          ) -> Tuple[jnp.ndarray, PagedMLACache]:
+    """Absorbed-latent decode over the paged latent arena — identical
+    math to the per-slot `mla_decode_step` on the page-gathered latents
+    (MLA has no sliding window, so the layout is always linear)."""
+    B = x.shape[0]
+    h = cfg.n_heads
+    qk_n, qk_r, vh, r = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                         cfg.v_head_dim, cfg.kv_lora_rank)
+    pos = cache.pos
+    ps = cache.c_kv.shape[1]
+    cap = cache.page_table.shape[1] * ps
+    x = x.astype(compute_dtype)
+    posv = pos[:, None].astype(jnp.float32)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x, posv,
+                                            compute_dtype)
+    row = jnp.minimum(pos, cap - 1)
+    pg, off = _paged_slot(cache.page_table, row, ps)
+    cnew = _paged_write(cache.c_kv, pg, off, c_kv[:, 0])
+    rnew = _paged_write(cache.k_rope, pg, off, k_rope[:, 0])
+    cfull = cnew[cache.page_table].reshape(B, cap, r)
+    rfull = rnew[cache.page_table].reshape(B, cap, qk_r)
+    kv_up = params["kv_up"].astype(compute_dtype).reshape(r, h, qk_n + vh)
+    w_k = kv_up[..., :qk_n]
+    w_v = kv_up[..., qk_n:]
+    q_eff = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], w_k)
+    scores = (jnp.einsum("bhr,bsr->bhs", q_eff.astype(jnp.float32),
+                         cfull.astype(jnp.float32))
+              + jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
+                           rfull.astype(jnp.float32)))
+    scores = scores / math.sqrt(qk_n + qk_r)
+    valid = jnp.arange(cap)[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    lat = jnp.einsum("bhs,bsr->bhr", probs.astype(cfull.dtype), cfull)
+    out = jnp.einsum("bhr,rhv->bhv", lat, w_v).reshape(B, 1, h * vh)
+    out = out.astype(compute_dtype) @ params["wo"].astype(compute_dtype)
+    return out, PagedMLACache(cnew, rnew, cache.page_table, pos + 1)

@@ -57,12 +57,15 @@ def block_apply(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
                 positions: jnp.ndarray, moe_block: bool,
                 compute_dtype=jnp.bfloat16, attn_chunk: int = 512,
                 moe_shards: int = 1, use_flash: bool = False,
-                return_kv: bool = False):
+                return_kv: bool = False, prefix_kv=None):
     """[B,T,D] -> ([B,T,D], aux_loss[, kv]).
 
     return_kv (attention families only): also return this block's
     decode-cache contribution — (k, v) for GQA, (c_kv, k_rope) for MLA —
-    so a fused prefill can populate a cache in one forward pass."""
+    so a fused prefill can populate a cache in one forward pass.
+    prefix_kv: this block's cached shared-prefix contribution (same pair
+    shapes, [B, S0, ...]) for the extend-prefill — `positions` then
+    starts at S0 and only the tail is computed/returned."""
     aux = jnp.zeros((), jnp.float32)
     if cfg.family == "ssm":
         assert not return_kv, "fused kv capture needs an attention family"
@@ -77,10 +80,12 @@ def block_apply(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
     kv = None
     if cfg.attn_type == "mla":
         a = ATT.mla_forward(params["attn"], cfg, h, positions, compute_dtype,
-                            attn_chunk, return_kv=return_kv)
+                            attn_chunk, return_kv=return_kv,
+                            prefix_kv=prefix_kv)
     else:
         a = ATT.gqa_forward(params["attn"], cfg, h, positions, compute_dtype,
-                            attn_chunk, use_flash, return_kv=return_kv)
+                            attn_chunk, use_flash, return_kv=return_kv,
+                            prefix_kv=prefix_kv)
     if return_kv:
         a, kv = a
     if cfg.family == "hybrid":
@@ -158,16 +163,17 @@ def project_frontend(params: PyTree, cfg: ModelConfig, embeds: jnp.ndarray,
 def _scan_blocks(blocks: PyTree, cfg: ModelConfig, x, positions, moe_block,
                  compute_dtype, attn_chunk, remat: bool = True,
                  moe_shards: int = 1, use_flash: bool = False,
-                 collect_kv: bool = False):
+                 collect_kv: bool = False, prefix_kv=None):
     body = functools.partial(block_apply, cfg=cfg, positions=positions,
                              moe_block=moe_block, compute_dtype=compute_dtype,
                              attn_chunk=attn_chunk, moe_shards=moe_shards,
                              use_flash=use_flash, return_kv=collect_kv)
 
-    def step(carry, bparams):
+    def step(carry, inp):
         x, aux = carry
-        fn = (jax.checkpoint(lambda p, y: body(p, x=y)) if remat
-              else (lambda p, y: body(p, x=y)))
+        bparams, pkv = inp
+        fn = (jax.checkpoint(lambda p, y: body(p, x=y, prefix_kv=pkv))
+              if remat else (lambda p, y: body(p, x=y, prefix_kv=pkv)))
         if collect_kv:
             x, a, kv = fn(bparams, x)
             return (x, aux + a), kv
@@ -175,9 +181,10 @@ def _scan_blocks(blocks: PyTree, cfg: ModelConfig, x, positions, moe_block,
         return (x, aux + a), None
 
     # collect_kv: the scan's ys stack per-layer kv on axis 0 — exactly the
-    # [L, ...] layout of DecodeCache.layers
+    # [L, ...] layout of DecodeCache.layers; prefix_kv rides along as a
+    # per-layer xs pair ([L, B, S0, ...] stacked, sliced by the scan)
     (x, aux), kvs = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)),
-                                 blocks)
+                                 (blocks, prefix_kv))
     if collect_kv:
         return x, aux, kvs
     return x, aux
@@ -249,7 +256,7 @@ class DecodeCache(NamedTuple):
 
 
 def _one_layer_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
-                     per_slot: bool = False):
+                     per_slot: bool = False, paged=None):
     pos0 = jnp.zeros((batch,) if per_slot else (), jnp.int32)
     if cfg.family == "ssm":
         return SSM.RWKVState(
@@ -258,7 +265,15 @@ def _one_layer_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
             jnp.zeros((batch, cfg.d_model), dtype),
             jnp.zeros((batch, cfg.d_model), dtype),
             pos0)
-    if cfg.attn_type == "mla":
+    if paged is not None:
+        ps, num_pages = paged
+        if cfg.attn_type == "mla":
+            att = ATT.init_paged_mla_cache(cfg, batch, max_len, ps,
+                                           num_pages, dtype)
+        else:
+            att = ATT.init_paged_kv_cache(cfg, batch, max_len, ps,
+                                          num_pages, dtype)
+    elif cfg.attn_type == "mla":
         att = ATT.init_mla_cache(cfg, batch, max_len, dtype, per_slot)
     else:
         att = ATT.init_kv_cache(cfg, batch, max_len, dtype, per_slot)
@@ -269,14 +284,19 @@ def _one_layer_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
 
 
 def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
-                      dtype=jnp.bfloat16, per_slot: bool = False
-                      ) -> DecodeCache:
+                      dtype=jnp.bfloat16, per_slot: bool = False,
+                      paged=None) -> DecodeCache:
     """per_slot=True: every leaf (including the pos counters, then [B])
     carries the batch axis at position 1 after layer stacking — the layout
-    engine/serving's slotted-cache ops (row insert/select) rely on."""
+    engine/serving's slotted-cache ops (row insert/select) rely on.
+
+    paged=(page_size, num_pages): attention K/V lives in per-layer page
+    arenas `[L, num_pages, page_size, ...]` addressed via int32 page
+    tables [L, B, pages_per_slot] (recurrent state — mamba/rwkv — stays
+    per-slot dense; it is O(1) per slot). Implies per-slot positions."""
     stack = lambda n: jax.tree.map(
         lambda x: jnp.broadcast_to(x, (n,) + x.shape),
-        _one_layer_cache(cfg, batch, max_len, dtype, per_slot))
+        _one_layer_cache(cfg, batch, max_len, dtype, per_slot, paged))
     dense = None
     n_moe = cfg.n_layers
     if cfg.n_experts and cfg.first_dense_layers:
@@ -286,7 +306,7 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def _cache_rows(t: jnp.ndarray, lengths: jnp.ndarray, cap: int,
-                rolling: bool, cache_dtype) -> jnp.ndarray:
+                rolling: bool, cache_dtype, offset: int = 0) -> jnp.ndarray:
     """Place captured per-position tensors [L,B,P,...] into fixed-capacity
     cache rows [L,B,cap,...].
 
@@ -294,13 +314,18 @@ def _cache_rows(t: jnp.ndarray, lengths: jnp.ndarray, cap: int,
     prompt): row p holds position p; rows >= length are dead weight the
     per-slot pos mask excludes. Rolling layout (SWA, prompt longer than
     the window): row r holds the most recent prompt position p with
-    p % cap == r — exactly what cap sequential decode writes would leave."""
+    p % cap == r — exactly what cap sequential decode writes would leave.
+
+    offset: absolute position of t[..., 0] (extend-prefill: the tail
+    starts after a cached shared prefix; linear layout only)."""
     Lyr, B, P = t.shape[:3]
     tail = t.shape[3:]
-    if not rolling or cap >= P:
-        assert cap >= P, f"cache capacity {cap} < prompt bucket {P}"
+    if not rolling or cap >= offset + P:
+        assert cap >= offset + P, \
+            f"cache capacity {cap} < prompt bucket {offset}+{P}"
         out = jnp.zeros((Lyr, B, cap) + tail, cache_dtype)
-        return out.at[:, :, :P].set(t.astype(cache_dtype))
+        return out.at[:, :, offset:offset + P].set(t.astype(cache_dtype))
+    assert offset == 0, "rolling prefill cannot extend a shared prefix"
     last = (lengths - 1)[:, None]                       # [B,1]
     idx = jnp.arange(cap)[None, :]                      # [1,cap]
     p_r = last - ((last - idx) % cap)                   # [B,cap] winner per row
@@ -315,7 +340,8 @@ def prefill_decode_cache(params: PyTree, cfg: ModelConfig,
                          tokens: jnp.ndarray, lengths: jnp.ndarray,
                          max_len: int, compute_dtype=jnp.bfloat16,
                          attn_chunk: int = 512, use_flash: bool = False,
-                         cache_dtype=jnp.bfloat16
+                         cache_dtype=jnp.bfloat16, prefix_kv=None,
+                         prefix_len: int = 0
                          ) -> Tuple[jnp.ndarray, DecodeCache]:
     """Fused serving prefill: ONE full-sequence forward that both computes
     the last-prompt-position logits and writes every layer's K/V into a
@@ -326,21 +352,37 @@ def prefill_decode_cache(params: PyTree, cfg: ModelConfig,
     tokens: [B,P] prompts right-padded to a common bucket length (causal
     attention makes the padding inert); lengths: [B] true prompt lengths.
     Returns (logits [B,1,V] at position lengths-1, cache with per-slot
-    pos = lengths)."""
+    pos = lengths).
+
+    Shared-prefix extend: with `prefix_kv` (a DecodeCache-shaped pytree
+    of per-layer cached prefix pairs, [L, B, prefix_len, ...]) the tokens
+    are the UNSHARED TAIL only — positions start at `prefix_len`, the
+    forward computes O(tail) work attending to prefix+tail, the returned
+    cache rows hold the tail at its absolute positions (the caller
+    already owns the prefix rows/pages) and pos = prefix_len + lengths."""
     assert cfg.family not in ("ssm", "hybrid") and not cfg.is_encoder_decoder
+    assert prefix_kv is None or (prefix_len > 0 and not cfg.sliding_window)
     B, P = tokens.shape
     x = L.embed(params["embed"], tokens, compute_dtype)
-    positions = jnp.arange(P, dtype=jnp.float32)
+    positions = jnp.arange(prefix_len, prefix_len + P, dtype=jnp.float32)
+    pfx = prefix_kv or DecodeCache(None, None)
+    # accept both the bare per-layer pair and the {"attn": pair} segment
+    # shape that engine/serving's gather_prefix produces
+    seg = lambda s: s["attn"] if isinstance(s, dict) else s
+    pfx = DecodeCache(seg(pfx.layers), seg(pfx.dense_layers)
+                      if pfx.dense_layers is not None else None)
     dense_kv = None
     if "dense_blocks" in params:
         x, _, dense_kv = _scan_blocks(params["dense_blocks"], cfg, x,
                                       positions, False, compute_dtype,
                                       attn_chunk, remat=False,
-                                      collect_kv=True)
+                                      collect_kv=True,
+                                      prefix_kv=pfx.dense_layers)
     x, _, kv = _scan_blocks(params["blocks"], cfg, x, positions,
                             bool(cfg.n_experts), compute_dtype, attn_chunk,
-                            remat=False, use_flash=use_flash,
-                            collect_kv=True)
+                            remat=False,
+                            use_flash=use_flash and prefix_kv is None,
+                            collect_kv=True, prefix_kv=pfx.layers)
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     last = jnp.take_along_axis(x, (lengths - 1)[:, None, None], axis=1)
     if cfg.tie_embeddings:
@@ -350,12 +392,14 @@ def prefill_decode_cache(params: PyTree, cfg: ModelConfig,
 
     def seg_cache(pair):
         Lyr = jax.tree.leaves(pair)[0].shape[0]
-        pos = jnp.broadcast_to(lengths[None, :], (Lyr, B))
+        pos = jnp.broadcast_to(prefix_len + lengths[None, :], (Lyr, B))
         if cfg.attn_type == "mla":
             c_kv, k_rope = pair
             att = ATT.MLACache(
-                _cache_rows(c_kv, lengths, max_len, False, cache_dtype),
-                _cache_rows(k_rope, lengths, max_len, False, cache_dtype),
+                _cache_rows(c_kv, lengths, max_len, False, cache_dtype,
+                            prefix_len),
+                _cache_rows(k_rope, lengths, max_len, False, cache_dtype,
+                            prefix_len),
                 pos)
         else:
             k, v = pair
@@ -363,8 +407,10 @@ def prefill_decode_cache(params: PyTree, cfg: ModelConfig,
                    else max_len)
             rolling = bool(cfg.sliding_window)
             att = ATT.KVCache(
-                _cache_rows(k, lengths, cap, rolling, cache_dtype),
-                _cache_rows(v, lengths, cap, rolling, cache_dtype), pos)
+                _cache_rows(k, lengths, cap, rolling, cache_dtype,
+                            prefix_len),
+                _cache_rows(v, lengths, cap, rolling, cache_dtype,
+                            prefix_len), pos)
         return {"attn": att}
 
     dense = seg_cache(dense_kv) if dense_kv is not None else None
@@ -385,7 +431,13 @@ def _block_decode(params: PyTree, cfg: ModelConfig, x, cache, moe_block,
         cache = cache._replace(x_chan=h[:, 0])
         return x + c_out, cache, jnp.zeros((), jnp.float32)
     h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
-    if cfg.attn_type == "mla":
+    if isinstance(cache["attn"], ATT.PagedKVCache):
+        a, att = ATT.gqa_paged_decode_step(params["attn"], cfg, h,
+                                           cache["attn"], compute_dtype)
+    elif isinstance(cache["attn"], ATT.PagedMLACache):
+        a, att = ATT.mla_paged_decode_step(params["attn"], cfg, h,
+                                           cache["attn"], compute_dtype)
+    elif cfg.attn_type == "mla":
         a, att = ATT.mla_decode_step(params["attn"], cfg, h, cache["attn"],
                                      compute_dtype)
     else:

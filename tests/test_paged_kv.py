@@ -1,0 +1,542 @@
+"""Paged KV cache + shared-prefix reuse (engine/serving paged layout).
+
+The contract under test: greedy tokens from the paged arena are BITWISE
+identical to the dense slotted cache — across attention families, under
+slot churn, under shared-prefix reuse, under pool pressure (preemption
+by recompute) and copy-on-write — while page churn never retraces the
+decode step. fp32 compute keeps every comparison exact on CPU.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, get_reduced
+from repro.engine import EngineConfig, GenerationRequest, ServeEngine
+from repro.engine.serving import PagePool, PrefixIndex
+from repro.engine.serving.slots import (dense_kv_bytes, paged_kv_page_bytes)
+from repro.models import build_model
+
+TINY = ModelConfig("paged-tiny", "dense", 2, 64, 4, 2, 128, 257,
+                   head_dim=16)
+
+
+def tiny_model():
+    return build_model(TINY, compute_dtype=jnp.float32, attn_chunk=16)
+
+
+def reduced_model(arch):
+    cfg = get_reduced(arch)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    return build_model(cfg, compute_dtype=jnp.float32, attn_chunk=8)
+
+
+def run_engine(model, params, reqs, *, stagger=1, **cfg_kw):
+    """Staggered arrivals (`stagger` ticks apart — the continuous-
+    batching shape, and what lets later requests match prefixes the
+    earlier ones registered), then drain."""
+    cfg_kw.setdefault("max_slots", 2)
+    cfg_kw.setdefault("max_len", 48)
+    eng = ServeEngine(EngineConfig(**cfg_kw), model, None, params)
+    handles = []
+    for r in reqs:
+        handles.append(eng.submit(GenerationRequest(**r)))
+        for _ in range(stagger):
+            eng.step()
+    eng.drain()
+    return eng, [h.tokens for h in handles]
+
+
+# ------------------------------------------------- dense-vs-paged bitwise
+class TestDenseVsPaged:
+    """One engine run per layout, identical staggered workload, token
+    streams compared bitwise — the core paging contract."""
+
+    CASES = {
+        "gqa": "qwen3-32b",
+        "swa": "mixtral-8x22b",      # rolling-window pages
+        "mla": "minicpm3-4b",        # paged latent arena
+        "hybrid": "hymba-1.5b",      # paged attn + dense mamba state
+    }
+
+    @pytest.mark.parametrize("name", sorted(CASES))
+    def test_tokens_bitwise_equal(self, name):
+        model = reduced_model(self.CASES[name])
+        params = model.init(jax.random.key(0))
+        rng = np.random.RandomState(0)
+        V = model.cfg.vocab_size
+        reqs = [dict(prompt=rng.randint(0, V, n), max_new_tokens=g)
+                for n, g in [(7, 6), (13, 9), (19, 4)]]
+        _, dense = run_engine(model, params, reqs, kv_layout="dense")
+        eng, paged = run_engine(model, params, reqs, kv_layout="paged")
+        assert eng.paged
+        assert paged == dense
+
+    def test_swa_prompt_longer_than_window_rolls_pages(self):
+        model = reduced_model("mixtral-8x22b")
+        w = model.cfg.sliding_window
+        params = model.init(jax.random.key(1))
+        rng = np.random.RandomState(1)
+        reqs = [dict(prompt=rng.randint(0, model.cfg.vocab_size, w + 7),
+                     max_new_tokens=6)]
+        kw = dict(max_len=w + 32, max_slots=2)
+        _, dense = run_engine(model, params, reqs, kv_layout="dense", **kw)
+        _, paged = run_engine(model, params, reqs, kv_layout="paged", **kw)
+        assert paged == dense
+
+    def test_rwkv_quietly_stays_dense(self):
+        model = reduced_model("rwkv6-7b")      # no KV to page
+        params = model.init(jax.random.key(0))
+        eng, toks = run_engine(model, params,
+                               [dict(prompt=list(range(1, 8)),
+                                     max_new_tokens=4)],
+                               kv_layout="paged")
+        assert not eng.paged and len(toks[0]) == 4
+
+    def test_page_size_must_divide_swa_window(self):
+        model = reduced_model("mixtral-8x22b")     # window 32
+        params = model.init(jax.random.key(0))
+        cfg = EngineConfig(max_slots=2, max_len=48, page_size=24,
+                           kv_layout="paged")
+        with pytest.raises(ValueError, match="page size dividing"):
+            ServeEngine(cfg, model, None, params)
+
+    def test_no_retrace_under_page_churn(self):
+        model = tiny_model()
+        params = model.init(jax.random.key(0))
+        rng = np.random.RandomState(2)
+        reqs = [dict(prompt=rng.randint(0, 257, n), max_new_tokens=g)
+                for n, g in [(21, 8), (5, 12), (33, 3), (9, 9)]]
+        eng, _ = run_engine(model, params, reqs, stagger=2,
+                            kv_layout="paged", max_slots=2, max_len=48)
+        assert eng.throughput()["completed"] == 4
+        size = getattr(eng._decode, "_cache_size", lambda: 1)()
+        assert size == 1, f"decode retraced {size} times"
+
+
+# ----------------------------------------------------- shared prefixes
+class TestSharedPrefix:
+    def _prompts(self, sys_len=37, tails=(5, 9, 3), seed=3):
+        rng = np.random.RandomState(seed)
+        sys_prompt = rng.randint(0, 257, sys_len)
+        return [np.concatenate([sys_prompt, rng.randint(0, 257, t)])
+                for t in tails]
+
+    def test_shared_prefix_tokens_equal_unshared(self):
+        """Requests sharing a system prompt, admitted across ticks, reuse
+        its pages read-only and prefill only the unshared tail — with
+        tokens bitwise-equal to the dense engine."""
+        model = tiny_model()
+        params = model.init(jax.random.key(0))
+        reqs = [dict(prompt=p, max_new_tokens=8) for p in self._prompts()]
+        _, dense = run_engine(model, params, reqs, stagger=3,
+                              kv_layout="dense", max_slots=4, max_len=64)
+        eng, shared = run_engine(model, params, reqs, stagger=3,
+                                 kv_layout="paged", max_slots=4, max_len=64)
+        assert shared == dense
+        # 37-token system prompt = 2 full pages; requests 2 and 3 hit
+        assert eng.stats["prefix_hits"] == 2
+        assert eng.stats["prefix_tokens_reused"] == 2 * 2 * 16
+
+    def test_shared_pages_are_physically_shared(self):
+        model = tiny_model()
+        params = model.init(jax.random.key(0))
+        cfg = EngineConfig(max_slots=4, max_len=64, kv_layout="paged")
+        eng = ServeEngine(cfg, model, None, params)
+        p1, p2, _ = self._prompts()
+        h1 = eng.submit(GenerationRequest(prompt=p1, max_new_tokens=12))
+        eng.step()
+        h2 = eng.submit(GenerationRequest(prompt=p2, max_new_tokens=12))
+        eng.step()
+        s1, s2 = h1.slot, h2.slot
+        # both slots map logical pages 0-1 onto the SAME physical pages
+        assert (eng._tables[s1][:2] == eng._tables[s2][:2]).all()
+        assert eng._shared[s2][:2].all() and not eng._owned[s2][:2].any()
+        for pid in eng._tables[s2][:2]:
+            assert eng._pool.refcount(int(pid)) >= 3   # 2 slots + index
+        eng.drain()
+
+    def test_prefix_survives_retirement_for_future_requests(self):
+        model = tiny_model()
+        params = model.init(jax.random.key(0))
+        cfg = EngineConfig(max_slots=2, max_len=64, kv_layout="paged")
+        eng = ServeEngine(cfg, model, None, params)
+        p1, p2, _ = self._prompts()
+        eng.submit(GenerationRequest(prompt=p1, max_new_tokens=4))
+        eng.drain()                      # retired; index keeps the pages
+        assert eng._pool.pages_used == 2
+        h = eng.submit(GenerationRequest(prompt=p2, max_new_tokens=4))
+        eng.drain()
+        assert eng.stats["prefix_hits"] == 1 and h.done
+
+    def test_warm_prefix_co_arrivals_share_one_prefill(self):
+        """Two requests arriving in the SAME tick against an already-warm
+        prefix land in one admission group: the gathered [1, S0, ...]
+        prefix broadcasts across the group (regression: concat used to
+        require matching batch) and tokens stay dense-equal."""
+        model = tiny_model()
+        params = model.init(jax.random.key(0))
+        # tails 5/5 bucket together (one batch-2 extend group), 21 apart
+        prompts = self._prompts(tails=(5, 5, 21))
+        reqs = [dict(prompt=p, max_new_tokens=6) for p in prompts]
+        _, dense = run_engine(model, params, reqs, stagger=0,
+                              kv_layout="dense", max_slots=4, max_len=64)
+        cfg = EngineConfig(max_slots=4, max_len=64, kv_layout="paged")
+        eng = ServeEngine(cfg, model, None, params)
+        warm = eng.submit(GenerationRequest(prompt=prompts[0],
+                                            max_new_tokens=6))
+        eng.drain()                       # registers the system pages
+        prefills = eng.stats["prefill_calls"]
+        hs = [eng.submit(GenerationRequest(prompt=p, max_new_tokens=6))
+              for p in prompts]           # co-arrive in one tick
+        eng.drain()
+        assert [warm.tokens] + [h.tokens for h in hs] == \
+            [dense[0]] + dense
+        assert eng.stats["prefix_hits"] == 3
+        # tails 5,5 bucket together -> 2 extend prefills, not 3
+        assert eng.stats["prefill_calls"] == prefills + 2
+
+    def test_pinned_prefix_pages_never_alias_own_pages(self):
+        """Pool pressure while matching a warm prefix: eviction must not
+        free the very pages the reservation just matched (they would be
+        re-allocated as the slot's OWN pages and the prefill scatter
+        would corrupt the prefix). The request waits instead, and tokens
+        stay dense-equal."""
+        model = tiny_model()
+        params = model.init(jax.random.key(0))
+        rng = np.random.RandomState(9)
+        sys_prompt = rng.randint(0, 257, 33)     # 2 full shareable pages
+        pa = np.concatenate([sys_prompt, rng.randint(0, 257, 5)])
+        px = rng.randint(0, 257, 20)             # the busy neighbor
+        pb = np.concatenate([sys_prompt, rng.randint(0, 257, 3)])
+        reqs = [dict(prompt=pa, max_new_tokens=4),
+                dict(prompt=px, max_new_tokens=10),
+                dict(prompt=pb, max_new_tokens=4)]
+        _, dense = run_engine(model, params, reqs, stagger=6,
+                              kv_layout="dense", max_slots=2, max_len=64)
+        # 4 usable pages: after A retires (2 registered) and X holds 2,
+        # B's reservation matches 2 shared and must WAIT for an own page
+        eng, paged = run_engine(model, params, reqs, stagger=6,
+                                kv_layout="paged", max_slots=2,
+                                max_len=64, kv_pages=5)
+        assert paged == dense
+        assert eng.stats["prefix_hits"] >= 1
+
+    def test_mla_shared_prefix(self):
+        model = reduced_model("minicpm3-4b")
+        params = model.init(jax.random.key(0))
+        rng = np.random.RandomState(4)
+        V = model.cfg.vocab_size
+        sys_prompt = rng.randint(0, V, 20)
+        reqs = [dict(prompt=np.concatenate([sys_prompt,
+                                            rng.randint(0, V, t)]),
+                     max_new_tokens=5) for t in (4, 7)]
+        _, dense = run_engine(model, params, reqs, stagger=2,
+                              kv_layout="dense", max_slots=2, max_len=48)
+        eng, paged = run_engine(model, params, reqs, stagger=2,
+                                kv_layout="paged", max_slots=2, max_len=48)
+        assert paged == dense and eng.stats["prefix_hits"] == 1
+
+    def test_param_swap_flushes_stale_prefix_pages(self):
+        """Hot-reloaded weights invalidate every registered prefix page
+        (their K/V was computed under the old params): post-swap requests
+        re-prefill from scratch and match the dense engine on the NEW
+        weights — no silent version mixing."""
+        model = tiny_model()
+        p_old = model.init(jax.random.key(0))
+        p_new = model.init(jax.random.key(1))
+        prompts = self._prompts()
+        eng = ServeEngine(EngineConfig(max_slots=2, max_len=64,
+                                       kv_layout="paged"),
+                          model, None, p_old)
+        eng.submit(GenerationRequest(prompt=prompts[0], max_new_tokens=4))
+        eng.drain()                        # warm index under OLD weights
+        assert len(eng._prefix) == 2
+        eng.swap_params(p_new)
+        assert len(eng._prefix) == 0       # flushed
+        h = eng.submit(GenerationRequest(prompt=prompts[1],
+                                         max_new_tokens=6))
+        eng.drain()
+        assert eng.stats["prefix_hits"] == 0
+        _, dense = run_engine(model, p_new,
+                              [dict(prompt=prompts[1], max_new_tokens=6)],
+                              kv_layout="dense", max_slots=2, max_len=64)
+        assert h.tokens == dense[0]
+
+    def test_swa_never_shares(self):
+        model = reduced_model("mixtral-8x22b")
+        params = model.init(jax.random.key(0))
+        eng = ServeEngine(EngineConfig(max_slots=2, max_len=48,
+                                       kv_layout="paged"),
+                          model, None, params)
+        assert eng._prefix is None     # rolling pages churn: sharing off
+
+
+# --------------------------------------------------------- pool pressure
+class TestPoolPressure:
+    def test_preemption_recompute_is_bitwise(self):
+        """A starved arena preempts the youngest request; re-admission
+        re-prefills prompt+generated — the final streams are identical
+        to an unconstrained run."""
+        model = tiny_model()
+        params = model.init(jax.random.key(0))
+        rng = np.random.RandomState(5)
+        reqs = [dict(prompt=rng.randint(0, 257, n), max_new_tokens=20)
+                for n in (20, 25, 18)]
+        kw = dict(max_slots=3, max_len=48, prefix_sharing=False)
+        _, full = run_engine(model, params, reqs, kv_layout="paged", **kw)
+        eng, tight = run_engine(model, params, reqs, kv_layout="paged",
+                                kv_pages=6, **kw)
+        assert tight == full
+        assert eng.stats["preemptions"] >= 1
+        assert eng.throughput()["completed"] == 3
+
+    def test_cold_prefix_pages_evicted_under_pressure(self):
+        model = tiny_model()
+        params = model.init(jax.random.key(0))
+        rng = np.random.RandomState(6)
+        cfg = EngineConfig(max_slots=1, max_len=48, kv_layout="paged",
+                           kv_pages=4)       # 3 pages + trash: exactly 1 slot
+        eng = ServeEngine(cfg, model, None, params)
+        eng.submit(GenerationRequest(prompt=rng.randint(0, 257, 20),
+                                     max_new_tokens=4))
+        eng.drain()
+        assert len(eng._prefix) == 1         # one warm prefix page
+        h = eng.submit(GenerationRequest(prompt=rng.randint(0, 257, 30),
+                                         max_new_tokens=4))
+        eng.drain()                          # needs all 3 pages: evict
+        assert h.done and len(eng._prefix) <= 1
+
+    def test_forced_cow_preserves_tokens(self):
+        """An extra reference on a page a running slot is about to write
+        (what rolling-over-a-shared-page would produce) triggers COW; the
+        slot copies the page and decodes on, bitwise-unchanged."""
+        model = tiny_model()
+        params = model.init(jax.random.key(0))
+        rng = np.random.RandomState(7)
+        prompt = rng.randint(0, 257, 20)
+        _, ref = run_engine(model, params,
+                            [dict(prompt=prompt.copy(),
+                                  max_new_tokens=20)],
+                            kv_layout="dense", max_len=48)
+        eng = ServeEngine(EngineConfig(max_slots=2, max_len=48,
+                                       kv_layout="paged"),
+                          model, None, params)
+        h = eng.submit(GenerationRequest(prompt=prompt.copy(),
+                                         max_new_tokens=20))
+        eng.step()
+        slot = h.slot
+        lp = int(eng._host_pos[slot]) // eng._page_size
+        pid = int(eng._tables[slot, lp])
+        eng._pool.ref([pid])                 # simulate external sharing
+        eng._shared[slot, lp] = True
+        eng._owned[slot, lp] = False
+        eng.drain()
+        eng._pool.release([pid])
+        assert eng.stats["cow_copies"] == 1
+        assert h.tokens == ref[0]
+
+
+# ------------------------------------------------------------ allocator
+class TestPagePool:
+    def test_alloc_free_refcount_roundtrip(self):
+        pool = PagePool(8, 16)
+        assert pool.pages_free == 7          # page 0 is trash
+        a = pool.alloc(3)
+        assert len(a) == 3 and 0 not in a and pool.pages_used == 3
+        pool.ref(a[:1])
+        pool.release(a)                      # a[0] survives (refcount 1)
+        assert pool.pages_used == 1 and pool.refcount(a[0]) == 1
+        pool.release(a[:1])
+        assert pool.pages_used == 0 and pool.pages_free == 7
+
+    def test_alloc_exhaustion_returns_none(self):
+        pool = PagePool(4, 8)
+        assert pool.alloc(4) is None         # only 3 allocatable
+        got = pool.alloc(3)
+        assert got is not None and pool.alloc(1) is None
+
+    def test_cow_moves_reference(self):
+        pool = PagePool(6, 8)
+        (p,) = pool.alloc(1)
+        pool.ref([p])                        # shared: refcount 2
+        q = pool.cow(p)
+        assert q is not None and q != p
+        assert pool.refcount(p) == 1 and pool.refcount(q) == 1
+
+    def test_fragmentation_churn_never_leaks(self):
+        """Random admit/retire cycles: every page the bookkeeping says is
+        used is referenced, and a full drain returns the pool to empty."""
+        rng = np.random.RandomState(8)
+        pool = PagePool(17, 4)
+        held = []
+        for _ in range(200):
+            if held and rng.rand() < 0.45:
+                pool.release(held.pop(rng.randint(len(held))))
+            else:
+                n = int(rng.randint(1, 4))
+                got = pool.alloc(n)
+                if got is None:
+                    continue
+                held.append(got)
+            assert pool.pages_used == sum(len(h) for h in held)
+            assert pool.pages_used + pool.pages_free == pool.num_pages - 1
+        for h in held:
+            pool.release(h)
+        assert pool.pages_used == 0
+
+    def test_kv_byte_accounting_matches_layouts(self):
+        model = tiny_model()
+        params = model.init(jax.random.key(0))
+        cfg = EngineConfig(max_slots=2, max_len=48, kv_layout="paged")
+        eng = ServeEngine(cfg, model, None, params)
+        # full provisioning: arena capacity == the dense footprint
+        dense = ServeEngine(EngineConfig(max_slots=2, max_len=48,
+                                         kv_layout="dense"),
+                            model, None, params)
+        assert eng._kv_capacity_bytes == dense._kv_capacity_bytes
+        assert (paged_kv_page_bytes(eng.cache) * (eng._num_pages - 1)
+                == dense_kv_bytes(dense.cache))
+
+
+# ----------------------------------------------------------- prefix index
+class TestPrefixIndex:
+    def test_chain_match_register_and_divergence(self):
+        idx = PrefixIndex(4)
+        a = np.arange(20)                       # pages: [0:4],[4:8],[8:12],[12:16]
+        assert idx.max_shareable(a) == 4
+        assert idx.match(a) == []
+        newly = idx.register(a, [7, 8, 9, 10])
+        assert newly == [7, 8, 9, 10]
+        b = np.concatenate([a[:8], 99 + np.arange(8)])   # diverges at page 2
+        assert idx.match(b) == [7, 8]
+        assert idx.register(b, [11], start=2) == [11]
+        assert idx.match(b) == [7, 8, 11]
+        assert idx.match(a) == [7, 8, 9, 10]
+
+    def test_last_token_never_shared(self):
+        idx = PrefixIndex(4)
+        p = np.arange(8)                     # 2 full pages, but max 1 shared
+        assert idx.max_shareable(p) == 1
+        idx.register(p, [3])
+        assert idx.match(np.arange(8)) == [3]
+
+    def test_lru_evicts_chain_leaves_first(self):
+        idx = PrefixIndex(4)
+        idx.register(np.arange(13), [5, 6, 7])
+        assert idx.evict_lru() == 7          # deepest page first
+        assert idx.match(np.arange(13)) == [5, 6]
+        idx.forget(6)
+        assert idx.match(np.arange(13)) == [5]
+
+
+# ---------------------------------------------------------------- config
+class TestPagedConfig:
+    def test_roundtrip_and_cli(self):
+        cfg = EngineConfig(arch="qwen3-32b", kv_layout="paged",
+                           page_size=32, kv_pages=64, prefix_sharing=False)
+        assert EngineConfig.from_dict(cfg.to_dict()) == cfg
+        cli = EngineConfig.from_cli(
+            ["--arch", "hymba-1p5b", "--kv-layout", "dense",
+             "--page-size", "8", "--kv-pages", "40",
+             "--no-prefix-sharing"])
+        assert (cli.kv_layout, cli.page_size, cli.kv_pages,
+                cli.prefix_sharing) == ("dense", 8, 40, False)
+        assert EngineConfig.from_dict(cli.to_dict()) == cli
+
+    def test_max_len_default_composes_with_page_size(self):
+        # max_len=0 => seq_len, rounded UP to a page multiple
+        cfg = EngineConfig(seq_len=100, page_size=16)
+        assert cfg.serve_max_len() == 112
+        assert EngineConfig(max_len=48, page_size=16).serve_max_len() == 48
+        assert EngineConfig(max_len=50, page_size=16).serve_max_len() == 64
+        assert EngineConfig(max_len=50,
+                            kv_layout="dense").serve_max_len() == 50
+
+    def test_validation_errors_are_clear(self):
+        with pytest.raises(ValueError, match="page_size"):
+            EngineConfig(page_size=0).validate()
+        with pytest.raises(ValueError, match="kv_layout"):
+            EngineConfig(kv_layout="mmap").validate()
+        with pytest.raises(ValueError, match="kv_pages"):
+            EngineConfig(kv_pages=-1).validate()
+        with pytest.raises(ValueError, match="trash page"):
+            EngineConfig(kv_pages=1).validate()
+        # the one-full-slot minimum is model-aware (sliding windows cap
+        # the paged capacity below max_len), so it lives in the engine
+        EngineConfig(max_len=4096, page_size=16, kv_pages=16).validate()
+        model = tiny_model()
+        with pytest.raises(ValueError, match="cannot hold even one"):
+            ServeEngine(EngineConfig(max_slots=2, max_len=64,
+                                     kv_pages=3),
+                        model, None, model.init(jax.random.key(0)))
+        # dense layout never trips the paged checks
+        EngineConfig(kv_layout="dense", page_size=0).validate()
+
+    def test_engine_rounds_max_len_up(self):
+        model = tiny_model()
+        params = model.init(jax.random.key(0))
+        eng = ServeEngine(EngineConfig(max_slots=2, max_len=40,
+                                       kv_layout="paged"),
+                          model, None, params)
+        assert eng.max_len == 48 and eng._pages_per_slot == 3
+
+
+# ---------------------------------------------------------------- kernel
+class TestPagedDecodeKernel:
+    def _ref(self, q, kp, vp, pt, pos, rolling):
+        import math
+        B, H, Dh = q.shape
+        _, ps, KV, _ = kp.shape
+        P = pt.shape[1]
+        cap = P * ps
+        G = H // KV
+        kf = kp[pt].reshape(B, cap, KV, Dh)
+        vf = vp[pt].reshape(B, cap, KV, Dh)
+        idx = np.arange(cap)
+        posb = pos[:, None]
+        slot_pos = ((posb - ((posb - idx[None, :]) % cap)) if rolling
+                    else np.broadcast_to(idx[None], (B, cap)))
+        valid = (slot_pos >= 0) & (slot_pos <= posb)
+        qg = q.reshape(B, KV, G, Dh)
+        s = np.einsum("bkgd,bskd->bkgs", qg, kf) / math.sqrt(Dh)
+        s = np.where(valid[:, None, None, :], s, -1e30)
+        p = np.asarray(jax.nn.softmax(jnp.asarray(s), axis=-1))
+        return np.einsum("bkgs,bskd->bkgd", p, vf).reshape(B, H, Dh)
+
+    @pytest.mark.parametrize("rolling", [False, True])
+    def test_kernel_matches_ref_gather(self, rolling):
+        from repro.kernels.flash_attention import paged_decode_attention
+        rng = np.random.RandomState(0)
+        B, H, KV, Dh, ps, P, NP = 3, 8, 2, 16, 4, 3, 12
+        q = rng.randn(B, H, Dh).astype(np.float32)
+        kp = rng.randn(NP, ps, KV, Dh).astype(np.float32)
+        vp = rng.randn(NP, ps, KV, Dh).astype(np.float32)
+        pt = np.stack([rng.permutation(np.arange(1, NP))[:P]
+                       for _ in range(B)]).astype(np.int32)
+        pos = np.asarray([0, 7, 25], np.int32)   # fresh, mid, wrapped
+        out = paged_decode_attention(
+            jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+            jnp.asarray(pt), jnp.asarray(pos), rolling=rolling,
+            interpret=True)
+        ref = self._ref(q, kp, vp, pt, pos, rolling)
+        np.testing.assert_allclose(np.asarray(out), ref, atol=1e-5)
+
+    def test_kernel_mqa_single_group(self):
+        from repro.kernels.flash_attention import paged_decode_attention
+        rng = np.random.RandomState(1)
+        B, H, KV, Dh, ps, P, NP = 2, 4, 4, 8, 4, 2, 9
+        q = rng.randn(B, H, Dh).astype(np.float32)
+        kp = rng.randn(NP, ps, KV, Dh).astype(np.float32)
+        vp = rng.randn(NP, ps, KV, Dh).astype(np.float32)
+        pt = np.asarray([[1, 2], [3, 4]], np.int32)
+        pos = np.asarray([3, 6], np.int32)
+        out = paged_decode_attention(
+            jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+            jnp.asarray(pt), jnp.asarray(pos), interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out), self._ref(q, kp, vp, pt, pos, False),
+            atol=1e-5)

@@ -212,8 +212,10 @@ class TestScheduler:
 # ------------------------------------------------------------ hot reload
 class TestHotReload:
     def _train(self, tmp, steps):
+        # global_batch=8: divisible by span for any simulated device
+        # count ci.sh uses (the 8-device flag made batch=4 invalid)
         cfg = EngineConfig(combine="mean", optimizer="momentum", lr=0.05,
-                           seq_len=16, global_batch=4, steps=steps,
+                           seq_len=16, global_batch=8, steps=steps,
                            ckpt_dir=tmp, ckpt_every=10 ** 6,
                            log_every=10 ** 6)
         return TrainSession.from_config(cfg, model=tiny_model(),
@@ -274,7 +276,7 @@ class TestRestoreParams:
     def test_serves_trained_weights(self, tmp_path):
         tmp = str(tmp_path)
         tcfg = EngineConfig(combine="mean", optimizer="momentum", lr=0.05,
-                            seq_len=16, global_batch=4, steps=2,
+                            seq_len=16, global_batch=8, steps=2,
                             ckpt_dir=tmp, ckpt_every=10 ** 6,
                             log_every=10 ** 6)
         ts = TrainSession.from_config(tcfg, model=tiny_model(),

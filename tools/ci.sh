@@ -31,4 +31,8 @@ echo "$serve_out" | grep -q "completed=3" || {
 echo "$serve_out" | grep -q "tok_s=" || {
     echo "serve smoke: missing throughput fields"; exit 1; }
 
+echo "== paged KV smoke (shared system prompt, dense-vs-paged bitwise) =="
+python -m benchmarks.serve_paged --smoke | grep -q "serve_paged smoke OK" || {
+    echo "serve_paged smoke failed"; exit 1; }
+
 echo "== ci.sh OK =="
