@@ -14,7 +14,7 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from .common import emit, run_devices
+from .common import append_history, emit, run_devices
 
 OUT = Path(__file__).resolve().parents[1] / "BENCH_adascale_fig6.json"
 
@@ -66,6 +66,7 @@ def main():
     result = {"target_loss": 3.5, "span": 8, "max_steps": 120,
               "batches": by_batch}
     OUT.write_text(json.dumps(result, indent=2) + "\n")
+    append_history("adascale_fig6", result)
     emit("fig6_done", 0.0, f"wrote {OUT.name}")
     return result
 

@@ -39,7 +39,7 @@ import sys
 import time
 from pathlib import Path
 
-from .common import emit
+from .common import append_history, emit
 
 OUT = Path(__file__).resolve().parents[1] / "BENCH_combine_fused.json"
 
@@ -152,6 +152,7 @@ def main(smoke: bool = False):
     }
     if not smoke:
         OUT.write_text(json.dumps(result, indent=2) + "\n")
+        append_history("combine_fused", result)
         emit("combine_fused_written", 0.0, f"wrote {OUT.name}")
     return result
 

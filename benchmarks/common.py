@@ -1,6 +1,7 @@
 """Shared benchmark helpers: timing, CSV output, subprocess multi-device."""
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
@@ -10,6 +11,20 @@ from pathlib import Path
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 if SRC not in sys.path:
     sys.path.insert(0, SRC)
+
+HISTORY = Path(__file__).resolve().parents[1] / "BENCH_history.jsonl"
+
+
+def append_history(bench: str, result: dict) -> None:
+    """Append one run to the cross-run perf trajectory
+    (BENCH_history.jsonl at the repo root). The per-bench BENCH_*.json
+    files hold only the latest run; the history line is what lets a
+    regression be dated to a commit."""
+    row = {"bench": bench,
+           "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+           "result": result}
+    with HISTORY.open("a") as f:
+        f.write(json.dumps(row, sort_keys=True) + "\n")
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):

@@ -25,7 +25,7 @@ import sys
 import time
 from pathlib import Path
 
-from .common import emit
+from .common import append_history, emit
 
 OUT = Path(__file__).resolve().parents[1] / "BENCH_serve_paged.json"
 
@@ -156,6 +156,7 @@ def main(smoke: bool = False):
         "paged_kv_stats": {k: v for k, v in paged.kv_stats().items()},
     }
     OUT.write_text(json.dumps(result, indent=2) + "\n")
+    append_history("serve_paged", result)
     emit("serve_paged_peak_ratio", ratio,
          f"tok_s_ratio={tok_ratio:.2f} wrote {OUT.name}")
     assert ratio >= 2.0, f"peak KV ratio {ratio:.2f} < 2x"

@@ -18,7 +18,7 @@ import json
 import time
 from pathlib import Path
 
-from .common import emit
+from .common import append_history, emit
 
 OUT = Path(__file__).resolve().parents[1] / "BENCH_serve_throughput.json"
 
@@ -108,6 +108,7 @@ def main():
                          if k != "started_at"},
     }
     OUT.write_text(json.dumps(result, indent=2) + "\n")
+    append_history("serve_throughput", result)
     emit("serve_throughput_speedup", result["speedup"],
          f"wrote {OUT.name}")
     return result

@@ -25,7 +25,7 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from .common import emit
+from .common import append_history, emit
 
 OUT = Path(__file__).resolve().parents[1] / "BENCH_step_overlap.json"
 
@@ -113,6 +113,7 @@ def main():
         "best_depth_config": min(sweep, key=sweep.get),
     }
     OUT.write_text(json.dumps(result, indent=2) + "\n")
+    append_history("step_overlap", result)
     emit("step_overlap_speedup", result["speedup_pipelined"],
          f"wrote {OUT.name}")
     return result

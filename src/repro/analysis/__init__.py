@@ -1,0 +1,28 @@
+"""Static invariant checkers for the repro codebase.
+
+Four passes, all trace-only (``jax.make_jaxpr`` / ``jax.eval_shape`` —
+no device executes anything) plus one AST lint:
+
+  comms     one psum per bucket per tree level on the fused combine
+            path, zero all-gathers on any combiner path, no global
+            payload-flattening reshapes (the `_split_lanes` 336 GiB
+            failure class); report diffable vs tools/comms_baseline.json
+  retrace   every slot-churn / page-table / hot-reload transition maps
+            the serve decode cache signature onto itself, so the decode
+            step compiles exactly once
+  sharding  every PartitionSpec valid against the mesh axes (axis
+            exists, dim divisible, ZeRO-2 lane plans consistent with
+            span<dp), and no accumulation jaxpr silently downcasts
+            below acc_dtype
+  hostsync  AST lint of the serving/pipeline hot loops for device-sync
+            hazards, with `# lint: allow(<rule>)` suppression and a
+            baseline file (tools/hostsync_baseline.json)
+
+CLI: ``python -m repro.analysis [--check ...|--all]``.
+
+This module deliberately imports nothing at package level: ``__main__``
+must be able to pin the host device count before jax loads.
+"""
+
+__all__ = ["comms", "retrace", "shardlint", "hostsync", "report",
+           "jaxpr_utils"]

@@ -1,0 +1,109 @@
+"""``python -m repro.analysis`` — run the static invariant checkers.
+
+Pins ``--xla_force_host_platform_device_count`` BEFORE jax imports so
+the comms checker traces against the canonical data=16 x model=2
+topology regardless of the host's real device count. Everything is
+trace-only; no device executes a computation.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+from pathlib import Path
+
+CHECKS = ("comms", "retrace", "sharding", "hostsync")
+_DEV_RE = re.compile(r"--xla_force_host_platform_device_count=\d+\s*")
+
+
+def _pin_devices(n: int) -> None:
+    if "jax" in sys.modules:
+        print("warning: jax already imported; device pin may not apply",
+              file=sys.stderr)
+    flags = _DEV_RE.sub("", os.environ.get("XLA_FLAGS", "")).strip()
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={n}".strip())
+
+
+def _repo_root() -> Path:
+    # src/repro/analysis/__main__.py -> repo root is 3 up from src/
+    return Path(__file__).resolve().parents[3]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="trace-only static analysis of the train/serve paths")
+    ap.add_argument("--check", action="append", choices=CHECKS,
+                    help="run one pass (repeatable); default: --all")
+    ap.add_argument("--all", action="store_true",
+                    help="run every pass")
+    ap.add_argument("--devices", type=int, default=32,
+                    help="fake host device count to pin (default 32 = "
+                         "data 16 x model 2)")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="rewrite tools/*_baseline.json from this run")
+    ap.add_argument("--comms-baseline", type=Path, default=None)
+    ap.add_argument("--hostsync-baseline", type=Path, default=None)
+    args = ap.parse_args(argv)
+
+    checks = tuple(dict.fromkeys(args.check or ()))
+    if args.all or not checks:
+        checks = CHECKS
+
+    root = _repo_root()
+    comms_path = args.comms_baseline or root / "tools/comms_baseline.json"
+    hs_path = args.hostsync_baseline or root / "tools/hostsync_baseline.json"
+
+    if any(c != "hostsync" for c in checks):
+        _pin_devices(args.devices)
+    from . import report as R
+
+    failed = False
+    for check in checks:
+        print(f"== {check} ==")
+        if check == "comms":
+            from . import comms
+            rep, viols = comms.check_comms()
+            print(comms.render(rep))
+            if args.update_baselines:
+                R.save(comms_path, rep)
+                print(f"baseline written: {comms_path}")
+            else:
+                base = R.load(comms_path)
+                if base is None:
+                    viols.append(f"missing baseline {comms_path} "
+                                 f"(run --update-baselines)")
+                else:
+                    viols += R.diff_plans(rep, base)
+        elif check == "retrace":
+            from . import retrace
+            rep, viols = retrace.check_retrace()
+            print(retrace.render(rep))
+        elif check == "sharding":
+            from . import shardlint
+            rep, viols = shardlint.check_sharding()
+            print(shardlint.render(rep))
+        else:
+            from . import hostsync
+            if args.update_baselines:
+                rep, _ = hostsync.check_hostsync(root, None)
+                viols = []
+                R.save(hs_path, R.findings_baseline(rep["findings"]))
+                print(f"baseline written: {hs_path}")
+            else:
+                rep, viols = hostsync.check_hostsync(root, R.load(hs_path))
+            print(hostsync.render(rep))
+        if viols:
+            failed = True
+            print(f"-- {check}: {len(viols)} violation(s)")
+            for v in viols:
+                print(f"   {v}")
+        else:
+            print(f"-- {check}: OK")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,210 @@
+"""Comms-plan checker: the fused combine emits exactly one psum per
+sharded bucket per tree level, and NO combiner path all-gathers.
+
+For every (arch preset x span x fused/reference x granularity) cell the
+checker:
+
+  1. plans the lane sharding exactly as `build_runtime` would
+     (`plan_lane_specs` — same hook, same zpol2 ZeRO-2 logic);
+  2. recomputes the fused bucketing on the LOCAL shard shapes
+     (`core.combine.fused_plan` — the very function the hot path calls
+     inside shard_map), predicting `levels x sharded_buckets` psums with
+     each bucket's exact axes;
+  3. traces the real combiner (`make_combiner`, the registry dispatch
+     the trainer uses) to a jaxpr with `jax.make_jaxpr` on
+     ShapeDtypeStructs — nothing runs on a device — and walks it;
+  4. asserts trace == prediction: psum multiset matches, zero
+     all_gather / all_to_all / ppermute / reduce_scatter anywhere, and
+     zero payload-merging reshapes outside shard_map (the `_split_lanes`
+     336 GiB replication class).
+
+The machine-readable report diffs against tools/comms_baseline.json, so
+a change to bucketing (e.g. `fusion_threshold_mb` handling), psum
+placement, or sharding rules fails CI until re-baselined.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+ARCHS = ("qwen3-32b", "moonshot-v1-16b-a3b", "mixtral-8x22b")
+SPANS = (2, 4, 8)
+# canonical topology: dp=16 keeps every span strictly hierarchical
+# (span < dp, the fused gspmd_tree regime) with TP=2 alongside
+MESH_SHAPE = {"data": 16, "model": 2}
+
+
+def _config_key(arch: str, span: int, fused: bool, per_layer: bool) -> str:
+    return (f"{arch}|span={span}|{'fused' if fused else 'reference'}"
+            f"|{'per_layer' if per_layer else 'whole'}")
+
+
+def _arch_parts(arch: str):
+    """(model_cfg, stacked pshapes, spol, rpol) for one preset — all via
+    eval_shape, params never materialize."""
+    from repro.configs.base import get_reduced
+    from repro.engine.config import EngineConfig
+    from repro.models import build_model
+    import jax.numpy as jnp
+
+    ecfg = EngineConfig.preset(arch, reduced=True)
+    rpol = ecfg.run_policy()
+    mcfg = get_reduced(arch)
+    model = build_model(mcfg, param_dtype=jnp.dtype(ecfg.param_dtype))
+    kshape = jax.eval_shape(lambda: jax.random.key(0))
+    pshapes = jax.eval_shape(model.init, kshape)
+    return mcfg, pshapes, rpol
+
+
+def check_comms(*, archs=ARCHS, spans=SPANS, mesh=None,
+                combine_overrides: Optional[Dict[str, Any]] = None
+                ) -> Tuple[Dict[str, Any], List[str]]:
+    """Returns (report, violations). `mesh` defaults to the canonical
+    data=16 x model=2 topology (clamped to available devices by
+    make_local_mesh — baseline diffs then flag the meta.mesh mismatch,
+    pointing at the CLI which pins the device count).
+    `combine_overrides` perturbs the CombineConfig — used by the
+    mutation tests to prove the baseline diff fires."""
+    from repro.core.combine import CombineConfig, fused_plan, plan_summary
+    from repro.engine.build import plan_lane_specs
+    from repro.engine.registry import make_combiner
+    from repro.kernels.backend import backend_summary
+    from repro.launch.mesh import make_local_mesh
+    from repro.parallel.sharding import (ShardingPolicy, local_shape,
+                                         spec_violations)
+    from .jaxpr_utils import (collect_collectives, count_merge_reshapes,
+                              trace)
+
+    if mesh is None:
+        mesh = make_local_mesh(MESH_SHAPE["data"], MESH_SHAPE["model"])
+    sizes = dict(zip(mesh.axis_names, (int(s) for s in mesh.devices.shape)))
+    tp_axis = "model"
+    dp_axes = tuple(ax for ax in mesh.axis_names if ax != tp_axis)
+    dp_total = int(np.prod([sizes[a] for a in dp_axes]))
+    rvh_axes = tuple(reversed(dp_axes))
+
+    report: Dict[str, Any] = {
+        "meta": {"mesh": sizes, "archs": list(archs), "spans": list(spans),
+                 "backend": backend_summary()},
+        "plans": {},
+    }
+    violations: List[str] = []
+
+    for arch in archs:
+        mcfg, pshapes, rpol = _arch_parts(arch)
+        spol = ShardingPolicy(tp_axis=tp_axis,
+                              fsdp_axis="data" if rpol.fsdp else None,
+                              tp_size=sizes.get(tp_axis, 1),
+                              fsdp_size=sizes.get("data", 1))
+        for span in spans:
+            lane_specs, _gspecs = plan_lane_specs(
+                mcfg, pshapes, spol, rpol, span, dp_total, dp_axes)
+            bad = spec_violations(lane_specs, pshapes, sizes)
+            violations += [f"{arch}|span={span}: lane spec {p}: {m}"
+                           for p, m in bad]
+            leaves, treedef = jax.tree.flatten(pshapes)
+            specs = treedef.flatten_up_to(lane_specs)
+            stacked = jax.tree.unflatten(treedef, [
+                jax.ShapeDtypeStruct((span,) + tuple(l.shape), l.dtype)
+                for l in leaves])
+            for fused in (True, False):
+                for per_layer in (True, False):
+                    kw = dict(op="adasum", backend="gspmd_tree", span=span,
+                              per_layer=per_layer, acc_dtype=rpol.acc_dtype,
+                              fused=fused,
+                              fusion_threshold_mb=rpol.fusion_threshold_mb)
+                    kw.update(combine_overrides or {})
+                    ccfg = CombineConfig(**kw)
+                    key = _config_key(arch, span, fused, per_layer)
+                    entry, errs = _check_one(
+                        ccfg, stacked, lane_specs, leaves, specs, mesh,
+                        rvh_axes, sizes, fused_plan, plan_summary,
+                        make_combiner, local_shape, collect_collectives,
+                        count_merge_reshapes, trace)
+                    report["plans"][key] = entry
+                    violations += [f"{key}: {e}" for e in errs]
+    return report, violations
+
+
+def _check_one(ccfg, stacked, lane_specs, leaves, specs, mesh, rvh_axes,
+               sizes, fused_plan, plan_summary, make_combiner, local_shape,
+               collect_collectives, count_merge_reshapes, trace):
+    combiner = make_combiner(ccfg, mesh=mesh, dp_axes=rvh_axes,
+                             leaf_specs=lane_specs)
+    jaxpr = trace(combiner, stacked)
+    colls = collect_collectives(jaxpr)
+    merges = count_merge_reshapes(jaxpr)
+    psums = [c for c in colls if c["prim"] == "psum"]
+    others = [c for c in colls if c["prim"] != "psum"]
+    errs: List[str] = []
+    if others:
+        kinds = sorted({c["prim"] for c in others})
+        errs.append(f"combiner path emits {kinds} "
+                    f"({len(others)} eqns) — must be psum-only")
+    if merges:
+        errs.append(f"{merges} payload-merging reshape(s) outside "
+                    f"shard_map (the _split_lanes replication hazard)")
+    levels = int(math.log2(ccfg.span)) if ccfg.span > 1 else 0
+    entry: Dict[str, Any] = {
+        "levels": levels,
+        "psums": len(psums),
+        "all_gather": len(others),
+        "merge_reshapes": merges,
+    }
+    if ccfg.fused:
+        # predict from the plan on LOCAL shard shapes — exactly what
+        # fused_combine_tree sees inside shard_map
+        local = [jax.ShapeDtypeStruct(
+            (ccfg.span,) + local_shape(l.shape, spec, sizes), l.dtype)
+            for l, spec in zip(leaves, specs)]
+        plan = fused_plan(local, specs, ccfg, psum=True)
+        buckets = plan_summary(plan)
+        sharded = [b for b in buckets if b["axes"]]
+        want = sorted(tuple(b["axes"]) for b in sharded for _ in
+                      range(levels))
+        got = sorted(c["axes"] for c in psums)
+        got = [tuple(a) for a in got]
+        want = [tuple(a) for a in want]
+        if got != want:
+            errs.append(f"psum plan mismatch: traced {got} != "
+                        f"predicted one-per-bucket-per-level {want}")
+        if any(not c["manual"] for c in psums):
+            errs.append("psum outside shard_map manual region")
+        entry.update({
+            "buckets": buckets,
+            "n_buckets": len(buckets),
+            "n_sharded_buckets": len(sharded),
+            "expected_psums": len(want),
+        })
+    else:
+        # reference gspmd_tree: GSPMD chooses collectives at compile
+        # time; the TRACE must contain no explicit ones at all
+        if psums:
+            errs.append(f"reference path emits {len(psums)} explicit "
+                        f"psum(s); collective choice belongs to GSPMD")
+        entry["buckets"] = []
+        entry["n_buckets"] = 0
+        entry["n_sharded_buckets"] = 0
+        entry["expected_psums"] = 0
+    return entry, errs
+
+
+def render(report: Dict[str, Any]) -> str:
+    """Human-readable comms-plan report (what CI prints)."""
+    lines = [f"comms plan @ mesh {report['meta']['mesh']}"]
+    for key in sorted(report["plans"]):
+        e = report["plans"][key]
+        lines.append(
+            f"  {key:<55} levels={e['levels']} buckets={e['n_buckets']}"
+            f" sharded={e['n_sharded_buckets']} psums={e['psums']}"
+            f"/{e['expected_psums']} all_gather={e['all_gather']}"
+            f" merge_reshapes={e['merge_reshapes']}")
+        for b in e["buckets"]:
+            lines.append(
+                f"      bucket leaves={b['leaves']:>3} dtype={b['dtype']:<9}"
+                f" axes={','.join(b['axes']) or '-':<11}"
+                f" block={b['block_elems']} bytes={b['payload_bytes']}")
+    return "\n".join(lines)

@@ -1,0 +1,226 @@
+"""Host-sync AST lint for the serving / pipeline hot loops.
+
+A serve tick or train step that blocks on the device — or worse, pulls
+a value to the host inside a jit-traced function — serializes the
+pipeline the overlap engine exists to hide. This lint walks the AST of
+the hot files (``engine/pipeline.py`` and everything under
+``engine/serving/``) and flags:
+
+  block-until-ready    any ``.block_until_ready()`` call — benchmarks
+                       belong in benchmarks/, not the hot loop
+  host-pull            ``.item()`` anywhere; ``float(...)`` /
+                       ``np.asarray(...)`` / ``np.array(...)`` applied
+                       to a call result or subscript (the patterns that
+                       pull a freshly computed device value; plain
+                       names are usually host ints already)
+  host-mutation-in-jit python-side state mutation (global/nonlocal,
+                       ``self.x = ...`` / closure ``.append(...)`` /
+                       ``print``) inside a function that is jit-traced
+                       — it runs once at trace time and silently never
+                       again
+
+Suppression: append ``# lint: allow(<rule>)`` to the offending line.
+Known legacy sites live in ``tools/hostsync_baseline.json`` (keyed by
+(file, rule, code) — line-number free, so edits above a known site
+don't churn it); anything new fails CI.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+HOT_FILES = ("src/repro/engine/pipeline.py",)
+HOT_DIRS = ("src/repro/engine/serving",)
+
+RULES = ("block-until-ready", "host-pull", "host-mutation-in-jit")
+
+# a function is considered jit-traced if it is passed to one of these
+# (jax.jit(f), jax.lax.scan(f, ...), shard_map(f, ...)) or returned by
+# a make_* / _make_* builder (the repo's convention for step builders)
+_TRACING_CALLS = ("jit", "scan", "while_loop", "cond", "fori_loop",
+                  "shard_map", "vmap", "grad", "value_and_grad", "remat",
+                  "checkpoint", "eval_shape", "make_jaxpr")
+
+_MUTATING_METHODS = ("append", "extend", "insert", "pop", "update",
+                     "setdefault", "add", "remove", "clear")
+
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\(([a-z-]+)\)")
+
+
+def _callee_name(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def _is_np(func: ast.expr) -> bool:
+    return (isinstance(func, ast.Attribute)
+            and isinstance(func.value, ast.Name)
+            and func.value.id in ("np", "numpy")
+            and func.attr in ("asarray", "array"))
+
+
+def _traced_fn_names(tree: ast.AST) -> set:
+    """Names of functions this module jit-traces: args to tracing
+    transforms, plus inner defs returned from make_*/_make_* builders."""
+    traced: set = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            if _callee_name(node) in _TRACING_CALLS:
+                for a in node.args:
+                    if isinstance(a, ast.Name):
+                        traced.add(a.id)
+                    elif isinstance(a, ast.Lambda):
+                        pass  # lambdas handled via enclosing scan etc.
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and \
+                node.name.lstrip("_").startswith("make_"):
+            inner = {n.name for n in node.body
+                     if isinstance(n, ast.FunctionDef)}
+            for ret in ast.walk(node):
+                if isinstance(ret, ast.Return) and \
+                        isinstance(ret.value, ast.Name) and \
+                        ret.value.id in inner:
+                    traced.add(ret.value.id)
+    return traced
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, lines: List[str], traced: set):
+        self.path = path
+        self.lines = lines
+        self.traced = traced
+        self.findings: List[Dict[str, Any]] = []
+        self._in_traced = 0
+        self._local_names: List[set] = []
+
+    # -- helpers ------------------------------------------------------
+    def _code(self, node) -> str:
+        try:
+            return ast.unparse(node)
+        except Exception:
+            return self.lines[node.lineno - 1].strip()
+
+    def _allowed(self, node, rule: str) -> bool:
+        line = self.lines[node.lineno - 1] if \
+            0 < node.lineno <= len(self.lines) else ""
+        m = _ALLOW_RE.search(line)
+        return bool(m) and m.group(1) == rule
+
+    def _flag(self, node, rule: str) -> None:
+        if self._allowed(node, rule):
+            return
+        self.findings.append({"file": self.path, "line": node.lineno,
+                              "rule": rule, "code": self._code(node)})
+
+    # -- scope tracking -----------------------------------------------
+    def visit_FunctionDef(self, node):
+        entered = node.name in self.traced
+        if entered:
+            self._in_traced += 1
+            self._local_names.append(
+                {a.arg for a in (node.args.args + node.args.kwonlyargs
+                                 + node.args.posonlyargs)})
+        self.generic_visit(node)
+        if entered:
+            self._in_traced -= 1
+            self._local_names.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _note_local(self, target):
+        if self._in_traced and isinstance(target, ast.Name) and \
+                self._local_names:
+            self._local_names[-1].add(target.id)
+
+    # -- rules --------------------------------------------------------
+    def visit_Call(self, node):
+        name = _callee_name(node)
+        if name == "block_until_ready":
+            self._flag(node, "block-until-ready")
+        elif name == "item" and isinstance(node.func, ast.Attribute):
+            self._flag(node, "host-pull")
+        elif (name == "float" and isinstance(node.func, ast.Name)
+              or _is_np(node.func)):
+            if node.args and isinstance(node.args[0],
+                                        (ast.Call, ast.Subscript)):
+                self._flag(node, "host-pull")
+        elif self._in_traced and name == "print":
+            self._flag(node, "host-mutation-in-jit")
+        elif self._in_traced and name in _MUTATING_METHODS and \
+                isinstance(node.func, ast.Attribute) and \
+                isinstance(node.func.value, ast.Name) and \
+                self._local_names and \
+                node.func.value.id not in self._local_names[-1]:
+            # mutating a closed-over container from inside the trace
+            self._flag(node, "host-mutation-in-jit")
+        self.generic_visit(node)
+
+    def visit_Global(self, node):
+        if self._in_traced:
+            self._flag(node, "host-mutation-in-jit")
+
+    def visit_Nonlocal(self, node):
+        if self._in_traced:
+            self._flag(node, "host-mutation-in-jit")
+
+    def visit_Assign(self, node):
+        for t in node.targets:
+            self._note_local(t)
+            if self._in_traced and isinstance(t, ast.Attribute) and \
+                    isinstance(t.value, ast.Name) and t.value.id == "self":
+                self._flag(node, "host-mutation-in-jit")
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node):
+        self._note_local(node.target)
+        if self._in_traced and isinstance(node.target, ast.Attribute) and \
+                isinstance(node.target.value, ast.Name) and \
+                node.target.value.id == "self":
+            self._flag(node, "host-mutation-in-jit")
+        self.generic_visit(node)
+
+
+def lint_source(src: str, path: str = "<string>") -> List[Dict[str, Any]]:
+    """Lint one file's source. Returns findings
+    [{"file", "line", "rule", "code"}], line-sorted."""
+    tree = ast.parse(src)
+    v = _Visitor(path, src.splitlines(), _traced_fn_names(tree))
+    v.visit(tree)
+    return sorted(v.findings, key=lambda f: (f["file"], f["line"]))
+
+
+def hot_files(root) -> List[Path]:
+    root = Path(root)
+    out = [root / f for f in HOT_FILES]
+    for d in HOT_DIRS:
+        out += sorted((root / d).glob("*.py"))
+    return [p for p in out if p.exists()]
+
+
+def check_hostsync(root, baseline: Optional[Dict[str, Any]] = None
+                   ) -> Tuple[Dict[str, Any], List[str]]:
+    """Lint every hot file under repo `root`; violations are findings
+    the baseline doesn't cover."""
+    from .report import diff_findings
+
+    findings: List[Dict[str, Any]] = []
+    for p in hot_files(root):
+        rel = p.relative_to(root).as_posix()
+        findings += lint_source(p.read_text(), rel)
+    report = {"files": [p.relative_to(root).as_posix()
+                        for p in hot_files(root)],
+              "findings": findings}
+    return report, diff_findings(findings, baseline)
+
+
+def render(report: Dict[str, Any]) -> str:
+    lines = [f"hostsync lint over {len(report['files'])} hot files: "
+             f"{len(report['findings'])} finding(s)"]
+    for f in report["findings"]:
+        lines.append(f"  {f['file']}:{f['line']}: [{f['rule']}] {f['code']}")
+    return "\n".join(lines)

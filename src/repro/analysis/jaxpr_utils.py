@@ -1,0 +1,126 @@
+"""Recursive jaxpr walking: collectives, hazardous reshapes, reductions.
+
+Everything here operates on the *trace* (``jax.make_jaxpr`` output) —
+inner jaxprs of pjit / scan / cond / while / shard_map / custom_* eqns
+are descended into, tracking whether the walk is inside a shard_map
+manual region (where local-shard reshapes are safe by construction).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterator, List, Tuple
+
+import jax
+import numpy as np
+from jax import core as jcore
+
+# primitives that move data across devices; each entry maps the
+# primitive name to the param key carrying its axis names
+COLLECTIVE_PRIMS = {
+    "psum": "axes",
+    "all_gather": "axis_name",
+    "all_to_all": "axis_name",
+    "ppermute": "axis_name",
+    "reduce_scatter": "axis_name",
+    "psum_scatter": "axis_name",
+}
+
+# reductions whose output dtype must respect acc_dtype (paper §4.4.1)
+REDUCTION_PRIMS = ("reduce_sum", "dot_general", "scatter-add", "add_any")
+
+
+def _norm_axes(axes) -> Tuple[str, ...]:
+    if axes is None:
+        return ()
+    if not isinstance(axes, (tuple, list)):
+        axes = (axes,)
+    return tuple(str(a) for a in axes)
+
+
+def _sub_jaxprs(params: Dict[str, Any]) -> Iterator[jcore.Jaxpr]:
+    for v in params.values():
+        if isinstance(v, jcore.ClosedJaxpr):
+            yield v.jaxpr
+        elif isinstance(v, jcore.Jaxpr):
+            yield v
+        elif isinstance(v, (tuple, list)):
+            for x in v:
+                if isinstance(x, jcore.ClosedJaxpr):
+                    yield x.jaxpr
+                elif isinstance(x, jcore.Jaxpr):
+                    yield x
+
+
+def iter_eqns(jaxpr, manual: bool = False):
+    """Yields (eqn, inside_shard_map) over the jaxpr and every inner
+    jaxpr reachable through eqn params."""
+    if isinstance(jaxpr, jcore.ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn, manual
+        inner_manual = manual or eqn.primitive.name == "shard_map"
+        for sub in _sub_jaxprs(eqn.params):
+            yield from iter_eqns(sub, inner_manual)
+
+
+def collect_collectives(jaxpr) -> List[Dict[str, Any]]:
+    """Every cross-device collective in the trace:
+    [{"prim", "axes", "manual"}]."""
+    out = []
+    for eqn, manual in iter_eqns(jaxpr):
+        name = eqn.primitive.name
+        if name in COLLECTIVE_PRIMS:
+            axes = eqn.params.get(COLLECTIVE_PRIMS[name])
+            out.append({"prim": name, "axes": _norm_axes(axes),
+                        "manual": manual})
+    return out
+
+
+def _non_unit(shape) -> List[int]:
+    return sorted(int(d) for d in shape if d != 1)
+
+
+def count_merge_reshapes(jaxpr) -> int:
+    """Payload-merging reshapes OUTSIDE shard_map manual regions — the
+    `_split_lanes` hazard: collapsing several non-unit dims of a
+    (potentially sharded) global array into one destroys axis-aligned
+    sharding and replicates the result. Splitting a dim (rank increase)
+    and squeezing size-1 dims are benign and not counted; reshapes on
+    local shards inside shard_map are safe by construction."""
+    n = 0
+    for eqn, manual in iter_eqns(jaxpr):
+        if manual or eqn.primitive.name != "reshape":
+            continue
+        ishape = eqn.invars[0].aval.shape
+        oshape = eqn.outvars[0].aval.shape
+        if len(oshape) < len(ishape) and _non_unit(ishape) != _non_unit(oshape):
+            n += 1
+    return n
+
+
+def acc_dtype_violations(jaxpr, acc_dtype) -> List[str]:
+    """Reduction eqns whose floating output dtype is narrower than
+    `acc_dtype` — the silent-downcast class the paper's fp32/fp64
+    accumulation requirement (§4.4.1) exists to prevent. Integer
+    reductions (segment ids, argmax plumbing) are exempt."""
+    import jax.numpy as jnp
+
+    acc = np.dtype(acc_dtype)
+    bad = []
+    for eqn, _ in iter_eqns(jaxpr):
+        if eqn.primitive.name not in REDUCTION_PRIMS:
+            continue
+        for ov in eqn.outvars:
+            dt = np.dtype(ov.aval.dtype)
+            # jnp.issubdtype: bfloat16 is an ml_dtypes extension type
+            # that np.issubdtype does NOT class as floating
+            if jnp.issubdtype(dt, jnp.floating) and dt.itemsize < acc.itemsize:
+                bad.append(f"{eqn.primitive.name} accumulates in {dt.name} "
+                           f"(acc_dtype={acc.name})")
+    return bad
+
+
+def trace(fn: Callable, *args) -> jcore.ClosedJaxpr:
+    """`jax.make_jaxpr` on ShapeDtypeStruct (or concrete) args — the
+    one entry point every checker traces through, so 'no device
+    execution' has a single place to hold."""
+    return jax.make_jaxpr(fn)(*args)

@@ -1,0 +1,91 @@
+"""Baseline files for the analysis passes: load / save / diff.
+
+A baseline is a checked-in JSON snapshot of a pass's machine-readable
+report. The diff is exact per key — any drift in the comms plan (bucket
+count, psum axes, payload bytes) or any new hostsync finding fails CI
+until the change is either fixed or deliberately re-baselined with
+``python -m repro.analysis --update-baselines``.
+
+The ``meta`` block (environment stamp, mesh topology) is compared only
+for the fields that parameterize the plan (the mesh); provenance fields
+(platform, device count) are informational and excluded.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+
+def load(path) -> Optional[Dict[str, Any]]:
+    p = Path(path)
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def save(path, data: Dict[str, Any]) -> None:
+    Path(path).write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+
+
+def _fmt(v) -> str:
+    return json.dumps(v, sort_keys=True)
+
+
+def diff_plans(computed: Dict[str, Any], baseline: Dict[str, Any],
+               *, meta_keys=("mesh",)) -> List[str]:
+    """Exact two-way diff of {'meta', 'plans'} reports. Returns
+    human-readable drift lines (empty == in sync)."""
+    out = []
+    cm, bm = computed.get("meta", {}), baseline.get("meta", {})
+    for k in meta_keys:
+        if cm.get(k) != bm.get(k):
+            out.append(f"meta.{k}: computed {_fmt(cm.get(k))} != baseline "
+                       f"{_fmt(bm.get(k))} — rerun via `python -m "
+                       f"repro.analysis` (it pins the canonical topology)")
+    cp, bp = computed.get("plans", {}), baseline.get("plans", {})
+    for key in sorted(cp):
+        if key not in bp:
+            out.append(f"{key}: not in baseline (new config — "
+                       f"re-baseline if intended)")
+        elif cp[key] != bp[key]:
+            got, want = cp[key], bp[key]
+            fields = sorted(set(got) | set(want))
+            delta = [f for f in fields if got.get(f) != want.get(f)]
+            for f in delta:
+                out.append(f"{key}: {f} changed {_fmt(want.get(f))} -> "
+                           f"{_fmt(got.get(f))}")
+    for key in sorted(set(bp) - set(cp)):
+        out.append(f"{key}: in baseline but no longer computed")
+    return out
+
+
+def diff_findings(findings: List[Dict[str, Any]],
+                  baseline: Optional[Dict[str, Any]]) -> List[str]:
+    """New lint findings not covered by the baseline. Baseline entries
+    are {(file, rule, code): count} — line numbers are deliberately NOT
+    part of the key, so unrelated edits above a known site don't churn
+    the baseline."""
+    budget: Dict[tuple, int] = {}
+    for e in (baseline or {}).get("findings", []):
+        k = (e["file"], e["rule"], e["code"])
+        budget[k] = budget.get(k, 0) + int(e.get("count", 1))
+    out = []
+    for f in findings:
+        k = (f["file"], f["rule"], f["code"])
+        if budget.get(k, 0) > 0:
+            budget[k] -= 1
+        else:
+            out.append(f"{f['file']}:{f['line']}: [{f['rule']}] {f['code']}")
+    return out
+
+
+def findings_baseline(findings: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Collapse current findings into the baseline format."""
+    counts: Dict[tuple, int] = {}
+    for f in findings:
+        k = (f["file"], f["rule"], f["code"])
+        counts[k] = counts.get(k, 0) + 1
+    return {"findings": [
+        {"file": fl, "rule": r, "code": c, "count": n}
+        for (fl, r, c), n in sorted(counts.items())]}

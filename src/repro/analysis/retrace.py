@@ -1,0 +1,170 @@
+"""Retrace-hazard checker: the serve decode step sees ONE signature.
+
+`ServeEngine`'s tick loop promises the jitted decode step compiles
+exactly once, no matter how slots churn, page tables rewrite, prefill
+rows scatter in, or hot-reload decodes the same cache under two param
+versions. The runtime tests assert this for a handful of workloads; this
+pass proves it statically: starting from the steady cache signature
+(`abstract_serve_state` — the same eval_shape fixed point the engine
+computes), every transition the engine can apply to the cache
+
+  decode / sampled decode            (the tick itself)
+  paged_insert_rows / insert_rows_at (admission, any group size)
+  set_page_tables                    (page churn: growth, COW, release)
+  copy_pages                         (COW backing-store moves)
+  select_rows(_paged)                (hot-reload dual-version merge)
+
+is eval_shaped and its output signature compared leaf-for-leaf against
+the steady signature. Any drift — a recurrent leaf re-emitted in the
+compute dtype (the quietly-dense rwkv/mamba class), a shape that grew
+with position, a branch that changed a dtype — is a retrace hazard and
+fails the check. No device executes anything.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ARCHS = ("qwen3-32b", "mixtral-8x22b", "minicpm3-4b", "hymba-1.5b",
+         "rwkv6-7b")
+LAYOUTS = ("paged", "dense")
+
+
+def _sig(tree) -> List[Tuple[str, Tuple[int, ...], str]]:
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        out.append((jax.tree_util.keystr(path), tuple(leaf.shape),
+                    str(jnp.dtype(leaf.dtype))))
+    return out
+
+
+def signature_violations(steady, transitions) -> List[str]:
+    """`transitions` is [(name, tree)]. Returns one line per leaf whose
+    (path, shape, dtype) diverges from the steady cache signature —
+    i.e. per distinct trace signature the decode step would see."""
+    want = _sig(steady)
+    want_map = dict((p, (s, d)) for p, s, d in want)
+    bad: List[str] = []
+    for name, tree in transitions:
+        got = _sig(tree)
+        if len(got) != len(want):
+            bad.append(f"{name}: {len(got)} leaves != steady {len(want)}")
+            continue
+        for p, s, d in got:
+            if p not in want_map:
+                bad.append(f"{name}: unexpected leaf {p}")
+            elif want_map[p] != (s, d):
+                ws, wd = want_map[p]
+                bad.append(f"{name}: {p} {s}/{d} != steady {ws}/{wd}")
+    return bad
+
+
+def check_arch(arch: str, layout: str, *, max_slots: int = 4,
+               max_len: int = 64) -> Dict[str, Any]:
+    """One (arch, requested layout) cell: build the abstract serve state
+    and push the cache through every engine transition."""
+    from repro.configs.base import get_reduced
+    from repro.engine.build import (make_batched_decode_step,
+                                    make_sampling_decode_step)
+    from repro.engine.config import EngineConfig
+    from repro.engine.serving.slots import (copy_pages, insert_rows_at,
+                                            paged_insert_rows, select_rows,
+                                            select_rows_paged,
+                                            set_page_tables)
+    from repro.engine.serving.engine import abstract_serve_state
+    from repro.models import build_model
+
+    config = EngineConfig(arch=arch, reduced=True, max_slots=max_slots,
+                          max_len=max_len, kv_layout=layout)
+    model = build_model(get_reduced(arch))
+    st = abstract_serve_state(config, model)
+    cache, params = st["cache"], st["params"]
+    B = st["max_slots"]
+    i32 = jnp.int32
+    tok = jax.ShapeDtypeStruct((B, 1), i32)
+    transitions: List[Tuple[str, Any]] = []
+
+    d = make_batched_decode_step(model)
+    nxt, out = jax.eval_shape(d, params, tok, cache)
+    transitions.append(("decode", out))
+    tok_errs = []
+    if (tuple(nxt.shape), jnp.dtype(nxt.dtype)) != ((B, 1), jnp.dtype(i32)):
+        tok_errs.append(f"decode token out {nxt.shape}/{nxt.dtype} != "
+                        f"({B}, 1)/int32 (breaks the tick's token feed)")
+    ds = make_sampling_decode_step(model)
+    policy = (jax.ShapeDtypeStruct((B, 2), jnp.uint32),
+              jax.ShapeDtypeStruct((B,), i32),
+              jax.ShapeDtypeStruct((B,), jnp.float32),
+              jax.ShapeDtypeStruct((B,), i32),
+              jax.ShapeDtypeStruct((B,), jnp.float32))
+    transitions.append(
+        ("decode_sampled", jax.eval_shape(ds, params, tok, cache,
+                                          *policy)[1]))
+
+    group_sizes = sorted({1, B})
+    if st["layout"] == "paged":
+        pps = st["pages"]["pages_per_slot"]
+        num_pages = st["pages"]["num_pages"]
+        for n in group_sizes:
+            t = jax.ShapeDtypeStruct((n, pps), i32)
+            transitions.append((f"paged_insert[n={n}]", jax.eval_shape(
+                paged_insert_rows, cache, st["rows"][n],
+                jax.ShapeDtypeStruct((n,), i32), t, t)))
+        transitions.append(("set_page_tables", jax.eval_shape(
+            set_page_tables, cache, jax.ShapeDtypeStruct((B, pps), i32))))
+        one = jax.ShapeDtypeStruct((1,), i32)
+        transitions.append(("copy_pages(cow)", jax.eval_shape(
+            copy_pages, cache, one, one)))
+        transitions.append(("select_rows_paged(hot_reload)", jax.eval_shape(
+            select_rows_paged, jax.ShapeDtypeStruct((B,), jnp.bool_),
+            jax.ShapeDtypeStruct((num_pages,), jnp.bool_), cache, cache)))
+    else:
+        for n in group_sizes:
+            transitions.append((f"insert_rows_at[n={n}]", jax.eval_shape(
+                insert_rows_at, cache, st["rows"][n],
+                jax.ShapeDtypeStruct((n,), i32))))
+        transitions.append(("select_rows(hot_reload)", jax.eval_shape(
+            select_rows, jax.ShapeDtypeStruct((B,), jnp.bool_), cache,
+            cache)))
+
+    violations = tok_errs + signature_violations(cache, transitions)
+    return {
+        "arch": arch,
+        "layout_requested": layout,
+        "layout": st["layout"],
+        "fallback_reason": st["fallback_reason"],
+        "prefill_mode": st["prefill_mode"],
+        "dense_fallback_leaves": st["dense_fallback"][0],
+        "dense_fallback_bytes": st["dense_fallback"][1],
+        "transitions": len(transitions),
+        "violations": violations,
+    }
+
+
+def check_retrace(*, archs=ARCHS, layouts=LAYOUTS
+                  ) -> Tuple[Dict[str, Any], List[str]]:
+    report: Dict[str, Any] = {"cases": {}}
+    violations: List[str] = []
+    for arch in archs:
+        for layout in layouts:
+            entry = check_arch(arch, layout)
+            report["cases"][f"{arch}|{layout}"] = entry
+            violations += [f"{arch}|{layout}: {v}"
+                           for v in entry["violations"]]
+    return report, violations
+
+
+def render(report: Dict[str, Any]) -> str:
+    lines = ["retrace signatures"]
+    for key in sorted(report["cases"]):
+        e = report["cases"][key]
+        status = "OK" if not e["violations"] else "FAIL"
+        extra = (f" dense_fallback={e['dense_fallback_leaves']} leaves"
+                 if e["dense_fallback_leaves"] else "")
+        lines.append(f"  {key:<28} layout={e['layout']:<6} "
+                     f"prefill={e['prefill_mode']:<8} "
+                     f"transitions={e['transitions']} {status}{extra}")
+        lines += [f"      {v}" for v in e["violations"]]
+    return "\n".join(lines)

@@ -1,0 +1,158 @@
+"""Sharding / dtype linter.
+
+Three sub-passes, all pure host logic or trace-only:
+
+  specs     every PartitionSpec the engine plans (param_specs,
+            plan_lane_specs lane+stacked gradient specs, cache_specs)
+            is valid against the canonical mesh axis sizes: the axis
+            exists, the dim is divisible, no axis lands on two dims
+            (`parallel.sharding.spec_violations`);
+  zero2     the ZeRO-2 lane-plan invariant: span < dp => the stacked
+            gradient's lane dim is replicated (lead entry None) and the
+            payload is scattered; span == dp => the lane dim carries
+            exactly the DP axes (RVH input layout);
+  accdtype  the fused and reference combiners are traced (mesh-free
+            global semantics, `jax.make_jaxpr`) and every floating
+            reduction in the jaxpr is checked against the policy's
+            acc_dtype — no silent bf16 accumulation (paper §4.4.1).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+ARCHS = ("qwen3-32b", "moonshot-v1-16b-a3b", "mixtral-8x22b")
+SPANS = (2, 4, 8, 16)
+MESH_SHAPE = {"data": 16, "model": 2}
+_CACHE_BATCH, _CACHE_LEN = 16, 64
+
+
+def _lead(spec) -> Any:
+    entries = tuple(spec or ())
+    return entries[0] if entries else None
+
+
+def check_sharding(*, archs=ARCHS, spans=SPANS, sizes=None
+                   ) -> Tuple[Dict[str, Any], List[str]]:
+    """Returns (report, violations) over archs x spans on the declared
+    axis sizes — no mesh, no devices."""
+    from repro.configs.base import get_reduced
+    from repro.core.combine import CombineConfig
+    from repro.engine.build import plan_lane_specs
+    from repro.engine.config import EngineConfig
+    from repro.engine.registry import make_combiner
+    from repro.models import build_model
+    from repro.parallel.sharding import (ShardingPolicy, cache_specs,
+                                         param_specs, spec_violations)
+    from .jaxpr_utils import acc_dtype_violations, trace
+    import jax.numpy as jnp
+
+    sizes = dict(sizes or MESH_SHAPE)
+    tp_axis = "model"
+    dp_axes = tuple(ax for ax in sizes if ax != tp_axis)
+    dp_total = int(np.prod([sizes[a] for a in dp_axes]))
+
+    report: Dict[str, Any] = {"meta": {"mesh": sizes, "archs": list(archs),
+                                       "spans": list(spans)},
+                              "cells": {}}
+    violations: List[str] = []
+
+    def flag(key, msgs):
+        violations.extend(f"{key}: {m}" for m in msgs)
+        return len(msgs)
+
+    for arch in archs:
+        ecfg = EngineConfig.preset(arch, reduced=True)
+        rpol = ecfg.run_policy()
+        mcfg = get_reduced(arch)
+        model = build_model(mcfg, param_dtype=jnp.dtype(ecfg.param_dtype))
+        kshape = jax.eval_shape(lambda: jax.random.key(0))
+        pshapes = jax.eval_shape(model.init, kshape)
+        spol = ShardingPolicy(tp_axis=tp_axis,
+                              fsdp_axis="data" if rpol.fsdp else None,
+                              tp_size=sizes.get(tp_axis, 1),
+                              fsdp_size=sizes.get("data", 1))
+
+        n = 0
+        pspecs = param_specs(mcfg, pshapes, spol)
+        n += flag(f"{arch}|param_specs",
+                  [f"{p}: {m}" for p, m in
+                   spec_violations(pspecs, pshapes, sizes)])
+
+        cshapes = jax.eval_shape(
+            lambda: model.init_cache(None, _CACHE_BATCH, _CACHE_LEN))
+        cspecs = cache_specs(cshapes, mcfg, spol, dp_axes,
+                             _CACHE_BATCH, dp_total)
+        n += flag(f"{arch}|cache_specs",
+                  [f"{p}: {m}" for p, m in
+                   spec_violations(cspecs, cshapes, sizes)])
+
+        leaves, treedef = jax.tree.flatten(pshapes)
+        for span in spans:
+            key = f"{arch}|span={span}"
+            lane_specs, gspecs = plan_lane_specs(
+                mcfg, pshapes, spol, rpol, span, dp_total, dp_axes)
+            n += flag(f"{key}|lane_specs",
+                      [f"{p}: {m}" for p, m in
+                       spec_violations(lane_specs, pshapes, sizes)])
+            stacked = jax.tree.unflatten(treedef, [
+                jax.ShapeDtypeStruct((span,) + tuple(l.shape), l.dtype)
+                for l in leaves])
+            n += flag(f"{key}|gspecs",
+                      [f"{p}: {m}" for p, m in
+                       spec_violations(gspecs, stacked, sizes)])
+
+            want_lead = tuple(dp_axes) if span == dp_total else None
+            bad_leads = []
+            # PartitionSpec is a registered pytree leaf, so this walks
+            # one spec per param leaf
+            for path, g in jax.tree_util.tree_flatten_with_path(gspecs)[0]:
+                if _lead(g) != want_lead:
+                    bad_leads.append(
+                        f"{jax.tree_util.keystr(path)}: lane dim {_lead(g)!r}"
+                        f" != {want_lead!r} ({'RVH: lane dim carries DP' if span == dp_total else 'ZeRO-2: lane dim replicated'})")
+            n += flag(f"{key}|zero2", bad_leads)
+
+        # acc-dtype: trace both combiner paths mesh-free (global
+        # semantics — dp_total=1 keeps every span hierarchical) and scan
+        # the jaxpr for sub-acc_dtype floating reductions
+        span = min(spans)
+        stacked = jax.tree.unflatten(treedef, [
+            jax.ShapeDtypeStruct((span,) + tuple(l.shape), l.dtype)
+            for l in leaves])
+        acc_errs: List[str] = []
+        for fused in (True, False):
+            ccfg = CombineConfig(op="adasum", backend="gspmd_tree",
+                                 span=span, per_layer=rpol.per_layer,
+                                 acc_dtype=rpol.acc_dtype, fused=fused,
+                                 fusion_threshold_mb=rpol.fusion_threshold_mb)
+            combiner = make_combiner(ccfg, mesh=None)
+            jaxpr = trace(combiner, stacked)
+            acc_errs += [f"{'fused' if fused else 'reference'}: {m}"
+                         for m in acc_dtype_violations(jaxpr,
+                                                       rpol.acc_dtype)]
+        n += flag(f"{arch}|accdtype", acc_errs)
+
+        report["cells"][arch] = {
+            "param_dtype": str(ecfg.param_dtype),
+            "acc_dtype": str(np.dtype(rpol.acc_dtype).name),
+            "fsdp": bool(rpol.fsdp),
+            "scatter_grads": bool(rpol.scatter_grads),
+            "spans": list(spans),
+            "violations": n,
+        }
+    return report, violations
+
+
+def render(report: Dict[str, Any]) -> str:
+    lines = [f"sharding lint @ mesh {report['meta']['mesh']} "
+             f"spans={report['meta']['spans']}"]
+    for arch in sorted(report["cells"]):
+        e = report["cells"][arch]
+        status = "OK" if not e["violations"] else f"FAIL({e['violations']})"
+        lines.append(f"  {arch:<22} param={e['param_dtype']:<9} "
+                     f"acc={e['acc_dtype']:<8} fsdp={e['fsdp']} "
+                     f"scatter={e['scatter_grads']} {status}")
+    return "\n".join(lines)

@@ -56,7 +56,10 @@ class CombineConfig:
 
     @property
     def fusion_bytes(self) -> int:
-        return max(int(self.fusion_threshold_mb), 1) << 20
+        # fractional MB budgets are honored (floor 1 KiB) so the bucket
+        # split is exercisable at reduced-model scale; integer configs
+        # behave exactly as before
+        return max(int(self.fusion_threshold_mb * (1 << 20)), 1 << 10)
 
 
 def _split_lanes(x: jnp.ndarray):
@@ -146,11 +149,15 @@ def _payload_axes(spec) -> Tuple[str, ...]:
     return spec_axes(spec)
 
 
-def _fused_plan(leaves, specs, cfg: CombineConfig, psum: bool):
+def fused_plan(leaves, specs, cfg: CombineConfig, psum: bool):
     """Static bucketing of (local) stacked leaves: group by (sharding
     axes, dtype), split groups at the fusion threshold, pick a kernel
     block + layout per bucket. Returns [(leaf_idxs, layout, block_elems,
-    psum_axes)] — all host-side, resolved once at trace time."""
+    psum_axes)] — all host-side, resolved once at trace time.
+
+    Public: the comms-plan checker (`repro.analysis.comms`) recomputes
+    this plan from abstract leaves and asserts the traced jaxpr emits
+    exactly one psum per sharded bucket per tree level."""
     groups = {}
     for i, (leaf, spec) in enumerate(zip(leaves, specs)):
         axes = _payload_axes(spec) if psum else ()
@@ -172,6 +179,22 @@ def _fused_plan(leaves, specs, cfg: CombineConfig, psum: bool):
                                         leaf_align=block)
             plan.append((tuple(idxs[s:e]), layout, block, axes))
     return plan
+
+
+_fused_plan = fused_plan   # pre-analysis name, kept for callers
+
+
+def plan_summary(plan) -> List[dict]:
+    """Host-readable description of a fused plan, one dict per bucket —
+    the payload of the comms-plan report."""
+    return [{
+        "leaves": len(idxs),
+        "axes": list(axes),
+        "dtype": np.dtype(layout.dtypes[0]).name,
+        "block_elems": int(block),
+        "padded_elems": int(layout.padded_len),
+        "payload_bytes": int(fusion.layout_bytes(layout)),
+    } for idxs, layout, block, axes in plan]
 
 
 def _bucket_dots(a, b, ids, num, block, acc_dtype, use_pallas):
@@ -212,7 +235,7 @@ def fused_combine_tree(stacked: PyTree, cfg: CombineConfig,
         f"fused combine needs a power-of-two lane count, got {n}"
     specs = leaf_specs_flat or [P()] * len(leaves)
     acc = cfg.acc
-    plan = _fused_plan(leaves, specs, cfg, psum)
+    plan = fused_plan(leaves, specs, cfg, psum)
 
     # pack once; every level then reads each buffer exactly once
     packed, metas = [], []
@@ -237,8 +260,11 @@ def fused_combine_tree(stacked: PyTree, cfg: CombineConfig,
                                         nblk))
             v = _bucket_dots(a, b, ids, p * nseg1, block, acc,
                              cfg.use_pallas).reshape(p, nseg1, 3)
-            for ax in axes:
-                v = jax.lax.psum(v, ax)
+            if axes:
+                # one fused psum over ALL the bucket's sharding axes —
+                # a single collective per bucket per level, which is the
+                # invariant the comms-plan checker pins
+                v = jax.lax.psum(v, axes)
             halves.append((a, b, ids, nblk))
             dots.append(v)
         if not cfg.per_layer:

@@ -79,6 +79,12 @@ def make_layout(tree: PyTree, *, align: int = 1, leaf_align: int = 1
                         tuple(sizes), padded, len(leaves), treedef)
 
 
+def layout_bytes(layout: FusionLayout) -> int:
+    """Raw (unpadded) payload bytes of one lane of the fused buffer."""
+    return sum(sz * np.dtype(dt).itemsize
+               for sz, dt in zip(layout.sizes, layout.dtypes))
+
+
 def pack(tree: PyTree, layout: FusionLayout, dtype=None) -> jnp.ndarray:
     """Flattens leaves into the fused buffer (zero padded, including
     alignment gaps between leaves). Writes each leaf into a zeroed

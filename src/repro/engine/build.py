@@ -62,6 +62,8 @@ class Runtime:
     state_specs: PyTree
     train_step: Callable
     init_state: Callable
+    lane_specs: PyTree = None    # payload sharding of one lane's tensors
+    gspecs: PyTree = None        # stacked [span, ...] gradient specs
 
 
 def _dp_axes(mesh: jax.sharding.Mesh, tp_axis: str) -> Tuple[str, ...]:
@@ -70,6 +72,18 @@ def _dp_axes(mesh: jax.sharding.Mesh, tp_axis: str) -> Tuple[str, ...]:
 
 def _prepend(spec: P, entry) -> P:
     return P(entry, *tuple(spec))
+
+
+def _drop_axes(spec: P, axes) -> P:
+    def ent(e):
+        if e is None:
+            return None
+        if isinstance(e, tuple):
+            kept = tuple(a for a in e if a not in axes)
+            return kept or None
+        return None if e in axes else e
+
+    return P(*[ent(e) for e in tuple(spec)])
 
 
 def _resolve_combine_cfg(rpol: RunPolicy, span: int, dp_total: int,
@@ -107,6 +121,40 @@ def _resolve_combine_cfg(rpol: RunPolicy, span: int, dp_total: int,
     return ccfg
 
 
+def plan_lane_specs(cfg, pshapes: PyTree, spol: ShardingPolicy,
+                    rpol: RunPolicy, span: int, dp_total: int,
+                    dp_axes: Tuple[str, ...]) -> Tuple[PyTree, PyTree]:
+    """Lane-gradient/delta sharding plan: (lane_specs, gspecs).
+
+    When span==dp each lane's tensors live on their DP rank (RVH input
+    layout: the lane axis carries the DP axes); when span<dp lanes are
+    replicated and the tensors are ZeRO-2-scattered over `data` (zpol2).
+    Without these pins GSPMD can replicate full-model per-lane deltas,
+    which is catastrophic at MoE scale (found via memory_analysis).
+
+    Pure host logic — no mesh or devices needed, which is what lets the
+    sharding linter (`repro.analysis.shardlint`) validate the plan over
+    the whole (arch x span) space statically."""
+    pspecs = param_specs(cfg, pshapes, spol)
+    if span == dp_total:
+        lane_axes = tuple(dp_axes)        # pod-major lane index (RVH layout)
+        # One lane per DP rank: the lane index IS the dp coordinate, so
+        # the payload cannot also be FSDP-sharded over dp — keep only the
+        # TP axes (the rvh combiner's leaf_specs contract, and a
+        # NamedSharding requirement: one mesh axis, one dim). Found by
+        # repro.analysis.shardlint: the unstripped spec is rejected by
+        # NamedSharding whenever fsdp engages in the RVH regime.
+        lane_specs = jax.tree.map(lambda s: _drop_axes(s, set(lane_axes)),
+                                  pspecs)
+        gspecs = jax.tree.map(lambda s: _prepend(s, lane_axes), lane_specs)
+    else:
+        zpol2 = dataclasses.replace(
+            spol, fsdp_axis="data" if rpol.scatter_grads else spol.fsdp_axis)
+        lane_specs = param_specs(cfg, pshapes, zpol2)
+        gspecs = jax.tree.map(lambda s: _prepend(s, None), lane_specs)
+    return lane_specs, gspecs
+
+
 def build_runtime(model: Model, mesh: jax.sharding.Mesh, rpol: RunPolicy,
                   *, tp_axis: str = "model", lr=1e-3,
                   combine: Optional[CombineConfig] = None,
@@ -130,20 +178,8 @@ def build_runtime(model: Model, mesh: jax.sharding.Mesh, rpol: RunPolicy,
     # RVH lane order: innermost mesh axis first (adjacent ranks pair first)
     rvh_axes = tuple(reversed(dp_axes))
 
-    # Lane-gradient/delta sharding: when span==dp each lane's tensors live
-    # on their DP rank (RVH input layout); when span<dp lanes are
-    # replicated and the tensors are ZeRO-2-scattered over `data`.
-    # Without these pins GSPMD can replicate full-model per-lane deltas,
-    # which is catastrophic at MoE scale (found via memory_analysis).
-    if span == dp_total:
-        lane_axes = tuple(dp_axes)        # pod-major lane index (RVH layout)
-        lane_specs = pspecs               # payload sharding of a lane tensor
-        gspecs = jax.tree.map(lambda s: _prepend(s, lane_axes), pspecs)
-    else:
-        zpol2 = dataclasses.replace(
-            spol, fsdp_axis="data" if rpol.scatter_grads else spol.fsdp_axis)
-        lane_specs = param_specs(cfg, pshapes, zpol2)
-        gspecs = jax.tree.map(lambda s: _prepend(s, None), lane_specs)
+    lane_specs, gspecs = plan_lane_specs(cfg, pshapes, spol, rpol,
+                                         span, dp_total, dp_axes)
 
     # The combiner sees the stacked lane tensors, so it gets their true
     # payload sharding (lane_specs == pspecs in the RVH regime; the
@@ -305,7 +341,8 @@ def build_runtime(model: Model, mesh: jax.sharding.Mesh, rpol: RunPolicy,
     step_fn = local_sgd_step if rpol.local_steps > 1 else sync_step
 
     return Runtime(model, mesh, spol, rpol, dp_axes, dp_total, span, pspecs,
-                   state_shapes, state_specs, step_fn, init_state)
+                   state_shapes, state_specs, step_fn, init_state,
+                   lane_specs=lane_specs, gspecs=gspecs)
 
 
 def make_serve_step(model: Model, greedy: bool = True):

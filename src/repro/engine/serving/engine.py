@@ -55,13 +55,43 @@ from .reload import HotReloader
 from .scheduler import (ContinuousBatchingScheduler, GenerationRequest,
                         PrefixIndex, RequestHandle)
 from .slots import (PagePool, cast_paged_like as _cast_paged, copy_pages,
-                    dense_kv_bytes, gather_prefix, insert_rows_at,
-                    paged_insert_rows, paged_kv_page_bytes, select_rows,
-                    select_rows_paged, set_page_tables)
+                    dense_fallback_stats, dense_kv_bytes, gather_prefix,
+                    insert_rows_at, paged_insert_rows, paged_kv_page_bytes,
+                    select_rows, select_rows_paged, set_page_tables)
 
 PyTree = Any
 
 _PREFILL_MODES = ("auto", "parallel", "scan")
+
+
+def effective_kv_layout(config, model_cfg):
+    """The cache layout ServeEngine actually builds for (config, model):
+    ('paged' | 'dense', fallback_reason). Recurrent-only families (rwkv)
+    have no attention K/V to page, so `kv_layout='paged'` falls back to
+    the dense slotted layout — this is THE place that decision lives;
+    `__init__` warns on a non-empty reason and the retrace checker
+    (`repro.analysis.retrace`) keys its transition enumeration off it."""
+    if config.kv_layout != "paged":
+        return "dense", ""
+    if model_cfg.family == "ssm":
+        return "dense", (f"{model_cfg.name} (family=ssm) has no attention "
+                         f"K/V to page; serving the dense slotted layout")
+    return "paged", ""
+
+
+def resolve_prefill_mode(config, model) -> str:
+    """'parallel' or 'scan' for (config, model), validating the request
+    the same way ServeEngine does (shared with the retrace checker)."""
+    mode = config.prefill_mode
+    if mode not in _PREFILL_MODES:
+        raise ValueError(f"prefill_mode={mode!r}; one of {_PREFILL_MODES}")
+    if mode == "auto":
+        mode = "parallel" if model.prefill_cache is not None else "scan"
+    if mode == "parallel" and model.prefill_cache is None:
+        raise ValueError(
+            f"{model.cfg.name} ({model.cfg.family}) has no parallel "
+            f"prefill (recurrent state); use prefill_mode='scan'")
+    return mode
 
 
 def _bucket(n: int, max_len: int) -> int:
@@ -177,6 +207,65 @@ def _make_scan_prefill(model, cap: int, dtypes):
     return prefill
 
 
+def abstract_serve_state(config, model) -> Dict[str, Any]:
+    """Shape-level model of the engine's device state — every field is a
+    ShapeDtypeStruct tree obtained under `jax.eval_shape` (nothing ever
+    touches a device, not even PRNG key creation).
+
+    Mirrors `ServeEngine.__init__`'s cache construction exactly: steady
+    dtypes, paged-vs-dense layout (via `effective_kv_layout`), paged
+    arena sizing, and the prefill row signatures the admission path
+    scatters in. The retrace checker (`repro.analysis.retrace`) proves
+    every slot-churn / page-table / hot-reload transition maps the cache
+    signature onto itself, which is what makes the decode tick's
+    no-retrace contract a static guarantee."""
+    config.validate()
+    cfg = model.cfg
+    cap = config.serve_max_len()
+    B = config.max_slots
+    kshape = jax.eval_shape(lambda: jax.random.key(0))
+    params = jax.eval_shape(model.init, kshape)
+    dtypes = _steady_cache_dtypes(model, params, B, cap)
+    layout, fallback_reason = effective_kv_layout(config, cfg)
+    pages = None
+    if layout == "paged":
+        from repro.models.attention import paged_capacity
+        ps = config.page_size
+        pcap = paged_capacity(cfg, cap)
+        if pcap % ps:
+            raise ValueError(f"{cfg.name}: paged capacity {pcap} not a "
+                             f"multiple of page_size={ps}")
+        pages_per_slot = pcap // ps
+        num_pages = config.kv_pages or (B * pages_per_slot + 1)
+        pages = {"page_size": ps, "pages_per_slot": pages_per_slot,
+                 "num_pages": num_pages}
+        cache = jax.eval_shape(
+            lambda p: _cast_paged(
+                model.init_cache(p, B, cap, per_slot=True,
+                                 paged=(ps, num_pages)), dtypes), params)
+    else:
+        cache = jax.eval_shape(
+            lambda p: jax.tree.map(lambda c, dt: c.astype(dt),
+                                   model.init_cache(p, B, cap,
+                                                    per_slot=True), dtypes),
+            params)
+    mode = resolve_prefill_mode(config, model)
+    prefill = (_make_parallel_prefill(model, cap) if mode == "parallel"
+               else _make_scan_prefill(model, cap, dtypes))
+    P = min(8, cap)
+    rows = {}
+    for n in sorted({1, B}):
+        rows[n] = jax.eval_shape(
+            prefill, params, jax.ShapeDtypeStruct((n, P), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32))[1]
+    fallback = (dense_fallback_stats(cache)
+                if config.kv_layout == "paged" else (0, 0))
+    return {"params": params, "cache": cache, "rows": rows,
+            "layout": layout, "fallback_reason": fallback_reason,
+            "dense_fallback": fallback, "prefill_mode": mode,
+            "pages": pages, "max_slots": B, "capacity": cap}
+
+
 class ServeEngine:
     """Continuous-batching serving engine for one (model, mesh, config)."""
 
@@ -199,16 +288,7 @@ class ServeEngine:
         self.max_len = config.serve_max_len()
         self.scheduler = ContinuousBatchingScheduler(self.max_slots,
                                                      self.max_len)
-        mode = config.prefill_mode
-        if mode not in _PREFILL_MODES:
-            raise ValueError(f"prefill_mode={mode!r}; one of {_PREFILL_MODES}")
-        if mode == "auto":
-            mode = "parallel" if model.prefill_cache is not None else "scan"
-        if mode == "parallel" and model.prefill_cache is None:
-            raise ValueError(
-                f"{cfg.name} ({cfg.family}) has no parallel prefill "
-                f"(recurrent state); use prefill_mode='scan'")
-        self.prefill_mode = mode
+        mode = self.prefill_mode = resolve_prefill_mode(config, model)
 
         # versioned params: in-flight slots pin the version they were
         # admitted with; hot-reload bumps _version for new admissions
@@ -230,8 +310,13 @@ class ServeEngine:
                                                   self.max_slots,
                                                   self.max_len)
         # paged KV arena (the default): recurrent-only families (rwkv)
-        # have no KV to page and quietly keep the dense slotted layout
-        self.paged = (config.kv_layout == "paged" and cfg.family != "ssm")
+        # have no KV to page and keep the dense slotted layout — loudly
+        layout, fallback_reason = effective_kv_layout(config, cfg)
+        self.paged = layout == "paged"
+        if fallback_reason:
+            import warnings
+            from ..build import EngineWarning
+            warnings.warn(fallback_reason, EngineWarning, stacklevel=3)
         if self.paged:
             from repro.models.attention import paged_capacity
             ps = config.page_size
@@ -290,6 +375,25 @@ class ServeEngine:
             self._kv_capacity_bytes = dense_kv_bytes(self.cache)
             self._pool = None
             self._prefix = None
+        # paged-accounting honesty: per-slot state that stays dense even
+        # though paging was requested (mamba recurrent state in hybrids;
+        # the whole cache under the ssm fallback). Surfaced in kv_stats.
+        self._dense_fallback_leaves = 0
+        self._dense_fallback_bytes = 0
+        if config.kv_layout == "paged":
+            self._dense_fallback_leaves, self._dense_fallback_bytes = \
+                dense_fallback_stats(self.cache)
+            if self.paged and self._dense_fallback_leaves:
+                import warnings
+                from ..build import EngineWarning
+                warnings.warn(
+                    f"{cfg.name}: {self._dense_fallback_leaves} cache "
+                    f"leaves ({self._dense_fallback_bytes} bytes) stay "
+                    f"dense per-slot under kv_layout='paged' (recurrent "
+                    f"state has no K/V rows to page); paged byte "
+                    f"accounting excludes them — see "
+                    f"kv_stats()['dense_fallback_leaves']",
+                    EngineWarning, stacklevel=3)
         self._tokens = np.zeros((self.max_slots, 1), np.int32)
         # per-slot sampling policy rows (fixed [max_slots] shapes: policy
         # churn never retraces). Greedy slots (temperature 0) take the
@@ -483,6 +587,18 @@ class ServeEngine:
         if own is None:
             self._pool.release(shared)
             return False
+        if self._prefix is not None:
+            # register this prompt's own full pages NOW — at reservation,
+            # not after prefill — so a SAME-TICK co-arrival with the same
+            # page-aligned prefix matches them above and joins the
+            # extend-prefill path (first-contact grouping: the leader
+            # prefills the full prompt once, followers prefill only their
+            # tails against the leader's pages). The index holds one pool
+            # ref per newly registered page; admission-group ordering
+            # guarantees the leader's prefill lands before any follower
+            # gathers the prefix.
+            newly = self._prefix.register(prompt, own, start=len(shared))
+            self._pool.ref(newly)
         handle._admit_plan = (prompt, shared, own)
         return True
 
@@ -599,12 +715,8 @@ class ServeEngine:
                     self.stats["prefix_hits"] += 1
                     self.stats["prefix_tokens_reused"] += (
                         n_sh * self._page_size)
-                if self._prefix is not None:
-                    # register this prompt's own full pages so later
-                    # requests share them; the index holds one pool ref
-                    # per newly registered page
-                    newly = self._prefix.register(prompt, own, start=n_sh)
-                    self._pool.ref(newly)
+                # (prefix registration happened in _reserve_pages, so
+                # same-tick co-arrivals could already match these pages)
                 tail = prompt[n_sh * self._page_size:]
                 # bucket within the capacity left after the prefix: the
                 # cache rows land at offset prefix_len
@@ -745,6 +857,8 @@ class ServeEngine:
         prefix-reuse and pressure counters. Dense layout reports its
         constant full-capacity footprint."""
         return {"kv_layout": "paged" if self.paged else "dense",
+                "dense_fallback_leaves": self._dense_fallback_leaves,
+                "dense_fallback_bytes": self._dense_fallback_bytes,
                 "kv_bytes_in_use": self.stats["kv_bytes_in_use"],
                 "peak_kv_bytes_in_use": self.stats["peak_kv_bytes_in_use"],
                 "kv_capacity_bytes": self._kv_capacity_bytes,

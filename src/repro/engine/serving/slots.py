@@ -310,6 +310,27 @@ def cast_paged_like(cache: PyTree, dense_dtypes: PyTree) -> PyTree:
     return _zip_paged(paged, lambda c, d: c.astype(d), cache, dense_dtypes)
 
 
+def dense_fallback_stats(cache: PyTree) -> tuple:
+    """(leaves, bytes) of per-slot state living OUTSIDE paged nodes in a
+    cache built for `kv_layout='paged'` — the quietly-dense remainder:
+    mamba/rwkv recurrent state, per-slot pos counters of dense nodes.
+    An all-dense cache (ssm family fallback) counts every leaf. Works on
+    arrays and ShapeDtypeStructs alike (the retrace checker calls it on
+    eval_shape output)."""
+    leaves = 0
+    nbytes = 0
+
+    def f(c):
+        nonlocal leaves, nbytes
+        if not _is_paged(c):
+            leaves += 1
+            nbytes += int(np.prod(c.shape)) * np.dtype(c.dtype).itemsize
+        return c
+
+    jax.tree.map(f, cache, is_leaf=_is_paged)
+    return leaves, nbytes
+
+
 def dense_kv_bytes(cache: PyTree) -> int:
     """Bytes held by the dense attention K/V buffers (pos counters and
     recurrent state excluded) — the footprint the paged arena's

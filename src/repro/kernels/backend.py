@@ -22,3 +22,15 @@ def interpret_default() -> bool:
 
 def resolve_interpret(interpret: Optional[bool]) -> bool:
     return interpret_default() if interpret is None else bool(interpret)
+
+
+def backend_summary() -> dict:
+    """Environment stamp for analysis reports: which platform the trace
+    ran on and how Pallas kernels would resolve there. Recorded in the
+    comms-plan report's meta block (excluded from baseline diffs — the
+    plan itself is platform-independent, the stamp is provenance)."""
+    return {
+        "platform": jax.default_backend(),
+        "pallas_interpret_default": interpret_default(),
+        "device_count": jax.device_count(),
+    }

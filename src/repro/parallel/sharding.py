@@ -191,6 +191,60 @@ def param_specs(cfg: ModelConfig, shapes: PyTree, pol: ShardingPolicy
     return jax.tree_util.tree_map_with_path(rule, shapes)
 
 
+def local_shape(shape: Sequence[int], spec: Optional[P],
+                axis_sizes: Dict[str, int]) -> Tuple[int, ...]:
+    """The per-device shard shape of a global `shape` under `spec` on a
+    mesh with the given axis sizes (what shard_map bodies see)."""
+    out = list(shape)
+    for d, entry in enumerate(spec or ()):
+        if entry is None:
+            continue
+        for ax in (entry if isinstance(entry, tuple) else (entry,)):
+            out[d] //= axis_sizes[ax]
+    return tuple(out)
+
+
+def spec_violations(specs: PyTree, shapes: PyTree,
+                    axis_sizes: Dict[str, int]) -> list:
+    """Static validity check of a PartitionSpec tree against declared
+    mesh axis sizes — no mesh or devices needed. Flags: a spec naming an
+    axis the mesh doesn't have, a sharded dim the axis sizes don't
+    divide, and one mesh axis used on two dims of the same leaf.
+    Returns [(path, problem)] strings; the sharding linter
+    (`repro.analysis.shardlint`) fails on any."""
+    out = []
+
+    def check(path, spec, leaf):
+        if spec is None or leaf is None:
+            return  # replicated entry / empty cache slot
+        name = jax.tree_util.keystr(path)
+        shape = tuple(leaf.shape)
+        seen: set = set()
+        for d, entry in enumerate(spec or ()):
+            if entry is None:
+                continue
+            if d >= len(shape):
+                out.append((name, f"spec {spec} longer than shape {shape}"))
+                return
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                if ax not in axis_sizes:
+                    out.append((name, f"dim {d}: unknown mesh axis {ax!r} "
+                                f"(mesh has {sorted(axis_sizes)})"))
+                    continue
+                if ax in seen:
+                    out.append((name, f"mesh axis {ax!r} used on more than "
+                                f"one dim of {spec}"))
+                seen.add(ax)
+                if shape[d] % axis_sizes[ax] != 0:
+                    out.append((name, f"dim {d} ({shape[d]}) not divisible "
+                                f"by axis {ax!r}={axis_sizes[ax]}"))
+
+    jax.tree_util.tree_map_with_path(
+        check, specs, shapes,
+        is_leaf=lambda x: isinstance(x, P) or x is None)
+    return out
+
+
 def batch_specs(batch_shapes: PyTree, dp_axes: Sequence[str]) -> PyTree:
     """Batch leaves sharded over the DP axes on dim 0."""
     dp = tuple(dp_axes)

@@ -1,0 +1,269 @@
+"""Static-analysis subsystem (repro.analysis): golden known-bad
+fixtures — each checker must FLAG its fixture — plus clean-path and
+baseline-mutation coverage.
+
+Everything here is trace/AST-only and device-count independent; the
+full 32-device canonical comms matrix runs via `python -m
+repro.analysis --all` in tools/ci.sh (one subprocess test mirrors a
+slice of it).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from conftest import run_in_subprocess
+from repro.analysis.hostsync import lint_source
+from repro.analysis.jaxpr_utils import (acc_dtype_violations,
+                                        collect_collectives,
+                                        count_merge_reshapes, trace)
+from repro.analysis.report import (diff_findings, diff_plans,
+                                   findings_baseline)
+from repro.analysis.retrace import signature_violations
+from repro.parallel.sharding import local_shape, spec_violations
+
+
+# ---------------------------------------------------------------- comms
+
+def test_allgathering_combiner_flagged():
+    """Golden fixture: a 'combiner' that all-gathers instead of psumming
+    its dots must be reported by the collective scan. (axis_env traces
+    under a fake 2-wide axis, so this holds at any host device count —
+    a size-1 real axis would let jax elide the collective.)"""
+
+    def bad_combine(x):
+        g = jax.lax.all_gather(x, "data")
+        return jnp.sum(g, axis=(0, 1))
+
+    jaxpr = jax.make_jaxpr(bad_combine, axis_env=[("data", 2)])(
+        jax.ShapeDtypeStruct((2, 8), jnp.float32))
+    colls = collect_collectives(jaxpr)
+    assert any(c["prim"] == "all_gather" for c in colls), colls
+
+
+def test_psum_collected_with_axes():
+    jaxpr = jax.make_jaxpr(
+        lambda v: jax.lax.psum(v, ("data",)), axis_env=[("data", 2)])(
+        jax.ShapeDtypeStruct((4,), jnp.float32))
+    colls = collect_collectives(jaxpr)
+    assert [c["prim"] for c in colls] == ["psum"]
+    assert colls[0]["axes"] == ("data",)
+    assert colls[0]["manual"] is False  # not wrapped in shard_map here
+
+
+def test_merge_reshape_flagged_outside_shard_map_only():
+    """Collapsing non-unit dims of a global array (the `_split_lanes`
+    replication hazard) counts; rank-increasing splits don't."""
+    jp_bad = trace(lambda x: x.reshape(-1),
+                   jax.ShapeDtypeStruct((4, 8), jnp.float32))
+    assert count_merge_reshapes(jp_bad) == 1
+    jp_ok = trace(lambda x: x.reshape(2, 2, 8),
+                  jax.ShapeDtypeStruct((4, 8), jnp.float32))
+    assert count_merge_reshapes(jp_ok) == 0
+    jp_squeeze = trace(lambda x: x.reshape(4,),
+                       jax.ShapeDtypeStruct((4, 1), jnp.float32))
+    assert count_merge_reshapes(jp_squeeze) == 0
+
+
+def test_comms_mutation_fires_baseline_diff():
+    """Perturbing fusion_threshold_mb handling must change the comms
+    plan report (bucket layout), so the baseline diff fails CI."""
+    from repro.analysis.comms import check_comms
+
+    clean, v0 = check_comms(archs=("qwen3-32b",), spans=(2,))
+    assert v0 == [], v0
+    mutated, _ = check_comms(archs=("qwen3-32b",), spans=(2,),
+                             combine_overrides={
+                                 "fusion_threshold_mb": 1e-5})
+    drift = diff_plans(mutated, clean)
+    assert drift, "threshold mutation did not change the comms plan"
+    assert diff_plans(clean, clean) == []
+
+
+def test_comms_canonical_matrix_subprocess():
+    """One arch x spans {2, 8} on the canonical 32-device topology:
+    every fused cell traces to exactly one psum per sharded bucket per
+    level, reference cells to zero explicit collectives. (ci.sh runs
+    the full 3-arch x {2,4,8} matrix via `python -m repro.analysis`.)"""
+    out = run_in_subprocess(
+        """
+from repro.analysis.comms import check_comms
+rep, viols = check_comms(archs=("mixtral-8x22b",), spans=(2, 8))
+assert viols == [], viols
+plans = rep["plans"]
+assert rep["meta"]["mesh"] == {"data": 16, "model": 2}, rep["meta"]
+for key, e in plans.items():
+    assert e["all_gather"] == 0 and e["merge_reshapes"] == 0, (key, e)
+    if "|fused|" in key:
+        assert e["n_sharded_buckets"] > 0, (key, e)
+        assert e["psums"] == e["levels"] * e["n_sharded_buckets"], (key, e)
+    else:
+        assert e["psums"] == 0, (key, e)
+print("OK", len(plans))
+""", devices=32, timeout=900)
+    assert "OK 8" in out
+
+
+# -------------------------------------------------------------- retrace
+
+def test_drifting_decode_signature_flagged():
+    steady = {"kv": jax.ShapeDtypeStruct((2, 4, 8), jnp.bfloat16),
+              "pos": jax.ShapeDtypeStruct((4,), jnp.int32)}
+    widened = {"kv": jax.ShapeDtypeStruct((2, 4, 8), jnp.float32),
+               "pos": jax.ShapeDtypeStruct((4,), jnp.int32)}
+    grown = {"kv": jax.ShapeDtypeStruct((2, 4, 9), jnp.bfloat16),
+             "pos": jax.ShapeDtypeStruct((4,), jnp.int32)}
+    bad = signature_violations(steady, [("widen", widened),
+                                        ("grow", grown),
+                                        ("ok", steady)])
+    assert len(bad) == 2, bad
+    assert any("widen" in b and "float32" in b for b in bad)
+    assert any("grow" in b for b in bad)
+    assert not any("ok" in b.split(":")[0] for b in bad)
+
+
+def test_retrace_checker_clean_on_head():
+    """eval_shape-only; holds under any device count."""
+    from repro.analysis.retrace import check_arch
+
+    entry = check_arch("qwen3-32b", "paged")
+    assert entry["violations"] == [], entry
+    assert entry["layout"] == "paged"
+    # the quietly-dense ssm fallback is reported, not hidden
+    entry = check_arch("rwkv6-7b", "paged")
+    assert entry["violations"] == [], entry
+    assert entry["layout"] == "dense"
+    assert entry["dense_fallback_leaves"] > 0
+
+
+# ------------------------------------------------------------- sharding
+
+def test_bad_spec_naming_flagged():
+    shapes = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}
+    bad = spec_violations({"w": P("pod", None)}, shapes, {"data": 2})
+    assert len(bad) == 1 and "unknown mesh axis" in bad[0][1], bad
+
+
+def test_indivisible_and_duplicate_axis_flagged():
+    shapes = {"w": jax.ShapeDtypeStruct((7, 8), jnp.float32)}
+    bad = spec_violations({"w": P("data", None)}, shapes, {"data": 2})
+    assert len(bad) == 1 and "not divisible" in bad[0][1], bad
+    shapes = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}
+    bad = spec_violations({"w": P(("data",), "data")}, shapes, {"data": 2})
+    assert len(bad) == 1 and "more than one dim" in bad[0][1], bad
+
+
+def test_local_shape():
+    assert local_shape((8, 6), P("data", ("model", "pod")),
+                       {"data": 2, "model": 3, "pod": 2}) == (4, 1)
+    assert local_shape((8, 6), None, {"data": 2}) == (8, 6)
+
+
+def test_rvh_gspecs_never_reuse_dp_axis():
+    """The span==dp lane plan (caught by shardlint): the lane dim takes
+    the DP axes, so the payload keeps only TP axes."""
+    from repro.analysis.shardlint import check_sharding
+
+    rep, viols = check_sharding(archs=("qwen3-32b",), spans=(16,))
+    assert viols == [], viols
+
+
+def test_acc_dtype_downcast_flagged():
+    sds = jax.ShapeDtypeStruct((16, 16), jnp.bfloat16)
+    # bf16 x bf16 dot accumulating in bf16: the silent-downcast fixture
+    jaxpr = trace(lambda a, b: jnp.dot(a, b), sds, sds)
+    bad_eqns = acc_dtype_violations(jaxpr, jnp.float32)
+    assert bad_eqns and "bfloat16" in bad_eqns[0], bad_eqns
+    # the same dot with fp32 accumulation is clean — and so is
+    # jnp.sum(bf16, dtype=bf16), which internally upcasts to f32
+    jaxpr = trace(lambda a, b: jnp.dot(a, b,
+                                       preferred_element_type=jnp.float32),
+                  sds, sds)
+    assert acc_dtype_violations(jaxpr, jnp.float32) == []
+    jaxpr = trace(lambda x: jnp.sum(x, dtype=jnp.bfloat16),
+                  jax.ShapeDtypeStruct((16,), jnp.bfloat16))
+    assert acc_dtype_violations(jaxpr, jnp.float32) == []
+
+
+# ------------------------------------------------------------- hostsync
+
+_HOT_FIXTURE = '''
+import numpy as np
+
+def make_decode_step(model):
+    def step(params, tok, cache):
+        print("tracing")
+        vals.append(tok)
+        return model(params, tok, cache)
+    return step
+
+def tick(self, logits, x):
+    logits.block_until_ready()
+    a = float(self._score(x))
+    b = x.item()
+    c = np.asarray(self._outs[0])
+    d = int(x)            # host int conversion of a name: not flagged
+    e = float(b)          # float() of a plain name: not flagged
+    f = np.asarray(self._outs[0])  # lint: allow(host-pull)
+    return a, b, c, d, e, f
+'''
+
+
+def test_hostsync_fixture_findings():
+    findings = lint_source(_HOT_FIXTURE, "fixture.py")
+    rules = [(f["rule"], f["code"]) for f in findings]
+    assert ("block-until-ready", "logits.block_until_ready()") in rules
+    assert any(r == "host-pull" and "self._score" in c for r, c in rules)
+    assert any(r == "host-pull" and "x.item()" in c for r, c in rules)
+    assert any(r == "host-pull" and "self._outs[0]" in c for r, c in rules)
+    # traced-fn host mutation: print + closure .append inside the inner
+    # fn returned by make_decode_step
+    assert sum(1 for r, _ in rules if r == "host-mutation-in-jit") == 2
+    # suppression + int()/float(name) exemptions
+    assert sum(1 for r, c in rules
+               if r == "host-pull" and "np.asarray" in c) == 1
+    assert not any("int(x)" in c for _, c in rules)
+    assert not any(c == "float(b)" for _, c in rules)
+
+
+def test_hostsync_baseline_roundtrip():
+    findings = lint_source(_HOT_FIXTURE, "fixture.py")
+    base = findings_baseline(findings)
+    assert diff_findings(findings, base) == []
+    # a NEW finding (not in baseline) still fires
+    extra = findings + [{"file": "fixture.py", "line": 99,
+                         "rule": "host-pull", "code": "y.item()"}]
+    assert len(diff_findings(extra, base)) == 1
+
+
+def test_hostsync_head_clean_vs_baseline():
+    """The repo's hot loops must introduce no NEW host syncs."""
+    from pathlib import Path
+
+    from repro.analysis.hostsync import check_hostsync
+    from repro.analysis.report import load
+
+    root = Path(__file__).resolve().parents[1]
+    base = load(root / "tools/hostsync_baseline.json")
+    assert base is not None, "tools/hostsync_baseline.json missing"
+    _rep, viols = check_hostsync(root, base)
+    assert viols == [], viols
+
+
+# ------------------------------------------------------------------ CLI
+
+def test_cli_help_runs_without_jax():
+    import subprocess
+    import sys
+
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--help"],
+        capture_output=True, text=True,
+        env={**__import__("os").environ,
+             "PYTHONPATH": str(__import__("pathlib").Path(
+                 __file__).resolve().parents[1] / "src")})
+    assert res.returncode == 0
+    assert "--update-baselines" in res.stdout

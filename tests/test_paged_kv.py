@@ -87,14 +87,38 @@ class TestDenseVsPaged:
         _, paged = run_engine(model, params, reqs, kv_layout="paged", **kw)
         assert paged == dense
 
-    def test_rwkv_quietly_stays_dense(self):
+    def test_rwkv_dense_fallback_is_loud(self):
+        """An ssm arch under kv_layout='paged' serves dense — and SAYS
+        so: EngineWarning at build, dense_fallback_* in kv_stats."""
+        from repro.engine.build import EngineWarning
+
         model = reduced_model("rwkv6-7b")      # no KV to page
         params = model.init(jax.random.key(0))
-        eng, toks = run_engine(model, params,
-                               [dict(prompt=list(range(1, 8)),
-                                     max_new_tokens=4)],
-                               kv_layout="paged")
+        with pytest.warns(EngineWarning, match="no attention K/V to page"):
+            eng, toks = run_engine(model, params,
+                                   [dict(prompt=list(range(1, 8)),
+                                         max_new_tokens=4)],
+                                   kv_layout="paged")
         assert not eng.paged and len(toks[0]) == 4
+        stats = eng.kv_stats()
+        assert stats["kv_layout"] == "dense"
+        assert stats["dense_fallback_leaves"] > 0
+        assert stats["dense_fallback_bytes"] > 0
+
+    def test_hybrid_partial_fallback_reported(self):
+        """A hybrid (paged attention + dense mamba state) pages fine but
+        reports the leaves that stay dense per-slot."""
+        from repro.engine.build import EngineWarning
+
+        model = reduced_model("hymba-1.5b")
+        params = model.init(jax.random.key(0))
+        with pytest.warns(EngineWarning, match="stay[\\s\\S]*dense per-slot"):
+            eng, toks = run_engine(model, params,
+                                   [dict(prompt=list(range(1, 8)),
+                                         max_new_tokens=4)],
+                                   kv_layout="paged")
+        assert eng.paged and len(toks[0]) == 4
+        assert eng.kv_stats()["dense_fallback_leaves"] > 0
 
     def test_page_size_must_divide_swa_window(self):
         model = reduced_model("mixtral-8x22b")     # window 32
@@ -140,6 +164,35 @@ class TestSharedPrefix:
         # 37-token system prompt = 2 full pages; requests 2 and 3 hit
         assert eng.stats["prefix_hits"] == 2
         assert eng.stats["prefix_tokens_reused"] == 2 * 2 * 16
+
+    def test_first_contact_co_arrivals_group(self):
+        """Same-tick admissions sharing a prefix NOBODY has prefilled
+        yet: the leader registers its pages at reservation time, so the
+        followers match them in the same admission batch and ride one
+        extend-prefill — two prefill dispatches total (leader full +
+        follower tails), not three."""
+        model = tiny_model()
+        params = model.init(jax.random.key(0))
+        # tails sized so both follower tails land in one padding bucket
+        reqs = [dict(prompt=p, max_new_tokens=8)
+                for p in self._prompts(tails=(5, 6, 7))]
+        _, dense = run_engine(model, params, reqs, stagger=0,
+                              kv_layout="dense", max_slots=4, max_len=64)
+        eng = ServeEngine(EngineConfig(kv_layout="paged", max_slots=4,
+                                       max_len=64), model, None, params)
+        handles = [eng.submit(GenerationRequest(**r)) for r in reqs]
+        eng.step()          # one tick admits all three
+        # the followers decode against the leader's two prefix pages
+        # (read-only shares), admitted in the same batch
+        t = eng._tables
+        assert (t[1, :2] == t[0, :2]).all() and (t[2, :2] == t[0, :2]).all()
+        assert eng._shared[1, :2].all() and eng._shared[2, :2].all()
+        assert not eng._shared[0, :2].any()      # leader owns them
+        eng.drain()
+        assert [h.tokens for h in handles] == dense
+        assert eng.stats["prefix_hits"] == 2
+        assert eng.stats["prefix_tokens_reused"] == 2 * 2 * 16
+        assert eng.stats["prefill_calls"] == 2
 
     def test_shared_pages_are_physically_shared(self):
         model = tiny_model()

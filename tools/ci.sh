@@ -14,6 +14,13 @@ export XLA_FLAGS="--xla_force_host_platform_device_count=8"
 echo "== tier-1 test suite =="
 python -m pytest -x -q
 
+echo "== static analysis (trace-only invariants, no device execution) =="
+# comms plan (one psum per bucket per level, zero all-gathers), retrace
+# signatures, sharding/dtype lint, host-sync lint — diffed against the
+# checked-in tools/*_baseline.json. The CLI re-pins its own fake device
+# count (32 = data 16 x model 2), independent of the XLA_FLAGS above.
+python -m repro.analysis --all
+
 echo "== train smoke run (3 steps, reduced hymba) =="
 python -m repro.launch.train --arch hymba-1p5b --reduced --steps 3 \
     --seq 32 --batch 8
