@@ -66,7 +66,9 @@ def main():
     result = {"target_loss": 3.5, "span": 8, "max_steps": 120,
               "batches": by_batch}
     OUT.write_text(json.dumps(result, indent=2) + "\n")
-    append_history("adascale_fig6", result)
+    # topology of the measurement subprocess (run_devices), not this host
+    append_history("adascale_fig6", result, devices=8,
+                   mesh={"data": 8, "model": 1})
     emit("fig6_done", 0.0, f"wrote {OUT.name}")
     return result
 

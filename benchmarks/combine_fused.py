@@ -152,7 +152,8 @@ def main(smoke: bool = False):
     }
     if not smoke:
         OUT.write_text(json.dumps(result, indent=2) + "\n")
-        append_history("combine_fused", result)
+        # in-process, no mesh: combiners run with global (GSPMD) semantics
+        append_history("combine_fused", result, mesh=None)
         emit("combine_fused_written", 0.0, f"wrote {OUT.name}")
     return result
 

@@ -15,13 +15,28 @@ if SRC not in sys.path:
 HISTORY = Path(__file__).resolve().parents[1] / "BENCH_history.jsonl"
 
 
-def append_history(bench: str, result: dict) -> None:
+def append_history(bench: str, result: dict, *, devices: int = None,
+                   mesh: dict = None) -> None:
     """Append one run to the cross-run perf trajectory
     (BENCH_history.jsonl at the repo root). The per-bench BENCH_*.json
     files hold only the latest run; the history line is what lets a
-    regression be dated to a commit."""
+    regression be dated to a commit.
+
+    Every record carries `devices` (the device count the bench ran on;
+    defaults to this process's jax.device_count()) and `mesh` (axis-name
+    -> size, None when the bench built no mesh) — without them, history
+    lines from different hosts/topologies are incomparable. Benches that
+    run in a subprocess must pass the SUBPROCESS topology explicitly."""
+    if devices is None:
+        try:
+            import jax
+            devices = jax.device_count()
+        except Exception:
+            devices = None
     row = {"bench": bench,
            "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+           "devices": devices,
+           "mesh": mesh,
            "result": result}
     with HISTORY.open("a") as f:
         f.write(json.dumps(row, sort_keys=True) + "\n")

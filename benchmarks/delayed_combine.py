@@ -1,0 +1,144 @@
+"""Delayed-combine overlap benchmark: is the exchange actually hidden?
+
+The combine_delay=1 contract (paper §5.2 regime, DaSGD-style) is that
+the Adasum exchange of round i-1's deltas costs ~no wall-clock because
+it runs while round i computes. This benchmark measures exactly that,
+with the interconnect latency made visible by injection:
+
+    1. build a combine_delay=1 session on an 8-lane mesh and take the
+       split-stream executor (`DelayedCombineStream`), whose per-step
+       accounting separates `compute_s` from `combine_wait_s`;
+    2. size the injected interconnect latency (`comm_delay`, a sleep on
+       the exchange leg only) so one exchange costs about one local
+       step — the exactly-hideable regime a slow interconnect puts a
+       real cluster in;
+    3. race the SAME round executed two ways: `serial_step` (exchange
+       inline before compute — the no-overlap baseline, bitwise-equal
+       output) vs `step` (exchange on the background thread).
+
+    hidden_fraction = (serial_step_s - overlap_step_s) / combine_s
+
+i.e. the share of the measured exchange cost that overlap removed from
+the critical path. Emits `BENCH_delayed_combine.json`; the acceptance
+bar is hidden_fraction >= 0.5.
+
+    python -m benchmarks.delayed_combine            # full run + JSON
+    python -m benchmarks.delayed_combine --smoke    # CI: few iters,
+        asserts the overlap removes wall-clock at all
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from .common import append_history, emit, run_devices
+
+OUT = Path(__file__).resolve().parents[1] / "BENCH_delayed_combine.json"
+
+CODE = r"""
+import json, time, jax
+from repro.configs.base import ModelConfig
+from repro.engine import EngineConfig, TrainSession
+from repro.models import build_model
+from repro.launch.mesh import make_mesh_compat
+
+SMOKE = __SMOKE__
+mcfg = ModelConfig("bench", "dense", 2, 64, 4, 2, 128, 257, head_dim=16)
+model = build_model(mcfg, attn_chunk=32)
+mesh = make_mesh_compat((8, 1), ("data", "model"))
+# span=4 < dp=8: the hierarchical regime where the FUSED delayed
+# correction runs (span==dp would fall back to the reference tree)
+cfg = EngineConfig(combine="adasum", span=4, backend="gspmd_tree",
+                   optimizer="momentum", lr=0.1, combine_delay=1,
+                   seq_len=32 if SMOKE else 64, global_batch=32,
+                   data_seed=7)
+sess = TrainSession.from_config(cfg, model=model, mesh=mesh, callbacks=[])
+stream = sess.use_delayed_stream()
+
+# compile every leg (overlapped step, serial step), then measure the
+# bare pieces: local-step compute and the exchange's execution cost
+sess.step(sess.batch(0))
+st = int(jax.device_get(sess.state["step"]))
+sess.state, _ = stream.serial_step(sess.state, sess.batch(st))
+compute = []
+for _ in range(3):
+    sess.step()
+    compute.append(stream.last_compute_s)
+compute_s = sorted(compute)[1]
+exch_exec = sorted(stream.combine_time(sess.state["pending"])
+                   for _ in range(3))[1]
+
+# inject interconnect latency sized so one exchange ~= one local step:
+# the exactly-hideable slow-interconnect regime
+stream.comm_delay = max(compute_s - exch_exec, 1e-3)
+combine_s = sorted(stream.combine_time(sess.state["pending"])
+                   for _ in range(3))[1]
+
+iters = 3 if SMOKE else 9
+overlap, waits = [], []
+for _ in range(iters):
+    t0 = time.perf_counter()
+    m = sess.step()
+    overlap.append(time.perf_counter() - t0)
+    waits.append(m["combine_wait_s"])
+serial = []
+for _ in range(iters):
+    st = int(jax.device_get(sess.state["step"]))
+    t0 = time.perf_counter()
+    sess.state, _ = stream.serial_step(sess.state, sess.batch(st))
+    serial.append(time.perf_counter() - t0)
+t_overlap = sorted(overlap)[iters // 2]
+t_serial = sorted(serial)[iters // 2]
+sess.close()
+print("RESULT " + json.dumps({
+    "compute_s": compute_s,
+    "exchange_exec_s": exch_exec,
+    "injected_comm_delay_s": stream.comm_delay,
+    "combine_s": combine_s,
+    "serial_step_s": t_serial,
+    "overlap_step_s": t_overlap,
+    "combine_wait_s_median": sorted(waits)[iters // 2],
+    "hidden_fraction": (t_serial - t_overlap) / combine_s,
+    "iters": iters,
+    "run_metadata": sess.run_metadata(),
+}))
+"""
+
+
+def main(smoke: bool = False):
+    code = CODE.replace("__SMOKE__", "1" if smoke else "0")
+    out = run_devices(code, devices=8, timeout=1800)
+    lines = [ln for ln in out.splitlines() if ln.startswith("RESULT ")]
+    result = json.loads(lines[-1][len("RESULT "):])
+
+    if smoke:
+        assert result["hidden_fraction"] > 0, result
+        assert result["run_metadata"]["combine_delay"] == 1, result
+        print(f"delayed_combine smoke OK: hidden_fraction="
+              f"{result['hidden_fraction']:.2f} "
+              f"(combine {result['combine_s'] * 1e3:.1f}ms behind "
+              f"compute {result['compute_s'] * 1e3:.1f}ms, "
+              f"path={result['run_metadata']['combine_path']})")
+        return result
+
+    emit("delayed_combine_serial", result["serial_step_s"] * 1e6,
+         f"combine_s={result['combine_s']:.4f}")
+    emit("delayed_combine_overlap", result["overlap_step_s"] * 1e6,
+         f"combine_wait_s={result['combine_wait_s_median']:.4f}")
+    emit("delayed_combine_hidden_fraction", result["hidden_fraction"],
+         f"path={result['run_metadata']['combine_path']}")
+    OUT.write_text(json.dumps(result, indent=2) + "\n")
+    # topology of the measurement subprocess (run_devices), not this host
+    append_history("delayed_combine", result, devices=8,
+                   mesh={"data": 8, "model": 1})
+    assert result["hidden_fraction"] >= 0.5, (
+        f"overlap hides only {result['hidden_fraction']:.2f} of the "
+        f"combine (bar: 0.5): {result}")
+    return result
+
+
+if __name__ == "__main__":
+    res = main(smoke="--smoke" in sys.argv[1:])
+    if "--smoke" not in sys.argv[1:]:
+        print(json.dumps(res, indent=2))

@@ -156,7 +156,8 @@ def main(smoke: bool = False):
         "paged_kv_stats": {k: v for k, v in paged.kv_stats().items()},
     }
     OUT.write_text(json.dumps(result, indent=2) + "\n")
-    append_history("serve_paged", result)
+    # replicated serving (ServeEngine built with mesh=None)
+    append_history("serve_paged", result, mesh=None)
     emit("serve_paged_peak_ratio", ratio,
          f"tok_s_ratio={tok_ratio:.2f} wrote {OUT.name}")
     assert ratio >= 2.0, f"peak KV ratio {ratio:.2f} < 2x"

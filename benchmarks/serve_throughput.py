@@ -108,7 +108,8 @@ def main():
                          if k != "started_at"},
     }
     OUT.write_text(json.dumps(result, indent=2) + "\n")
-    append_history("serve_throughput", result)
+    # replicated serving (ServeEngine built with mesh=None)
+    append_history("serve_throughput", result, mesh=None)
     emit("serve_throughput_speedup", result["speedup"],
          f"wrote {OUT.name}")
     return result

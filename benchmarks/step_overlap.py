@@ -113,7 +113,8 @@ def main():
         "best_depth_config": min(sweep, key=sweep.get),
     }
     OUT.write_text(json.dumps(result, indent=2) + "\n")
-    append_history("step_overlap", result)
+    append_history("step_overlap", result, devices=1,
+                   mesh={"data": 1, "model": 1})
     emit("step_overlap_speedup", result["speedup_pipelined"],
          f"wrote {OUT.name}")
     return result

@@ -16,7 +16,13 @@ checker:
   4. asserts trace == prediction: psum multiset matches, zero
      all_gather / all_to_all / ppermute / reduce_scatter anywhere, and
      zero payload-merging reshapes outside shard_map (the `_split_lanes`
-     336 GiB replication class).
+     336 GiB replication class);
+  5. traces the delayed-combine correction (`build_delayed_correction`,
+     the combine_delay=1 exchange that overlaps the next round's
+     compute) for the same cell and holds it to the same bar: the fused
+     path must emit exactly the combine's psum multiset — one per
+     sharded bucket per level, the lane-mean side adds NO collective —
+     and the reference path stays free of explicit collectives.
 
 The machine-readable report diffs against tools/comms_baseline.json, so
 a change to bucketing (e.g. `fusion_threshold_mb` handling), psum
@@ -68,7 +74,8 @@ def check_comms(*, archs=ARCHS, spans=SPANS, mesh=None,
     pointing at the CLI which pins the device count).
     `combine_overrides` perturbs the CombineConfig — used by the
     mutation tests to prove the baseline diff fires."""
-    from repro.core.combine import CombineConfig, fused_plan, plan_summary
+    from repro.core.combine import (CombineConfig, build_delayed_correction,
+                                    fused_plan, plan_summary)
     from repro.engine.build import plan_lane_specs
     from repro.engine.registry import make_combiner
     from repro.kernels.backend import backend_summary
@@ -122,7 +129,8 @@ def check_comms(*, archs=ARCHS, spans=SPANS, mesh=None,
                     entry, errs = _check_one(
                         ccfg, stacked, lane_specs, leaves, specs, mesh,
                         rvh_axes, sizes, fused_plan, plan_summary,
-                        make_combiner, local_shape, collect_collectives,
+                        make_combiner, build_delayed_correction,
+                        local_shape, collect_collectives,
                         count_merge_reshapes, trace)
                     report["plans"][key] = entry
                     violations += [f"{key}: {e}" for e in errs]
@@ -130,8 +138,9 @@ def check_comms(*, archs=ARCHS, spans=SPANS, mesh=None,
 
 
 def _check_one(ccfg, stacked, lane_specs, leaves, specs, mesh, rvh_axes,
-               sizes, fused_plan, plan_summary, make_combiner, local_shape,
-               collect_collectives, count_merge_reshapes, trace):
+               sizes, fused_plan, plan_summary, make_combiner,
+               build_delayed_correction, local_shape, collect_collectives,
+               count_merge_reshapes, trace):
     combiner = make_combiner(ccfg, mesh=mesh, dp_axes=rvh_axes,
                              leaf_specs=lane_specs)
     jaxpr = trace(combiner, stacked)
@@ -189,6 +198,40 @@ def _check_one(ccfg, stacked, lane_specs, leaves, specs, mesh, rvh_axes,
         entry["n_buckets"] = 0
         entry["n_sharded_buckets"] = 0
         entry["expected_psums"] = 0
+
+    # delayed-combine correction (combine_delay=1): the exchange that
+    # overlaps the next round's compute must be comms-identical to the
+    # synchronous combine — correction = combine(pending) - lane_mean,
+    # and the lane mean is lane-axis arithmetic, local under shard_map,
+    # so it may add NO collective and no extra psum.
+    corr = build_delayed_correction(ccfg, mesh=mesh, dp_axes=rvh_axes,
+                                    leaf_specs=lane_specs)
+    djaxpr = trace(corr, stacked)
+    dcolls = collect_collectives(djaxpr)
+    dpsums = [c for c in dcolls if c["prim"] == "psum"]
+    dothers = [c for c in dcolls if c["prim"] != "psum"]
+    dmerges = count_merge_reshapes(djaxpr)
+    if dothers:
+        kinds = sorted({c["prim"] for c in dothers})
+        errs.append(f"delayed correction emits {kinds} "
+                    f"({len(dothers)} eqns) — must be psum-only")
+    if dmerges:
+        errs.append(f"delayed correction: {dmerges} payload-merging "
+                    f"reshape(s) outside shard_map")
+    if ccfg.fused:
+        dgot = sorted(tuple(c["axes"]) for c in dpsums)
+        if dgot != want:
+            errs.append(f"delayed correction psum plan mismatch: traced "
+                        f"{dgot} != the combine's one-per-bucket-per-level "
+                        f"{want}")
+        if any(not c["manual"] for c in dpsums):
+            errs.append("delayed correction psum outside shard_map "
+                        "manual region")
+    elif dpsums:
+        errs.append(f"delayed reference correction emits {len(dpsums)} "
+                    f"explicit psum(s); collective choice belongs to GSPMD")
+    entry["delayed"] = {"psums": len(dpsums), "all_gather": len(dothers),
+                        "merge_reshapes": dmerges}
     return entry, errs
 
 
@@ -197,11 +240,13 @@ def render(report: Dict[str, Any]) -> str:
     lines = [f"comms plan @ mesh {report['meta']['mesh']}"]
     for key in sorted(report["plans"]):
         e = report["plans"][key]
+        d = e.get("delayed", {})
         lines.append(
             f"  {key:<55} levels={e['levels']} buckets={e['n_buckets']}"
             f" sharded={e['n_sharded_buckets']} psums={e['psums']}"
             f"/{e['expected_psums']} all_gather={e['all_gather']}"
-            f" merge_reshapes={e['merge_reshapes']}")
+            f" merge_reshapes={e['merge_reshapes']}"
+            f" delayed_psums={d.get('psums', '-')}")
         for b in e["buckets"]:
             lines.append(
                 f"      bucket leaves={b['leaves']:>3} dtype={b['dtype']:<9}"

@@ -19,6 +19,18 @@ the steady signature. Any drift — a recurrent leaf re-emitted in the
 compute dtype (the quietly-dense rwkv/mamba class), a shape that grew
 with position, a branch that changed a dtype — is a retrace hazard and
 fails the check. No device executes anything.
+
+The same promise holds on the train side for the delayed-combine step
+(`combine_delay=1`): the jitted step must see ONE signature at every
+step, INCLUDING the step-0 cold start, where the pending carry is the
+zeros `init_state_fn` plants (Adasum of zeros is zero — no cond, no
+second trace). `check_delayed_train` eval_shapes the delayed step from
+the init-state signature — which IS the step-0 input — and requires the
+output state to reproduce it leaf-for-leaf (a fixed point, so every
+later step sees the same signature too). The split-stream pieces
+(`local_fn` / `correction_fn` / `fold_fn`, what `DelayedCombineStream`
+runs) are held to the same bar so the overlapped execution path cannot
+diverge in trace shape from the single-program one.
 """
 from __future__ import annotations
 
@@ -30,6 +42,11 @@ import jax.numpy as jnp
 ARCHS = ("qwen3-32b", "mixtral-8x22b", "minicpm3-4b", "hymba-1.5b",
          "rwkv6-7b")
 LAYOUTS = ("paged", "dense")
+# delayed-combine train cells: one dense and one MoE preset, spans
+# filtered at runtime to those the (possibly clamped) mesh supports
+TRAIN_ARCHS = ("qwen3-32b", "moonshot-v1-16b-a3b")
+TRAIN_SPANS = (1, 2, 4)
+TRAIN_MESH = (4, 1)             # (data, model) — clamped by make_local_mesh
 
 
 def _sig(tree) -> List[Tuple[str, Tuple[int, ...], str]]:
@@ -143,9 +160,65 @@ def check_arch(arch: str, layout: str, *, max_slots: int = 4,
     }
 
 
-def check_retrace(*, archs=ARCHS, layouts=LAYOUTS
+def check_delayed_train(arch: str, span: int, mesh) -> Dict[str, Any]:
+    """One delayed-combine train cell: eval_shape the combine_delay=1
+    step on the init-state signature — which IS the step-0 cold-start
+    input (pending = zeros, same avals every round) — and require the
+    output state to reproduce it leaf-for-leaf. A signature fixed point
+    means the jitted step compiles once for step 0 and every step after.
+    The split-stream pieces (`local_fn`, `correction_fn` + `fold_fn` —
+    the overlapped execution `DelayedCombineStream` runs) are pushed
+    through the same check so the two delayed execution paths cannot
+    diverge in trace shape."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_reduced
+    from repro.engine.build import build_runtime
+    from repro.engine.config import EngineConfig
+    from repro.models import build_model
+
+    ecfg = EngineConfig.preset(arch, reduced=True)
+    rpol = dataclasses.replace(ecfg.run_policy(), combine_delay=1,
+                               span=span, accum_steps=1)
+    mcfg = get_reduced(arch)
+    model = build_model(mcfg, param_dtype=jnp.dtype(ecfg.param_dtype))
+    rt = build_runtime(model, mesh, rpol)
+
+    k = max(rpol.local_steps, 1)
+    i32 = jnp.int32
+    batch = {"tokens": jax.ShapeDtypeStruct((span * k, 16), i32),
+             "labels": jax.ShapeDtypeStruct((span * k, 16), i32)}
+
+    steady = rt.state_shapes                 # == the step-0 input state
+    out_state, _ = jax.eval_shape(rt.train_step, steady, batch)
+    transitions: List[Tuple[str, Any]] = [("delayed_step", out_state)]
+    local_out, _ = jax.eval_shape(rt.local_fn, steady, batch)
+    transitions.append(("local_step(stream)", local_out))
+    corr = jax.eval_shape(rt.correction_fn, steady["pending"])
+    folded = jax.eval_shape(rt.fold_fn, steady["params"], corr)
+
+    violations = signature_violations(steady, transitions)
+    violations += [f"fold(params, correction): {v.split(': ', 1)[-1]}"
+                   for v in signature_violations(
+                       steady["params"],
+                       [("fold(params, correction)", folded)])]
+    return {
+        "arch": arch,
+        "span": span,
+        "dp": rt.dp_total,
+        "local_steps": k,
+        "combine_path": rt.combine_path,
+        "transitions": len(transitions) + 1,     # + the fold check
+        "violations": violations,
+    }
+
+
+def check_retrace(*, archs=ARCHS, layouts=LAYOUTS,
+                  train_archs=TRAIN_ARCHS, train_spans=TRAIN_SPANS
                   ) -> Tuple[Dict[str, Any], List[str]]:
-    report: Dict[str, Any] = {"cases": {}}
+    report: Dict[str, Any] = {"cases": {}, "train": {}}
     violations: List[str] = []
     for arch in archs:
         for layout in layouts:
@@ -153,6 +226,18 @@ def check_retrace(*, archs=ARCHS, layouts=LAYOUTS
             report["cases"][f"{arch}|{layout}"] = entry
             violations += [f"{arch}|{layout}: {v}"
                            for v in entry["violations"]]
+
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh(*TRAIN_MESH)
+    sizes = dict(zip(mesh.axis_names, (int(s) for s in mesh.devices.shape)))
+    dp = sizes.get("data", 1)
+    spans = [s for s in train_spans if s <= dp and dp % s == 0] or [dp]
+    for arch in train_archs:
+        for span in spans:
+            entry = check_delayed_train(arch, span, mesh)
+            key = f"{arch}|delay=1|span={span}"
+            report["train"][key] = entry
+            violations += [f"{key}: {v}" for v in entry["violations"]]
     return report, violations
 
 
@@ -167,4 +252,14 @@ def render(report: Dict[str, Any]) -> str:
                      f"prefill={e['prefill_mode']:<8} "
                      f"transitions={e['transitions']} {status}{extra}")
         lines += [f"      {v}" for v in e["violations"]]
+    if report.get("train"):
+        lines.append("delayed train-step signatures (combine_delay=1, "
+                     "incl. step-0 cold start)")
+        for key in sorted(report["train"]):
+            e = report["train"][key]
+            status = "OK" if not e["violations"] else "FAIL"
+            lines.append(f"  {key:<40} dp={e['dp']} "
+                         f"combine={e['combine_path'] or '-':<15} "
+                         f"transitions={e['transitions']} {status}")
+            lines += [f"      {v}" for v in e["violations"]]
     return "\n".join(lines)

@@ -218,13 +218,110 @@ def _bucket_combine(a, b, s1b, s2b, block, use_pallas):
     return combine_ref(a, b, s1b, s2b, block)
 
 
+def _pack_buckets(leaves, plan):
+    """Pack (local) stacked leaves into the plan's fusion buffers, once;
+    every tree level then reads each buffer exactly once. Returns
+    (packed [n, padded_len] buffers, per-bucket metas)."""
+    packed, metas = [], []
+    for idxs, layout, block, axes in plan:
+        buf = fusion.pack_stacked([leaves[i] for i in idxs], layout)
+        block_seg = jnp.asarray(layout.segment_ids()[::block])
+        packed.append(buf)
+        metas.append((layout, block, axes, block_seg))
+    return packed, metas
+
+
+def _bucket_level_dots(buf, meta, cfg):
+    """One tree level's single-pass dot triples for one bucket buffer
+    [n, L]: both lane halves read once -> per-(pair, segment) [p, nseg1,
+    3], finished by one psum over exactly the bucket's sharding axes —
+    a single collective per bucket per level, which is the invariant the
+    comms-plan checker pins."""
+    layout, block, axes, block_seg = meta
+    p = buf.shape[0] // 2
+    L = buf.shape[1]
+    y = buf.reshape(p, 2, L)
+    a = y[:, 0].reshape(p * L)
+    b = y[:, 1].reshape(p * L)
+    nseg1 = layout.num_segments + 1     # + the padding segment
+    nblk = L // block
+    ids = (jnp.tile(block_seg, p)
+           + nseg1 * jnp.repeat(jnp.arange(p, dtype=jnp.int32), nblk))
+    v = _bucket_dots(a, b, ids, p * nseg1, block, cfg.acc,
+                     cfg.use_pallas).reshape(p, nseg1, 3)
+    if axes:
+        v = jax.lax.psum(v, axes)
+    return (a, b, ids, nblk), v
+
+
+def _bucket_chain(buf, meta, cfg):
+    """Full per-layer tree reduction of ONE bucket [n, L] -> [1, L]: a
+    self-contained chain of level ops (dots -> psum -> scalars -> FMA)
+    with no cross-bucket data dependency. The chains are what the
+    delayed-combine mode hands XLA as a restartable stream: each
+    bucket's psum chain is free to run concurrently with unrelated
+    compute — including the next step's forward/backward, since the
+    carry it consumes was produced a step earlier."""
+    n = buf.shape[0]
+    block = meta[1]
+    while n > 1:
+        (a, b, ids, _nblk), v = _bucket_level_dots(buf, meta, cfg)
+        s1, s2 = A.adasum_segment_scalars(v)     # [p, nseg1]
+        s1b = s1.reshape(-1)[ids]
+        s2b = s2.reshape(-1)[ids]
+        out = _bucket_combine(a, b, s1b, s2b, block, cfg.use_pallas)
+        n //= 2
+        buf = out.reshape(n, -1)
+    return buf
+
+
+def _whole_model_levels(packed, metas, cfg):
+    """Level-major reduction at whole-model granularity (§3.6 off):
+    every level's dot triples are summed across ALL buckets before the
+    scalars form, so bucket chains cannot run independently — the
+    synchronization price of whole-model coefficients."""
+    n = packed[0].shape[0]
+    while n > 1:
+        p = n // 2
+        halves, dots = [], []
+        for buf, meta in zip(packed, metas):
+            h, v = _bucket_level_dots(buf, meta, cfg)
+            halves.append(h)
+            dots.append(v)
+        # one dot triple per pair, summed over every bucket (padding
+        # segments contribute zeros)
+        s1w, s2w = A.adasum_segment_scalars(
+            sum(v.sum(axis=1) for v in dots))
+        new = []
+        for (a, b, ids, nblk), meta in zip(halves, metas):
+            block = meta[1]
+            s1b = jnp.repeat(s1w, nblk)
+            s2b = jnp.repeat(s2w, nblk)
+            out = _bucket_combine(a, b, s1b, s2b, block, cfg.use_pallas)
+            new.append(out.reshape(p, -1))
+        packed = new
+        n = p
+    return packed
+
+
+def _unpack_buffers(bufs, plan, leaves, treedef):
+    out_leaves: List[Any] = [None] * len(leaves)
+    for buf, (idxs, layout, _b, _a) in zip(bufs, plan):
+        res = fusion.unpack(buf.reshape(-1), layout)
+        for i, r in zip(idxs, res):
+            out_leaves[i] = r
+    return jax.tree.unflatten(treedef, out_leaves)
+
+
 def fused_combine_tree(stacked: PyTree, cfg: CombineConfig,
                        leaf_specs_flat: Optional[List] = None,
                        psum: bool = False) -> PyTree:
     """Bucketed single-pass Adasum tree reduction on (local) stacked
     leaves [n, *shape] -> [*shape]. With `psum=True` it must run inside
     shard_map manual over the mesh; each bucket's dots are finished by
-    one psum over exactly the axes its leaves are sharded over."""
+    one psum over exactly the axes its leaves are sharded over. With
+    per-layer granularity each bucket reduces as an independent chain
+    (`_bucket_chain`)."""
     leaves, treedef = jax.tree.flatten(stacked)
     if not leaves:
         return stacked
@@ -234,65 +331,89 @@ def fused_combine_tree(stacked: PyTree, cfg: CombineConfig,
     assert n & (n - 1) == 0, \
         f"fused combine needs a power-of-two lane count, got {n}"
     specs = leaf_specs_flat or [P()] * len(leaves)
-    acc = cfg.acc
     plan = fused_plan(leaves, specs, cfg, psum)
+    packed, metas = _pack_buckets(leaves, plan)
+    if cfg.per_layer:
+        packed = [_bucket_chain(buf, meta, cfg)
+                  for buf, meta in zip(packed, metas)]
+    else:
+        packed = _whole_model_levels(packed, metas, cfg)
+    return _unpack_buffers(packed, plan, leaves, treedef)
 
-    # pack once; every level then reads each buffer exactly once
-    packed, metas = [], []
-    for idxs, layout, block, axes in plan:
-        buf = fusion.pack_stacked([leaves[i] for i in idxs], layout)
-        block_seg = jnp.asarray(layout.segment_ids()[::block])
-        packed.append(buf)
-        metas.append((layout, block, axes, block_seg))
 
-    while n > 1:
-        p = n // 2
-        halves, dots = [], []
-        for buf, (layout, block, axes, block_seg) in zip(packed, metas):
-            L = buf.shape[1]
-            y = buf.reshape(p, 2, L)
-            a = y[:, 0].reshape(p * L)
-            b = y[:, 1].reshape(p * L)
-            nseg1 = layout.num_segments + 1     # + the padding segment
-            nblk = L // block
-            ids = (jnp.tile(block_seg, p)
-                   + nseg1 * jnp.repeat(jnp.arange(p, dtype=jnp.int32),
-                                        nblk))
-            v = _bucket_dots(a, b, ids, p * nseg1, block, acc,
-                             cfg.use_pallas).reshape(p, nseg1, 3)
-            if axes:
-                # one fused psum over ALL the bucket's sharding axes —
-                # a single collective per bucket per level, which is the
-                # invariant the comms-plan checker pins
-                v = jax.lax.psum(v, axes)
-            halves.append((a, b, ids, nblk))
-            dots.append(v)
-        if not cfg.per_layer:
-            # whole-model granularity: one dot triple per pair, summed
-            # over every bucket (padding segments contribute zeros)
-            s1w, s2w = A.adasum_segment_scalars(
-                sum(v.sum(axis=1) for v in dots))
-        new = []
-        for (a, b, ids, nblk), v, (layout, block, axes, _bs) in zip(
-                halves, dots, metas):
-            if cfg.per_layer:
-                s1, s2 = A.adasum_segment_scalars(v)     # [p, nseg1]
-                s1b = s1.reshape(-1)[ids]
-                s2b = s2.reshape(-1)[ids]
-            else:
-                s1b = jnp.repeat(s1w, nblk)
-                s2b = jnp.repeat(s2w, nblk)
-            out = _bucket_combine(a, b, s1b, s2b, block, cfg.use_pallas)
-            new.append(out.reshape(p, -1))
-        packed = new
-        n = p
+def fused_correction_tree(stacked: PyTree, cfg: CombineConfig,
+                          leaf_specs_flat: Optional[List] = None,
+                          psum: bool = False) -> PyTree:
+    """Delayed-combine correction on the pending-delta carry:
 
-    out_leaves: List[Any] = [None] * len(leaves)
-    for buf, (idxs, layout, _b, _a) in zip(packed, plan):
-        res = fusion.unpack(buf.reshape(-1), layout)
-        for i, r in zip(idxs, res):
-            out_leaves[i] = r
-    return jax.tree.unflatten(treedef, out_leaves)
+        correction = Adasum(deltas) - lane_mean(deltas)
+
+    `lane_mean` is the local estimate `delayed_local_step` already
+    applied when the deltas were produced; folding the correction in
+    later completes the exchange without double-counting. One packing
+    feeds both consumers (each pending buffer is read once); the tree
+    side emits exactly the psums `fused_combine_tree` does — one per
+    sharded bucket per level — and the lane mean is lane-axis
+    arithmetic, local under shard_map, no collective."""
+    leaves, treedef = jax.tree.flatten(stacked)
+    if not leaves:
+        return stacked
+    n = leaves[0].shape[0]
+    if n == 1:
+        # a single lane combines to itself: zero remote correction
+        return jax.tree.map(
+            lambda x: jnp.zeros(x.shape[1:], x.dtype), stacked)
+    assert n & (n - 1) == 0, \
+        f"fused correction needs a power-of-two lane count, got {n}"
+    specs = leaf_specs_flat or [P()] * len(leaves)
+    plan = fused_plan(leaves, specs, cfg, psum)
+    packed, metas = _pack_buckets(leaves, plan)
+    means = [buf.astype(cfg.acc).mean(axis=0).astype(buf.dtype)
+             for buf in packed]
+    if cfg.per_layer:
+        combined = [_bucket_chain(buf, meta, cfg)
+                    for buf, meta in zip(packed, metas)]
+    else:
+        combined = _whole_model_levels(packed, metas, cfg)
+    diffs = [c.reshape(-1) - m for c, m in zip(combined, means)]
+    return _unpack_buffers(diffs, plan, leaves, treedef)
+
+
+def _build_fused(cfg: CombineConfig, mesh, dp_axes, leaf_specs, tree_fn
+                 ) -> Optional[Callable[[PyTree], PyTree]]:
+    dp_total = 1
+    if mesh is not None and dp_axes:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dp_total = int(np.prod([sizes[a] for a in dp_axes]))
+    if dp_total > 1 and cfg.span in (0, dp_total):
+        return None
+    # shard_map (pack local shards, explicit psums) only pays off — and is
+    # only safe to pin — when the caller described the payload sharding;
+    # otherwise run with global semantics and let GSPMD partition.
+    use_shard_map = mesh is not None and leaf_specs is not None
+
+    def run(stacked: PyTree) -> PyTree:
+        leaves, treedef = jax.tree.flatten(stacked)
+        if not leaves:
+            return stacked
+        if leaf_specs is not None:
+            specs = [s or P() for s in treedef.flatten_up_to(leaf_specs)]
+        else:
+            specs = [P()] * len(leaves)
+        if not use_shard_map:
+            return tree_fn(stacked, cfg, specs, psum=False)
+        from .rvh import _shard_map_compat
+        in_specs = jax.tree.unflatten(
+            treedef, [P(None, *tuple(s)) for s in specs])
+        out_specs = jax.tree.unflatten(
+            treedef, [P(*tuple(s)) for s in specs])
+
+        def body(tree):
+            return tree_fn(tree, cfg, specs, psum=True)
+
+        return _shard_map_compat(body, mesh, (in_specs,), out_specs)(stacked)
+
+    return run
 
 
 def build_fused_combiner(cfg: CombineConfig, *, mesh=None,
@@ -307,39 +428,55 @@ def build_fused_combiner(cfg: CombineConfig, *, mesh=None,
     devices — that regime belongs to the rvh backend (or the per-leaf
     reference tree, which lets GSPMD pick the collectives).
     """
-    dp_total = 1
-    if mesh is not None and dp_axes:
-        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-        dp_total = int(np.prod([sizes[a] for a in dp_axes]))
-    if dp_total > 1 and cfg.span in (0, dp_total):
-        return None
-    # shard_map (pack local shards, explicit psums) only pays off — and is
-    # only safe to pin — when the caller described the payload sharding;
-    # otherwise run with global semantics and let GSPMD partition.
-    use_shard_map = mesh is not None and leaf_specs is not None
+    return _build_fused(cfg, mesh, dp_axes, leaf_specs, fused_combine_tree)
 
-    def combine(stacked: PyTree) -> PyTree:
-        leaves, treedef = jax.tree.flatten(stacked)
-        if not leaves:
-            return stacked
-        if leaf_specs is not None:
-            specs = [s or P() for s in treedef.flatten_up_to(leaf_specs)]
-        else:
-            specs = [P()] * len(leaves)
-        if not use_shard_map:
-            return fused_combine_tree(stacked, cfg, specs, psum=False)
-        from .rvh import _shard_map_compat
-        in_specs = jax.tree.unflatten(
-            treedef, [P(None, *tuple(s)) for s in specs])
-        out_specs = jax.tree.unflatten(
-            treedef, [P(*tuple(s)) for s in specs])
 
-        def body(tree):
-            return fused_combine_tree(tree, cfg, specs, psum=True)
+def build_fused_correction(cfg: CombineConfig, *, mesh=None,
+                           dp_axes: Sequence[str] = (),
+                           leaf_specs: Optional[PyTree] = None
+                           ) -> Optional[Callable[[PyTree], PyTree]]:
+    """`build_fused_combiner`'s delayed-mode sibling: the same bucketed
+    shard_map program shape, but computing `fused_correction_tree`
+    (combined minus lane mean) from one packing of the pending carry.
+    None under the same span == dp condition."""
+    return _build_fused(cfg, mesh, dp_axes, leaf_specs,
+                        fused_correction_tree)
 
-        return _shard_map_compat(body, mesh, (in_specs,), out_specs)(stacked)
 
-    return combine
+def lane_mean(stacked: PyTree, acc_dtype=jnp.float32) -> PyTree:
+    """Mean over the leading lane axis — the delayed mode's immediate
+    local estimate. Must compute exactly the mean the correction
+    subtracts (same acc dtype), or the exchange would drift."""
+    return jax.tree.map(
+        lambda x: jnp.mean(x.astype(acc_dtype), axis=0).astype(x.dtype),
+        stacked)
+
+
+def build_delayed_correction(cfg: CombineConfig, *, mesh=None,
+                             dp_axes: Sequence[str] = (),
+                             leaf_specs: Optional[PyTree] = None
+                             ) -> Callable[[PyTree], PyTree]:
+    """The delayed-combine exchange: correction(pending) =
+    combine(pending) - lane_mean(pending). Takes the fused bucketed path
+    whenever `build_fused_combiner` would (same plan, same psums), else
+    wraps whichever combiner the registry resolves for the config —
+    correctness never depends on fusion."""
+    if (cfg.op == "adasum" and cfg.fused
+            and cfg.backend in ("", "gspmd_tree", "fused")):
+        fused = build_fused_correction(cfg, mesh=mesh, dp_axes=dp_axes,
+                                       leaf_specs=leaf_specs)
+        if fused is not None:
+            return fused
+    from repro.engine.registry import make_combiner
+    combiner = make_combiner(cfg, mesh=mesh, dp_axes=dp_axes,
+                             leaf_specs=leaf_specs)
+
+    def correction(pending: PyTree) -> PyTree:
+        combined = combiner(pending)
+        local = lane_mean(pending, cfg.acc)
+        return jax.tree.map(lambda c, l: c - l, combined, local)
+
+    return correction
 
 
 def build_combiner(cfg: CombineConfig, *, mesh=None, dp_axes: Sequence[str] = (),

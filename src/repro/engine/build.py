@@ -19,6 +19,16 @@ train_step anatomy (paper Fig. 3 + §4):
 `local_steps > 1` reproduces §5.2 (TensorFlow ResNet-50 on slow TCP):
 each lane performs k *local* optimizer steps and the combined quantity is
 the model delta since the last sync.
+
+`combine_delay = 1` (DaSGD-style, Zhou et al.) turns that sync from a
+barrier into a background stream: round i launches the Adasum exchange
+for round i-1's deltas (no data dependency on round i's batch, so XLA
+overlaps the per-bucket psum chains with forward/backward), applies the
+lane-mean delta immediately, and folds the combined remote correction —
+`Adasum(deltas) - lane_mean(deltas)` — into the params at the end of the
+round. The in-flight carry lives in `state["pending"]`, so checkpoints
+capture it and an (elastic) restart replays the pending exchange instead
+of dropping or double-applying it.
 """
 from __future__ import annotations
 
@@ -64,6 +74,15 @@ class Runtime:
     init_state: Callable
     lane_specs: PyTree = None    # payload sharding of one lane's tensors
     gspecs: PyTree = None        # stacked [span, ...] gradient specs
+    combine_path: str = ""       # the combiner implementation that will
+                                 # actually run (e.g. 'gspmd-fused' vs
+                                 # 'gspmd-reference' after a fallback)
+    # delayed-combine split pieces (combine_delay > 0 only): train_step
+    # == fold(local_fn, correction_fn(pending)); DelayedCombineStream
+    # runs correction_fn on a host thread for observable overlap
+    correction_fn: Optional[Callable] = None
+    local_fn: Optional[Callable] = None
+    fold_fn: Optional[Callable] = None
 
 
 def _dp_axes(mesh: jax.sharding.Mesh, tp_axis: str) -> Tuple[str, ...]:
@@ -177,6 +196,11 @@ def build_runtime(model: Model, mesh: jax.sharding.Mesh, rpol: RunPolicy,
     ccfg = _resolve_combine_cfg(rpol, span, dp_total, combine, strict)
     # RVH lane order: innermost mesh axis first (adjacent ranks pair first)
     rvh_axes = tuple(reversed(dp_axes))
+    delayed = rpol.combine_delay > 0
+    assert not (delayed and rpol.accum_steps > 1), (
+        "combine_delay needs accum_steps == 1 (the delayed path combines "
+        "per-lane optimizer-step deltas; EngineConfig.validate enforces "
+        "this at the config layer)")
 
     lane_specs, gspecs = plan_lane_specs(cfg, pshapes, spol, rpol,
                                          span, dp_total, dp_axes)
@@ -206,8 +230,18 @@ def build_runtime(model: Model, mesh: jax.sharding.Mesh, rpol: RunPolicy,
     # ---- state shapes + shardings ----
     def init_state_fn(key):
         params = model.init(key)
-        return {"params": params, "opt": dopt.init(params),
-                "step": jnp.zeros((), jnp.int32)}
+        state = {"params": params, "opt": dopt.init(params),
+                 "step": jnp.zeros((), jnp.int32)}
+        if delayed:
+            # the in-flight exchange carry: the previous round's stacked
+            # lane deltas. Zeros before the first round — Adasum and the
+            # lane mean of zeros are both zero (EPS regularization), so
+            # the step-0 correction is exactly zero with no cold-start
+            # branch in the trace.
+            state["pending"] = jax.tree.map(
+                lambda p: jnp.zeros((span,) + p.shape, jnp.float32),
+                params)
+        return state
 
     state_shapes = jax.eval_shape(init_state_fn, jax.random.key(0))
     # ZeRO-1: optimizer state always (further) scattered over data
@@ -218,8 +252,14 @@ def build_runtime(model: Model, mesh: jax.sharding.Mesh, rpol: RunPolicy,
             lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), inner_shapes)
         if span == dp_total:
             # one state per DP rank, living with its lane (paper: per-node
-            # optimizer state) — the lane axis IS the distribution.
-            ospecs = param_specs(cfg, drop_lane, spol)
+            # optimizer state) — the lane axis IS the distribution, so the
+            # payload must not also be FSDP-sharded over dp (same
+            # NamedSharding one-axis-one-dim rule plan_lane_specs pins
+            # for the lane tensors; with fsdp on, the unstripped spec
+            # would name `data` twice).
+            ospecs = jax.tree.map(
+                lambda s: _drop_axes(s, set(dp_axes)),
+                param_specs(cfg, drop_lane, spol))
             lane_entry = tuple(dp_axes)   # pod-major lane index (RVH layout)
         else:
             # lanes replicated; ZeRO-1-scatter the state over `data`.
@@ -231,6 +271,12 @@ def build_runtime(model: Model, mesh: jax.sharding.Mesh, rpol: RunPolicy,
     state_specs = {"params": pspecs,
                    "opt": {"inner": ospecs, "step": P()},
                    "step": P()}
+    if delayed:
+        # pending deltas are lane-stacked like gradients; checkpoints
+        # save/restore them with the rest of the state, and the restore
+        # path's reshard_lanes handles a span change across an elastic
+        # restart (the pending exchange is replayed, never dropped)
+        state_specs["pending"] = gspecs
 
     init_state = jax.jit(init_state_fn,
                          out_shardings=to_shardings(state_specs))
@@ -290,10 +336,14 @@ def build_runtime(model: Model, mesh: jax.sharding.Mesh, rpol: RunPolicy,
                      "step": state["step"] + 1}
         return new_state, metrics
 
-    def local_sgd_step(state, batch):
-        """Paper §5.2: k local optimizer steps, then Adasum of the deltas."""
-        params = state["params"]
-        k = rpol.local_steps
+    def local_deltas(params, opt_state, batch):
+        """Per-lane local optimizer deltas (paper §5.2): each lane takes
+        k = local_steps optimizer steps on its own microbatches. Returns
+        (fp32 deltas [span, ...], new inner state, metrics) — the
+        metrics carry the mean of the FULL loss dict out of the scan, so
+        local-step runs log the same keys sync_step does (the old path
+        reported aux as a constant zero)."""
+        k = max(rpol.local_steps, 1)
         lanes = split_lanes(batch)   # [span, B/span, ...]
         rows = jax.tree.leaves(lanes)[0].shape[1]
         assert rows % k == 0 and rows >= k, (
@@ -310,39 +360,95 @@ def build_runtime(model: Model, mesh: jax.sharding.Mesh, rpol: RunPolicy,
                 d, oi = dopt.opt.update(g, oi, p, step)
                 p = jax.tree.map(lambda a, b: (a.astype(jnp.float32)
                                                + b).astype(a.dtype), p, d)
-                return (p, oi, step + 1), mets["loss"]
-            (p_end, oi, _), losses = jax.lax.scan(
-                body, (params, opt_inner, state["opt"]["step"]), lane_batch)
+                return (p, oi, step + 1), mets
+            (p_end, oi, _), mets = jax.lax.scan(
+                body, (params, opt_inner, opt_state["step"]), lane_batch)
             delta = jax.tree.map(
                 lambda e, s: e.astype(jnp.float32) - s.astype(jnp.float32),
                 p_end, params)
-            return delta, oi, jnp.mean(losses)
+            return delta, oi, jax.tree.map(jnp.mean, mets)
 
-        micro_lanes = micro    # [span, k, micro_b, ...]: vmap span, scan k
+        # micro is [span, k, micro_b, ...]: vmap span, scan k
         if span > 1 and dopt.point == "post":
-            deltas, inner, losses = jax.vmap(one_lane)(
-                micro_lanes, state["opt"]["inner"])
+            deltas, inner, mets = jax.vmap(one_lane)(
+                micro, opt_state["inner"])
         else:
             inner_b = jax.tree.map(
                 lambda x: jnp.broadcast_to(x, (span,) + x.shape),
-                state["opt"]["inner"])
-            deltas, inner, losses = jax.vmap(one_lane)(micro_lanes, inner_b)
+                opt_state["inner"])
+            deltas, inner, mets = jax.vmap(one_lane)(micro, inner_b)
             inner = jax.tree.map(lambda x: x[0], inner)
+        metrics = {name: jnp.mean(v) for name, v in mets.items()}
+        metrics["grad_lanes"] = jnp.asarray(span, jnp.int32)
+        return deltas, inner, metrics
+
+    def local_sgd_step(state, batch):
+        """Paper §5.2: k local optimizer steps, then Adasum of the deltas."""
+        deltas, inner, metrics = local_deltas(
+            state["params"], state["opt"], batch)
         delta = combiner(deltas)
-        new_params = dopt.apply(params, delta)
+        new_params = dopt.apply(state["params"], delta)
         new_state = {"params": new_params,
                      "opt": {"inner": inner,
-                             "step": state["opt"]["step"] + k},
+                             "step": state["opt"]["step"] + rpol.local_steps},
                      "step": state["step"] + 1}
-        return new_state, {"loss": jnp.mean(losses),
-                           "aux": jnp.zeros((), jnp.float32),
-                           "grad_lanes": jnp.asarray(span, jnp.int32)}
+        return new_state, metrics
 
-    step_fn = local_sgd_step if rpol.local_steps > 1 else sync_step
+    # ---- delayed combine (combine_delay = 1, DaSGD-style) ----
+    correction_fn = local_only_step = delayed_local_step = None
+    if delayed:
+        from repro.core.combine import build_delayed_correction, lane_mean
+        correction_fn = build_delayed_correction(
+            ccfg, mesh=mesh, dp_axes=rvh_axes, leaf_specs=lane_specs)
+
+        def local_only_step(state, batch):
+            """The compute half of a delayed round: k local optimizer
+            steps per lane, the lane-mean delta applied immediately, and
+            the stacked deltas parked as the next round's pending carry.
+            The pending correction is NOT consumed here — pair with
+            `correction_fn` + `fold_fn` (what both `delayed_local_step`
+            and DelayedCombineStream do)."""
+            deltas, inner, metrics = local_deltas(
+                state["params"], state["opt"], batch)
+            local = lane_mean(deltas, ccfg.acc)
+            new_params = dopt.apply(state["params"], local)
+            new_state = {"params": new_params,
+                         "opt": {"inner": inner,
+                                 "step": state["opt"]["step"]
+                                 + max(rpol.local_steps, 1)},
+                         "step": state["step"] + 1,
+                         "pending": deltas}
+            return new_state, metrics
+
+        def delayed_local_step(state, batch):
+            """One-round-delayed Adasum: the exchange of the PREVIOUS
+            round's deltas (state['pending']) is traced before this
+            round's forward/backward and has no data dependency on the
+            batch, so XLA schedules its per-bucket psum chains
+            concurrently with compute. The lane-mean delta applies
+            immediately; the remote correction (combined minus that
+            mean) folds into the params at the end of the round, i.e.
+            the round AFTER its deltas were produced. Step 0 cold-starts
+            on a zero carry — the correction is exactly zero with the
+            same trace signature, no cond (the retrace pass pins this)."""
+            corr = correction_fn(state["pending"])
+            new_state, metrics = local_only_step(state, batch)
+            new_state["params"] = dopt.apply(new_state["params"], corr)
+            return new_state, metrics
+
+    if delayed:
+        step_fn = delayed_local_step
+    elif rpol.local_steps > 1:
+        step_fn = local_sgd_step
+    else:
+        step_fn = sync_step
 
     return Runtime(model, mesh, spol, rpol, dp_axes, dp_total, span, pspecs,
                    state_shapes, state_specs, step_fn, init_state,
-                   lane_specs=lane_specs, gspecs=gspecs)
+                   lane_specs=lane_specs, gspecs=gspecs,
+                   combine_path=getattr(combiner, "combine_path", ""),
+                   correction_fn=correction_fn, local_fn=local_only_step,
+                   fold_fn=dopt.apply if delayed else None)
 
 
 def make_serve_step(model: Model, greedy: bool = True):

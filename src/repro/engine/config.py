@@ -57,6 +57,10 @@ class EngineConfig:
     optimizer: str = "adam"
     lr: float = 1e-3
     local_steps: int = 1        # paper §5.2 local-SGD steps per sync
+    combine_delay: int = 0      # 0 = synchronous combine (bitwise today's
+                                # behavior); 1 = DaSGD-style delayed mode:
+                                # round i-1's delta exchange overlaps round
+                                # i's compute, correction lands at i+1
     accum_steps: int = 1        # microbatch gradient accumulation (§2.2)
     accum_dtype: str = "float32"
     opt_state_dtype: str = "float32"
@@ -140,6 +144,16 @@ class EngineConfig:
         if self.local_steps > 1 and self.accum_steps > 1:
             raise ValueError("local_steps and accum_steps are mutually "
                              "exclusive (both reshape the lane batch)")
+        if self.combine_delay not in (0, 1):
+            raise ValueError(
+                f"combine_delay must be 0 (synchronous) or 1 (DaSGD-style "
+                f"one-round delayed exchange), got {self.combine_delay}")
+        if self.combine_delay and self.accum_steps > 1:
+            raise ValueError(
+                "combine_delay and accum_steps are mutually exclusive: "
+                "the delayed path combines per-lane optimizer-step deltas "
+                "(local_steps semantics), not accumulated raw gradients — "
+                "use local_steps to amortize syncs instead")
         if self.data_kind == "memmap" and not self.data_path:
             raise ValueError("data_kind='memmap' needs data_path")
         if self.elastic and not self.ckpt_dir:
@@ -242,6 +256,7 @@ class EngineConfig:
             backend=self.backend,
             optimizer=self.optimizer,
             param_dtype=self.param_dtype, local_steps=self.local_steps,
+            combine_delay=self.combine_delay,
             combine_op=self.combine, attn_chunk=self.attn_chunk,
             accum_steps=self.accum_steps, accum_dtype=self.accum_dtype,
             opt_state_dtype=self.opt_state_dtype, pad_heads=self.pad_heads,
@@ -285,6 +300,11 @@ class EngineConfig:
         ap.add_argument("--span", type=int, default=None)
         ap.add_argument("--local-steps", type=int, default=None,
                         dest="local_steps")
+        ap.add_argument("--combine-delay", type=int, default=None,
+                        dest="combine_delay", choices=[0, 1],
+                        help="1 = DaSGD-style delayed combine: the Adasum "
+                        "exchange for the previous round's deltas overlaps "
+                        "this round's compute (slow-interconnect mode)")
         ap.add_argument("--accum-steps", type=int, default=None,
                         dest="accum_steps")
         ap.add_argument("--no-per-layer", action="store_true",

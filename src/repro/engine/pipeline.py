@@ -116,8 +116,15 @@ class StepPipeline:
                 # dt covers batch wait + device step: the quantity the
                 # overlap hides and the straggler monitor should judge
                 dt = time.perf_counter() - t0
-                history.append({"step": step, "loss": metrics["loss"],
-                                "s": dt})
+                row = {"step": step, "loss": metrics["loss"], "s": dt}
+                # delayed-combine split accounting (combine_delay runs
+                # through a DelayedCombineStream): how much of the step
+                # was compute vs waiting on the exchange — the overlap
+                # is observable per step, not just in aggregate
+                for key in ("compute_s", "combine_wait_s"):
+                    if key in metrics:
+                        row[key] = metrics[key]
+                history.append(row)
                 for cb in s.callbacks:
                     cb.on_step_end(s, step, metrics, dt)
                 if s.config.elastic and self._flagged_monitors():

@@ -84,10 +84,22 @@ def registry_key(op: str, backend: str = "") -> str:
 def make_combiner(cfg: CombineConfig, *, mesh=None,
                   dp_axes: Sequence[str] = (),
                   leaf_specs: Optional[PyTree] = None) -> Combiner:
-    """Registry-dispatched replacement for core.combine.build_combiner."""
-    factory = get_combiner_factory(registry_key(cfg.op, cfg.backend))
-    return factory(cfg, mesh=mesh, dp_axes=tuple(dp_axes),
-                   leaf_specs=leaf_specs)
+    """Registry-dispatched replacement for core.combine.build_combiner.
+
+    Every returned combiner carries a `combine_path` attribute naming
+    the implementation that will actually run (e.g. 'gspmd-fused' vs
+    'gspmd-reference') — the run-metadata hook benchmarks record, since
+    the registry key alone can hide a fallback."""
+    key = registry_key(cfg.op, cfg.backend)
+    factory = get_combiner_factory(key)
+    combiner = factory(cfg, mesh=mesh, dp_axes=tuple(dp_axes),
+                       leaf_specs=leaf_specs)
+    if not hasattr(combiner, "combine_path"):
+        try:
+            combiner.combine_path = key
+        except AttributeError:      # exotic callables (partial, C ext)
+            pass
+    return combiner
 
 
 # --------------------------------------------------------------- built-ins
@@ -106,15 +118,28 @@ def _mean(cfg, *, mesh=None, dp_axes=(), leaf_specs=None):
 def _adasum_gspmd(cfg, *, mesh=None, dp_axes=(), leaf_specs=None):
     """Default backend: bucketed single-pass fused combine (cfg.fused,
     default on), falling back to the per-leaf reference tree when fusion
-    cannot apply (lane axis device-sharded: span == dp) or is opted out
-    (cfg.fused=False / EngineConfig.fused_combine=False)."""
+    cannot apply (lane axis device-sharded: span == dp — warned, like
+    the rvh fallback) or is opted out (cfg.fused=False /
+    EngineConfig.fused_combine=False)."""
     if cfg.fused:
         fused = build_fused_combiner(cfg, mesh=mesh, dp_axes=dp_axes,
                                      leaf_specs=leaf_specs)
         if fused is not None:
+            fused.combine_path = "gspmd-fused"
             return fused
+        import warnings
+        from repro.engine.build import EngineWarning
+        warnings.warn(
+            "fused combine requested but span == dp: the lane axis is "
+            "device-sharded (RVH layout), so local adjacent-lane pairing "
+            "would cross devices — running the per-leaf reference tree "
+            "instead. Use backend='rvh' (paper Algorithm 1) for the "
+            "bandwidth-optimal one-lane-per-rank path, or span < dp for "
+            "the fused hierarchical path.", EngineWarning, stacklevel=3)
     fn = tree_combine_per_layer if cfg.per_layer else tree_combine_whole
-    return lambda stacked: fn(stacked, cfg.acc)
+    ref = lambda stacked: fn(stacked, cfg.acc)
+    ref.combine_path = "gspmd-reference"
+    return ref
 
 
 @register_combiner("adasum-fused")
@@ -129,6 +154,7 @@ def _adasum_fused(cfg, *, mesh=None, dp_axes=(), leaf_specs=None):
             "adasum-fused: the lane axis is device-sharded (one lane per "
             "DP rank); use backend='rvh' (paper Algorithm 1) or "
             "backend='gspmd_tree' there")
+    fused.combine_path = "gspmd-fused"
     return fused
 
 

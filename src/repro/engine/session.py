@@ -137,6 +137,7 @@ class TrainSession:
         self.checkpoint = checkpoint
         self.state: PyTree = runtime.init_state(jax.random.key(0))
         self._step_fn = jax.jit(runtime.train_step, donate_argnums=(0,))
+        self._delayed_stream = None   # set by use_delayed_stream()
 
     # ------------------------------------------------------------ construction
     @classmethod
@@ -183,6 +184,38 @@ class TrainSession:
         return cls(config, model, mesh, runtime, source,
                    callbacks=callbacks, checkpoint=ckpt)
 
+    # -------------------------------------------------------------- metadata
+    def run_metadata(self) -> Dict[str, Any]:
+        """What actually ran — the resolved (post-fallback) combine path
+        plus the run's topology. Benchmarks record this next to their
+        numbers so a 'fused' result can't silently come from the
+        reference tree (the span == dp fallback)."""
+        sizes = dict(zip(self.mesh.axis_names,
+                         (int(s) for s in self.mesh.devices.shape)))
+        rt = self.runtime
+        return {"arch": self.config.arch or self.model.cfg.name,
+                "combine": self.config.combine,
+                "backend": self.config.backend,
+                "combine_path": rt.combine_path,
+                "span": rt.span,
+                "dp": rt.dp_total,
+                "local_steps": self.config.local_steps,
+                "combine_delay": self.config.combine_delay,
+                "devices": int(self.mesh.devices.size),
+                "mesh": sizes}
+
+    def use_delayed_stream(self, comm_delay: float = 0.0):
+        """Route steps through a host-level `DelayedCombineStream`: the
+        pending-delta exchange runs on a background thread (optionally
+        behind `comm_delay` seconds of injected interconnect latency)
+        while the local step computes, and metrics gain compute_s /
+        combine_wait_s. Bitwise-identical states to the default
+        single-program delayed step. Needs combine_delay=1."""
+        from repro.runtime import DelayedCombineStream
+        self._delayed_stream = DelayedCombineStream(
+            self.runtime, comm_delay=comm_delay)
+        return self._delayed_stream
+
     # ------------------------------------------------------------------ steps
     def batch(self, step: int) -> Dict[str, jnp.ndarray]:
         """The deterministic batch for `step` (pure function of config)."""
@@ -195,7 +228,11 @@ class TrainSession:
         the deterministic batch for the current step counter."""
         if batch is None:
             batch = self.batch(int(jax.device_get(self.state["step"])))
-        self.state, metrics = self._step_fn(self.state, batch)
+        if self._delayed_stream is not None:
+            self.state, metrics = self._delayed_stream.step(self.state,
+                                                            batch)
+        else:
+            self.state, metrics = self._step_fn(self.state, batch)
         return {k: float(jax.device_get(v)) for k, v in metrics.items()}
 
     def fit(self, steps: Optional[int] = None) -> List[Dict[str, float]]:
@@ -229,8 +266,12 @@ class TrainSession:
         return path
 
     def close(self):
-        """Release background resources (the async checkpoint writer).
-        The session is done after this — a later save would fail."""
+        """Release background resources (the async checkpoint writer and
+        the delayed-combine exchange thread). The session is done after
+        this — a later save would fail."""
+        if self._delayed_stream is not None:
+            self._delayed_stream.close()
+            self._delayed_stream = None
         if self.checkpoint is not None:
             close = getattr(self.checkpoint, "close", None)
             if close is not None:
@@ -242,7 +283,17 @@ class TrainSession:
         assert self.checkpoint is not None, "no ckpt_dir configured"
         if self.checkpoint.latest_step() is None and step is None:
             return 0
-        self.state = self.checkpoint.restore(self.state, step)
+        # Re-place restored leaves on the live state's shardings: the
+        # manifest hands back host-local arrays, and stepping from those
+        # compiles a single-device executable whose reduction order
+        # differs from the mesh-sharded one — resume would drift from
+        # the uninterrupted run by float rounding every step.
+        template = self.state
+        restored = self.checkpoint.restore(template, step)
+        self.state = jax.tree.map(
+            lambda v, old: (jax.device_put(v, old.sharding)
+                            if hasattr(old, "sharding") else v),
+            restored, template)
         start = int(jax.device_get(self.state["step"]))
         print(f"[train] resumed from step {start}")
         return start

@@ -23,6 +23,9 @@ class RunPolicy:
     optimizer: str = "adam"
     param_dtype: str = "float32"
     local_steps: int = 1        # paper §5.2: local SGD steps per allreduce
+    combine_delay: int = 0      # DaSGD-style delayed combine: the Adasum
+                                # exchange for round i-1's deltas overlaps
+                                # round i's compute (0 = synchronous)
     combine_op: str = "adasum"
     attn_chunk: int = 512
     accum_steps: int = 1        # microbatch gradient accumulation (§2.2):

@@ -2,3 +2,4 @@ from .monitor import (StepMonitor, StragglerConfig, FailureInjector,
                       NodeLossError, next_power_of_two_below)
 from .prefetch import DelayedSource, Prefetcher
 from .elastic import ElasticPlan, RestartSignal, plan_shrink
+from .delayed import DelayedCombineStream

@@ -1,0 +1,119 @@
+"""Host-level delayed-combine executor (combine_delay = 1).
+
+The single-program `delayed_local_step` already lets XLA overlap the
+pending-delta exchange with compute *inside* one dispatch. This module
+is the split-execution variant: the exchange runs as its own dispatch on
+a background thread while the main thread runs the local step, which
+
+  * makes the overlap observable — per-step accounting splits
+    `combine_wait_s` (time blocked on the exchange after compute
+    finished) from `compute_s` (the local step itself);
+  * lets a benchmark inject interconnect latency into the exchange leg
+    only (`comm_delay`), emulating the paper's §5.2 slow-interconnect
+    regime on a fast host.
+
+Bitwise contract: `stream.step(state, batch)` produces exactly the same
+state as the fused single-program step — same sub-computations
+(`correction_fn`, `local_fn`, `fold_fn` from the Runtime), same apply
+order (local mean first, remote correction second). The stream jits are
+non-donating: the background thread holds a reference to the pending
+carry while the main thread's local step runs, so donating either input
+would be a use-after-free hazard.
+"""
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+PyTree = Any
+
+
+class DelayedCombineStream:
+    """Runs a Runtime's delayed-combine round as two overlapped legs.
+
+    Usage (TrainSession wires this up via `use_delayed_stream`):
+
+        stream = DelayedCombineStream(runtime, comm_delay=0.05)
+        state, metrics = stream.step(state, batch)   # == train_step(...)
+
+    `metrics` gains two host-side floats: `compute_s` (local-step wall
+    time) and `combine_wait_s` (extra wait for the exchange after the
+    local step finished — ~0 when the overlap hides it).
+    """
+
+    def __init__(self, runtime, *, comm_delay: float = 0.0):
+        if runtime.correction_fn is None or runtime.local_fn is None:
+            raise ValueError(
+                "DelayedCombineStream needs a delayed-mode Runtime "
+                "(EngineConfig.combine_delay=1): correction_fn/local_fn "
+                "are only built then")
+        self.runtime = runtime
+        self.comm_delay = float(comm_delay)
+        self._corr = jax.jit(runtime.correction_fn)
+        self._local = jax.jit(runtime.local_fn)
+        self._fold = jax.jit(runtime.fold_fn)
+        self._pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="repro-delayed-combine")
+        self.last_compute_s = 0.0
+        self.last_combine_wait_s = 0.0
+
+    # ------------------------------------------------------------- exchange
+    def _exchange(self, pending: PyTree) -> PyTree:
+        """The background leg: injected interconnect latency + the
+        correction dispatch, blocked to completion so `combine_wait_s`
+        measures real readiness, not async-dispatch queueing."""
+        if self.comm_delay > 0:
+            time.sleep(self.comm_delay)
+        corr = self._corr(pending)
+        jax.block_until_ready(corr)
+        return corr
+
+    def combine_time(self, pending: PyTree) -> float:
+        """Standalone wall time (s) of one exchange — the quantity the
+        overlap is supposed to hide (benchmark baseline)."""
+        t0 = time.perf_counter()
+        self._exchange(pending)
+        return time.perf_counter() - t0
+
+    # ----------------------------------------------------------------- step
+    def step(self, state: PyTree, batch: Dict[str, Any]
+             ) -> Tuple[PyTree, Dict[str, Any]]:
+        t0 = time.perf_counter()
+        fut = self._pool.submit(self._exchange, state["pending"])
+        new_state, metrics = self._local(state, batch)
+        jax.block_until_ready(new_state)
+        t1 = time.perf_counter()
+        corr = fut.result()
+        t2 = time.perf_counter()
+        new_state = dict(new_state)
+        new_state["params"] = self._fold(new_state["params"], corr)
+        self.last_compute_s = t1 - t0
+        self.last_combine_wait_s = t2 - t1
+        metrics = dict(metrics)
+        metrics["compute_s"] = self.last_compute_s
+        metrics["combine_wait_s"] = self.last_combine_wait_s
+        return new_state, metrics
+
+    def serial_step(self, state: PyTree, batch: Dict[str, Any]
+                    ) -> Tuple[PyTree, Dict[str, Any]]:
+        """The same round with the exchange run inline BEFORE the local
+        step (no background thread) — the no-overlap baseline the
+        benchmark compares against. Bitwise-identical output."""
+        t0 = time.perf_counter()
+        corr = self._exchange(state["pending"])
+        t1 = time.perf_counter()
+        new_state, metrics = self._local(state, batch)
+        jax.block_until_ready(new_state)
+        t2 = time.perf_counter()
+        new_state = dict(new_state)
+        new_state["params"] = self._fold(new_state["params"], corr)
+        metrics = dict(metrics)
+        metrics["compute_s"] = t2 - t1
+        metrics["combine_wait_s"] = t1 - t0
+        return new_state, metrics
+
+    def close(self):
+        self._pool.shutdown(wait=True)

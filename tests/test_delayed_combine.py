@@ -1,0 +1,298 @@
+"""Delayed-combine (combine_delay=1) tests: the overlapped execution
+mode and everything that rode along with it — the combine_delay=0
+no-op contract, the split-stream executor's bitwise equality to the
+single-program step, checkpoint/elastic restart of the in-flight
+pending carry, the span==dp fused-fallback warning + combine_path
+surfacing, real aux metrics out of the local-step scan, and the
+benchmark history topology fields."""
+import json
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import run_in_subprocess
+
+from repro.engine import EngineConfig
+
+
+# ------------------------------------------------- combine_delay=0 contract
+
+def test_delay0_bitwise_noop_across_spans_and_points():
+    """combine_delay=0 must leave the synchronous paths exactly as they
+    were: no pending carry, no delayed machinery, and bitwise-reproducible
+    states across independently built sessions, for every span and both
+    combine points."""
+    run_in_subprocess(r"""
+import jax, numpy as np
+from repro.configs.base import ModelConfig
+from repro.engine import EngineConfig, TrainSession
+from repro.models import build_model
+from repro.launch.mesh import make_mesh_compat
+
+mcfg = ModelConfig("tiny", "dense", 2, 32, 2, 1, 64, 97, head_dim=16)
+model = build_model(mcfg, attn_chunk=16)
+mesh = make_mesh_compat((8, 1), ("data", "model"))
+for span in (2, 4, 8):
+    for point in ("pre", "post"):
+        cfg = EngineConfig(combine="adasum", backend="gspmd_tree",
+                           span=span, combine_point=point,
+                           optimizer="adam", seq_len=16, global_batch=16,
+                           data_seed=3, combine_delay=0)
+        states = []
+        for _ in range(2):
+            sess = TrainSession.from_config(cfg, model=model, mesh=mesh,
+                                            callbacks=[])
+            assert "pending" not in sess.state, (span, point)
+            assert sess.runtime.correction_fn is None
+            assert sess.runtime.local_fn is None
+            for s in range(3):
+                sess.step(sess.batch(s))
+            states.append(jax.device_get(sess.state["params"]))
+            sess.close()
+        a, b = states
+        for (p, x), (_, y) in zip(
+                jax.tree_util.tree_flatten_with_path(a)[0],
+                jax.tree_util.tree_flatten_with_path(b)[0]):
+            assert (np.asarray(x) == np.asarray(y)).all(), (span, point, p)
+print("OK")
+""", devices=8, timeout=900)
+
+
+# ----------------------------------------- delayed execution paths, bitwise
+
+def test_delayed_paths_bitwise_and_cold_start_zero():
+    """The three executions of a delayed round — single-program
+    `delayed_local_step`, the stream's overlapped step, the stream's
+    inline serial step — must produce bitwise-identical params AND
+    pending carry; the step-0 correction of the zero carry is exactly
+    zero (no cold-start branch in the trace)."""
+    run_in_subprocess(r"""
+import jax, numpy as np
+from repro.configs.base import ModelConfig
+from repro.engine import EngineConfig, TrainSession
+from repro.models import build_model
+from repro.launch.mesh import make_mesh_compat
+from repro.runtime import DelayedCombineStream
+
+mcfg = ModelConfig("tiny", "dense", 2, 32, 2, 1, 64, 97, head_dim=16)
+model = build_model(mcfg, attn_chunk=16)
+mesh = make_mesh_compat((8, 1), ("data", "model"))
+cfg = EngineConfig(combine="adasum", backend="gspmd_tree", span=4,
+                   optimizer="adam", seq_len=16, global_batch=16,
+                   data_seed=3, combine_delay=1)
+
+def flat(t):
+    return jax.tree_util.tree_flatten_with_path(jax.device_get(t))[0]
+
+sess = TrainSession.from_config(cfg, model=model, mesh=mesh, callbacks=[])
+for p, leaf in flat(sess.runtime.correction_fn(sess.state["pending"])):
+    assert (np.asarray(leaf) == 0).all(), p
+sess.close()
+
+finals = []
+for mode in ("single", "stream", "serial"):
+    s = TrainSession.from_config(cfg, model=model, mesh=mesh, callbacks=[])
+    if mode == "stream":
+        s.use_delayed_stream(comm_delay=0.002)
+        for i in range(4):
+            m = s.step(s.batch(i))
+        assert "compute_s" in m and "combine_wait_s" in m, m
+    elif mode == "serial":
+        stream = DelayedCombineStream(s.runtime)
+        for i in range(4):
+            s.state, _ = stream.serial_step(s.state, s.batch(i))
+        stream.close()
+    else:
+        for i in range(4):
+            s.step(s.batch(i))
+    finals.append((flat(s.state["params"]), flat(s.state["pending"])))
+    s.close()
+(ref_p, ref_d) = finals[0]
+for name, (ps, ds) in zip(("stream", "serial"), finals[1:]):
+    for (path, x), (_, y) in zip(ref_p, ps):
+        assert (np.asarray(x) == np.asarray(y)).all(), (name, path)
+    for (path, x), (_, y) in zip(ref_d, ds):
+        assert (np.asarray(x) == np.asarray(y)).all(), (name, path)
+print("OK")
+""", devices=8, timeout=900)
+
+
+def test_delayed_checkpoint_restart_mid_round_bitwise(tmp_path):
+    """Elastic-restart contract for the in-flight exchange: 6 straight
+    delayed rounds == 3 rounds + checkpoint (a pending delta is parked
+    mid-pipeline) + fresh-process restore + 3 more rounds, bitwise on
+    params and the pending carry — the in-flight delta is replayed,
+    never dropped or double-applied."""
+    run_in_subprocess(rf"""
+import jax, numpy as np
+from repro.configs.base import ModelConfig
+from repro.engine import EngineConfig, TrainSession
+from repro.models import build_model
+from repro.launch.mesh import make_mesh_compat
+
+mcfg = ModelConfig("tiny", "dense", 2, 32, 2, 1, 64, 97, head_dim=16)
+kw = dict(combine="adasum", backend="gspmd_tree", span=4,
+          optimizer="adam", seq_len=16, global_batch=16, data_seed=3,
+          combine_delay=1, log_every=1)
+
+def build(ck=""):
+    model = build_model(mcfg, attn_chunk=16)
+    mesh = make_mesh_compat((8, 1), ("data", "model"))
+    extra = dict(ckpt_dir=ck, ckpt_every=3) if ck else {{}}
+    cfg = EngineConfig(**kw, **extra)
+    # default callbacks: CheckpointCallback does the ckpt_every saves
+    return TrainSession.from_config(cfg, model=model, mesh=mesh)
+
+a = build()
+a.fit(6)
+
+b1 = build(r"{tmp_path}/ck")
+b1.fit(3)
+assert b1.checkpoint.latest_step() == 3
+b1.close()
+b2 = build(r"{tmp_path}/ck")
+b2.fit(6)
+assert int(jax.device_get(b2.state["step"])) == 6
+
+def flat(t):
+    return jax.tree_util.tree_flatten_with_path(jax.device_get(t))[0]
+
+for part in ("params", "pending"):
+    for (p, x), (_, y) in zip(flat(a.state[part]), flat(b2.state[part])):
+        assert (np.asarray(x) == np.asarray(y)).all(), (part, p)
+print("OK")
+""", devices=8, timeout=900)
+
+
+# ------------------------------------------------ fallback warning + metadata
+
+def test_span_eq_dp_fused_fallback_warns_and_tags_combine_path():
+    """span==dp with the fused gspmd_tree path requested is the RVH
+    regime: the build must warn ONCE (EngineWarning, not silence) and
+    surface 'gspmd-reference' as the active combine path in the run
+    metadata; span<dp stays 'gspmd-fused' with no warning."""
+    run_in_subprocess(r"""
+import warnings
+from repro.configs.base import ModelConfig
+from repro.engine import EngineConfig, TrainSession
+from repro.engine.build import EngineWarning
+from repro.models import build_model
+from repro.launch.mesh import make_mesh_compat
+
+mcfg = ModelConfig("tiny", "dense", 2, 32, 2, 1, 64, 97, head_dim=16)
+model = build_model(mcfg, attn_chunk=16)
+mesh = make_mesh_compat((8, 1), ("data", "model"))
+with warnings.catch_warnings(record=True) as rec:
+    warnings.simplefilter("always")
+    sess = TrainSession.from_config(
+        EngineConfig(combine="adasum", backend="gspmd_tree", span=8,
+                     seq_len=16, global_batch=16),
+        model=model, mesh=mesh, callbacks=[])
+hits = [w for w in rec if issubclass(w.category, EngineWarning)
+        and "span == dp" in str(w.message)]
+assert len(hits) == 1, [str(w.message) for w in rec]
+md = sess.run_metadata()
+assert md["combine_path"] == "gspmd-reference", md
+assert md["devices"] == 8 and md["mesh"] == {"data": 8, "model": 1}, md
+sess.close()
+
+with warnings.catch_warnings(record=True) as rec2:
+    warnings.simplefilter("always")
+    s2 = TrainSession.from_config(
+        EngineConfig(combine="adasum", backend="gspmd_tree", span=4,
+                     seq_len=16, global_batch=16),
+        model=model, mesh=mesh, callbacks=[])
+assert not [w for w in rec2 if issubclass(w.category, EngineWarning)], \
+    [str(w.message) for w in rec2]
+assert s2.run_metadata()["combine_path"] == "gspmd-fused"
+s2.close()
+print("OK")
+""", devices=8, timeout=600)
+
+
+def test_run_metadata_keys_on_tiny_session():
+    from repro.configs.base import ModelConfig
+    from repro.engine import TrainSession
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import build_model
+
+    mcfg = ModelConfig("tiny", "dense", 2, 32, 2, 1, 64, 97, head_dim=16)
+    sess = TrainSession.from_config(
+        EngineConfig(combine="adasum", seq_len=16, global_batch=4),
+        model=build_model(mcfg, attn_chunk=16),
+        mesh=make_local_mesh(1, 1), callbacks=[])
+    md = sess.run_metadata()
+    for key in ("arch", "combine", "backend", "combine_path", "span",
+                "dp", "local_steps", "combine_delay", "devices", "mesh"):
+        assert key in md, (key, md)
+    assert md["combine_delay"] == 0
+    assert md["devices"] == 1 and md["mesh"] == {"data": 1, "model": 1}
+    assert md["combine_path"], md
+    sess.close()
+
+
+# -------------------------------------------------- local-step aux metrics
+
+def test_local_sgd_step_reports_real_aux():
+    """The local-step scan used to throw the aux loss away and log a
+    constant zero; on a MoE arch the reported aux must be the real
+    (positive) load-balance mean, same metric keys as sync_step."""
+    from repro.configs.base import get_reduced
+    from repro.engine import TrainSession
+    from repro.launch.mesh import make_local_mesh
+    from repro.models import build_model
+
+    mcfg = get_reduced("moonshot-v1-16b-a3b")
+    sess = TrainSession.from_config(
+        EngineConfig(combine="adasum", optimizer="momentum",
+                     local_steps=2, seq_len=16, global_batch=4,
+                     log_every=1),
+        model=build_model(mcfg, attn_chunk=16),
+        mesh=make_local_mesh(1, 1), callbacks=[])
+    m = sess.step(sess.batch(0))
+    assert {"loss", "aux", "grad_lanes"} <= set(m), m
+    assert np.isfinite(m["loss"])
+    assert float(m["aux"]) > 0, (
+        f"local-step aux must be the real MoE aux mean, got {m['aux']}")
+    sess.close()
+
+
+# ---------------------------------------------------- config + CLI plumbing
+
+def test_combine_delay_config_validation_and_cli_roundtrip():
+    with pytest.raises(ValueError, match="combine_delay must be 0"):
+        EngineConfig(combine_delay=2, global_batch=16).validate()
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        EngineConfig(combine_delay=1, accum_steps=2,
+                     global_batch=16).validate()
+    EngineConfig(combine_delay=1, global_batch=16).validate()
+
+    cfg = EngineConfig.from_cli(["--arch", "gemma-7b", "--combine-delay",
+                                 "1", "--batch", "16"])
+    assert cfg.combine_delay == 1
+    assert EngineConfig.from_dict(cfg.to_dict()) == cfg
+    # and the default stays synchronous
+    assert EngineConfig.from_cli(
+        ["--arch", "gemma-7b", "--batch", "16"]).combine_delay == 0
+
+
+# -------------------------------------------------- benchmark history fields
+
+def test_append_history_records_device_topology(tmp_path, monkeypatch):
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+    import benchmarks.common as C
+
+    monkeypatch.setattr(C, "HISTORY", tmp_path / "h.jsonl")
+    C.append_history("t1", {"x": 1}, devices=8,
+                     mesh={"data": 8, "model": 1})
+    C.append_history("t2", {"y": 2}, mesh=None)
+    rows = [json.loads(ln) for ln in
+            (tmp_path / "h.jsonl").read_text().splitlines()]
+    assert rows[0]["devices"] == 8
+    assert rows[0]["mesh"] == {"data": 8, "model": 1}
+    assert rows[1]["mesh"] is None
+    assert rows[1]["devices"] == jax.device_count()
+    assert all("bench" in r and "ts" in r and "result" in r for r in rows)

@@ -29,6 +29,10 @@ echo "== fused combine benchmark smoke (tiny shapes) =="
 python -m benchmarks.combine_fused --smoke | grep -q "combine_fused smoke OK" || {
     echo "combine_fused smoke failed"; exit 1; }
 
+echo "== delayed combine benchmark smoke (overlap hides the exchange) =="
+python -m benchmarks.delayed_combine --smoke | grep -q "delayed_combine smoke OK" || {
+    echo "delayed_combine smoke failed"; exit 1; }
+
 echo "== serve smoke (3 staggered requests, continuous batching) =="
 serve_out=$(python -m repro.launch.serve --arch qwen3-32b --reduced \
     --requests 3 --prompt-len 16 --gen 8 --max-slots 2 --stagger 2)
