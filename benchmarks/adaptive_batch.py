@@ -1,0 +1,183 @@
+"""Noise-adaptive batch/span growth on the paper's Fig. 6 regime.
+
+The PR-8 controller (`repro.control`) watches the gradient-noise scale
+the CombineStats piggyback surfaces and grows global batch + Adasum
+span (AdaBatch-style doubling, LR rescaled by the AdaScale gain) when
+the noise says larger batches stop costing convergence. This benchmark
+races three arms on the tiny LM of `adascale_vs_adasum`:
+
+  fixed_small — Adasum at the starting batch (8 rows, span 2), the
+                arm the controller is supposed to beat in steps;
+  fixed_big   — Adasum at the adaptive arm's batch cap (64 rows,
+                span 8): defines the fixed-batch Adasum target quality;
+  adaptive    — starts at the small arm's operating point, controller
+                grows toward the cap (`fit_adaptive`, checkpoint +
+                rebuild + resume per resize).
+
+Records steps-to-target and final loss per arm plus the executed
+resize log; asserts the adaptive arm resized at least once, kept the
+(seed, step) stream contiguous across resizes, and reached the target
+with >= 1.2x fewer steps than fixed_small. Emits
+`BENCH_adaptive_batch.json`.
+
+`--smoke` runs a short adaptive-only slice (few steps, aggressive
+controller) asserting >= 1 resize + stream contiguity — the CI hook.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from .common import append_history, emit, run_devices
+
+OUT = Path(__file__).resolve().parents[1] / "BENCH_adaptive_batch.json"
+
+TARGET = 4.6
+MAX_STEPS = 160
+
+COMMON = r"""
+import json, tempfile, numpy as np
+from repro.configs.base import ModelConfig
+from repro.engine import EngineConfig, TrainSession
+from repro.models import build_model
+from repro.launch.mesh import make_mesh_compat
+
+mcfg = ModelConfig("bench", "dense", 2, 64, 4, 2, 128, 257, head_dim=16)
+model = build_model(mcfg, attn_chunk=32)
+mesh = make_mesh_compat((8, 1), ("data", "model"))
+
+def base_cfg(**kw):
+    kw.setdefault("combine", "adasum")
+    kw.setdefault("backend", "gspmd_tree")
+    kw.setdefault("optimizer", "momentum")
+    kw.setdefault("lr", 0.02)
+    kw.setdefault("seq_len", 32)
+    kw.setdefault("data_seed", 11)
+    return EngineConfig(**kw)
+
+def contiguous(history):
+    return [r["step"] for r in history] == list(range(len(history)))
+
+def steps_to(history, target):
+    for r in history:
+        if r["loss"] < target:
+            return r["step"] + 1
+    return -1
+"""
+
+FULL = COMMON + r"""
+TARGET = %(target)s
+MAX_STEPS = %(max_steps)d
+
+arms = {}
+for name, rows, span in (("fixed_small", 8, 2), ("fixed_big", 64, 8)):
+    cfg = base_cfg(global_batch=rows, span=span)
+    sess = TrainSession.from_config(cfg, model=model, mesh=mesh,
+                                    callbacks=[])
+    hist = []
+    for step in range(MAX_STEPS):
+        loss = sess.step(sess.batch(step))["loss"]
+        hist.append({"step": step, "loss": float(loss)})
+    arms[name] = {"batch": rows, "span": span,
+                  "steps_to_target": steps_to(hist, TARGET),
+                  "final_loss": round(float(hist[-1]["loss"]), 4)}
+
+from repro.control import fit_adaptive
+from repro.control.telemetry import config_hash
+with tempfile.TemporaryDirectory() as ckpt:
+    cfg = base_cfg(global_batch=8, span=2, steps=MAX_STEPS,
+                   ckpt_dir=ckpt, adaptive_batch=True,
+                   grow_threshold=2.0, grow_patience=2, grow_cooldown=8,
+                   max_global_batch=64, ckpt_every=0)
+    hist, sess = fit_adaptive(cfg, MAX_STEPS, callbacks=[],
+                              model=model, mesh=mesh)
+    arms["adaptive"] = {
+        "start_batch": 8, "start_span": 2,
+        "final_batch": sess.config.global_batch,
+        "final_span": sess.runtime.span,
+        "final_lr": round(float(sess.config.lr), 6),
+        "steps_to_target": steps_to(hist, TARGET),
+        "final_loss": round(float(hist[-1]["loss"]), 4),
+        "resizes": sess.resize_log,
+        "contiguous": contiguous(hist)}
+    chash = config_hash(cfg)
+    sess.close()
+
+print("RESULT " + json.dumps({"arms": arms, "config_hash": chash}))
+"""
+
+SMOKE = COMMON + r"""
+from repro.control import fit_adaptive
+with tempfile.TemporaryDirectory() as ckpt:
+    cfg = base_cfg(global_batch=8, span=2, steps=14, ckpt_dir=ckpt,
+                   adaptive_batch=True, grow_threshold=1.0,
+                   grow_patience=2, grow_cooldown=3, max_global_batch=32,
+                   ckpt_every=0)
+    hist, sess = fit_adaptive(cfg, 14, callbacks=[], model=model, mesh=mesh)
+    assert sess.resize_log, "controller never resized in the smoke window"
+    assert contiguous(hist), "step stream broke across resize"
+    assert all(np.isfinite(r["loss"]) for r in hist)
+    sess.close()
+print("RESULT " + json.dumps({"resizes": len(sess.resize_log),
+                              "steps": len(hist)}))
+"""
+
+
+def _run(code: str) -> dict:
+    out = run_devices(code, devices=8, timeout=3600)
+    for line in out.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise RuntimeError(f"no RESULT line in bench output:\n{out[-2000:]}")
+
+
+def main(smoke: bool = False):
+    if smoke:
+        res = _run(SMOKE)
+        emit("adaptive_smoke", 0.0,
+             f"resizes={res['resizes']};steps={res['steps']}")
+        print("adaptive_batch smoke OK")
+        return res
+
+    res = _run(FULL % {"target": TARGET, "max_steps": MAX_STEPS})
+    arms = res["arms"]
+    ada, small = arms["adaptive"], arms["fixed_small"]
+    checks = {
+        "resized": len(ada["resizes"]) >= 1,
+        "contiguous": ada["contiguous"],
+        "reached_target": ada["steps_to_target"] > 0,
+        "quality_match": (small["steps_to_target"] < 0
+                          or ada["final_loss"] <= small["final_loss"]
+                          + 0.05),
+    }
+    if small["steps_to_target"] > 0 and ada["steps_to_target"] > 0:
+        speedup = small["steps_to_target"] / ada["steps_to_target"]
+    else:
+        # baseline never reached the target inside MAX_STEPS while the
+        # adaptive arm did: an unbounded step win, report the floor
+        speedup = float("inf") if ada["steps_to_target"] > 0 else 0.0
+    checks["speedup_1p2x"] = speedup >= 1.2
+    result = {"target_loss": TARGET, "max_steps": MAX_STEPS,
+              "arms": arms,
+              "speedup_vs_fixed_small": (round(speedup, 3)
+                                         if speedup != float("inf")
+                                         else "inf"),
+              "checks": checks}
+    OUT.write_text(json.dumps(result, indent=2) + "\n")
+    for name, arm in arms.items():
+        emit(f"adaptive_{name}", 0.0,
+             f"steps_to_target={arm['steps_to_target']};"
+             f"final_loss={arm['final_loss']}")
+    append_history("adaptive_batch", result, devices=8,
+                   mesh={"data": 8, "model": 1},
+                   config_hash=res.get("config_hash"))
+    emit("adaptive_done", 0.0, f"wrote {OUT.name}")
+    bad = [k for k, ok in checks.items() if not ok]
+    if bad:
+        raise SystemExit(f"adaptive_batch acceptance failed: {bad}")
+    return result
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(smoke="--smoke" in sys.argv[1:]), indent=2))

@@ -16,7 +16,8 @@ HISTORY = Path(__file__).resolve().parents[1] / "BENCH_history.jsonl"
 
 
 def append_history(bench: str, result: dict, *, devices: int = None,
-                   mesh: dict = None) -> None:
+                   mesh: dict = None, config=None,
+                   config_hash: str = None) -> None:
     """Append one run to the cross-run perf trajectory
     (BENCH_history.jsonl at the repo root). The per-bench BENCH_*.json
     files hold only the latest run; the history line is what lets a
@@ -26,17 +27,26 @@ def append_history(bench: str, result: dict, *, devices: int = None,
     defaults to this process's jax.device_count()) and `mesh` (axis-name
     -> size, None when the bench built no mesh) — without them, history
     lines from different hosts/topologies are incomparable. Benches that
-    run in a subprocess must pass the SUBPROCESS topology explicitly."""
+    run in a subprocess must pass the SUBPROCESS topology explicitly.
+    It also carries `git_sha` (the commit the bench ran at) and
+    `config_hash` (sha of the EngineConfig, pass `config=` or a
+    precomputed `config_hash=` from the subprocess) so a history line
+    pins both the code and the settings that produced it."""
     if devices is None:
         try:
             import jax
             devices = jax.device_count()
         except Exception:
             devices = None
+    from repro.control import telemetry
+    if config_hash is None and config is not None:
+        config_hash = telemetry.config_hash(config)
     row = {"bench": bench,
            "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
            "devices": devices,
            "mesh": mesh,
+           "git_sha": telemetry.git_sha(),
+           "config_hash": config_hash,
            "result": result}
     with HISTORY.open("a") as f:
         f.write(json.dumps(row, sort_keys=True) + "\n")

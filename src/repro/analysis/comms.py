@@ -17,6 +17,13 @@ checker:
      all_gather / all_to_all / ppermute / reduce_scatter anywhere, and
      zero payload-merging reshapes outside shard_map (the `_split_lanes`
      336 GiB replication class);
+  4b. traces the stats-enabled combiner (`make_combiner(...,
+     with_stats=True)` — the CombineStats path the controller feeds on)
+     and holds it to the SAME psum multiset as the plain combiner: the
+     per-level triples piggyback on values the combine already psums,
+     so surfacing them adds ZERO collectives (the ISSUE budget allows
+     one extra small psum per bucket per level; we hold the stricter
+     bar) and zero all-gathers;
   5. traces the delayed-combine correction (`build_delayed_correction`,
      the combine_delay=1 exchange that overlaps the next round's
      compute) for the same cell and holds it to the same bar: the fused
@@ -199,6 +206,36 @@ def _check_one(ccfg, stacked, lane_specs, leaves, specs, mesh, rvh_axes,
         entry["n_sharded_buckets"] = 0
         entry["expected_psums"] = 0
 
+    # stats-enabled combiner (CombineStats piggyback): the controller's
+    # noise/orthogonality/gain telemetry must ride on the combine's own
+    # psummed values — same psum multiset as the plain combiner (zero
+    # extra collectives), no all-gathers, no merging reshapes.
+    scombiner = make_combiner(ccfg, mesh=mesh, dp_axes=rvh_axes,
+                              leaf_specs=lane_specs, with_stats=True)
+    sjaxpr = trace(scombiner, stacked)
+    scolls = collect_collectives(sjaxpr)
+    spsums = [c for c in scolls if c["prim"] == "psum"]
+    sothers = [c for c in scolls if c["prim"] != "psum"]
+    smerges = count_merge_reshapes(sjaxpr)
+    base_axes = sorted(tuple(c["axes"]) for c in psums)
+    stat_axes = sorted(tuple(c["axes"]) for c in spsums)
+    if stat_axes != base_axes:
+        errs.append(f"stats combiner psum multiset {stat_axes} != plain "
+                    f"combiner's {base_axes} — CombineStats must add "
+                    f"zero collectives")
+    if sothers:
+        kinds = sorted({c["prim"] for c in sothers})
+        errs.append(f"stats combiner emits {kinds} ({len(sothers)} eqns)"
+                    f" — must be psum-only")
+    if smerges:
+        errs.append(f"stats combiner: {smerges} payload-merging "
+                    f"reshape(s) outside shard_map")
+    if ccfg.fused and any(not c["manual"] for c in spsums):
+        errs.append("stats combiner psum outside shard_map manual region")
+    entry["stats"] = {"psums": len(spsums), "all_gather": len(sothers),
+                      "merge_reshapes": smerges,
+                      "extra_psums": len(spsums) - len(psums)}
+
     # delayed-combine correction (combine_delay=1): the exchange that
     # overlaps the next round's compute must be comms-identical to the
     # synchronous combine — correction = combine(pending) - lane_mean,
@@ -246,6 +283,7 @@ def render(report: Dict[str, Any]) -> str:
             f" sharded={e['n_sharded_buckets']} psums={e['psums']}"
             f"/{e['expected_psums']} all_gather={e['all_gather']}"
             f" merge_reshapes={e['merge_reshapes']}"
+            f" stats_psums={e.get('stats', {}).get('psums', '-')}"
             f" delayed_psums={d.get('psums', '-')}")
         for b in e["buckets"]:
             lines.append(

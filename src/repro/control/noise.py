@@ -1,0 +1,111 @@
+"""Gradient-noise-scale estimation from Adasum's free dot-product signal.
+
+Adasum's combiner materializes, at every tree level, the pairwise
+gradient dot products and squared norms (paper §3) — `CombineStats`
+({'levels': f32 [L, 3]}, rows [Σ dot, Σ ‖a‖², Σ ‖b‖²]) surfaces them.
+Level 0 pairs lanes that computed gradients on *independent* batch
+shards, which makes its triple a two-sample gradient-noise estimate
+(McCandlish et al., "An Empirical Model of Large-Batch Training"):
+
+    E[g_a · g_b]            = ‖μ‖²                   (independent lanes)
+    E[(‖g_a‖² + ‖g_b‖²)/2]  = ‖μ‖² + tr(Σ)/b_lane    (b_lane rows/lane)
+
+so   mu2_hat = mean pair dot,   var_hat = mean lane sq − mu2_hat
+estimate the squared mean-gradient norm and the per-lane gradient
+variance, and
+
+    noise_scale  B_noise ≈ b_lane · var_hat / mu2_hat
+
+estimates the *critical batch size*: below it, batch rows add nearly
+linear speedup; far above it, they are wasted. AdaScale's gain ratio
+(Johnson et al.)
+
+    gain(S) = (var + mu2) / (var / S + mu2)   in [1, S]
+
+is the same quantity seen as the effective speedup of S lanes: → S when
+lanes are orthogonal (pure noise, sum regime), → 1 when they agree
+(mean regime). The controller grows global batch while
+noise_scale >> global_batch; this module is pure math (jnp in-trace,
+floats host-side) with no engine dependencies.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax.numpy as jnp
+
+EPS = 1e-20
+
+# the per-step metric keys summarize_stats emits (and session
+# run_metadata / benchmark history record)
+STAT_KEYS = ("grad_dot", "grad_sq", "lane_cos", "grad_var", "grad_mu2",
+             "gain_ratio", "noise_scale")
+
+
+def summarize_stats(stats: Dict[str, Any], span: int, lane_rows: int
+                    ) -> Dict[str, jnp.ndarray]:
+    """Scalar per-step metrics from a CombineStats pytree.
+
+    stats: {'levels': [L, 3]} (traced or concrete); span, lane_rows are
+    static Python ints. All outputs are 0-d f32 arrays (TrainSession
+    floats them). With L == 0 (span 1: nothing was paired) every metric
+    is 0 except gain_ratio = 1 — the single-lane limits.
+    """
+    levels = stats["levels"]
+    if levels.shape[0] == 0 or span < 2:
+        z = jnp.zeros((), jnp.float32)
+        return {"grad_dot": z, "grad_sq": z, "lane_cos": z, "grad_var": z,
+                "grad_mu2": z, "gain_ratio": jnp.ones((), jnp.float32),
+                "noise_scale": z}
+    pairs = span // 2
+    dot_s, na_s, nb_s = levels[0, 0], levels[0, 1], levels[0, 2]
+    grad_dot = dot_s / pairs                       # mean pair dot
+    grad_sq = (na_s + nb_s) / (2 * pairs)          # mean per-lane ‖g‖²
+    lane_cos = dot_s / (jnp.sqrt(na_s * nb_s) + EPS)
+    mu2 = jnp.maximum(grad_dot, 0.0)
+    var = jnp.maximum(grad_sq - grad_dot, 0.0)
+    gain = jnp.clip((var + mu2) / (var / span + mu2 + EPS), 1.0, span)
+    noise = lane_rows * var / (mu2 + EPS)
+    f32 = lambda x: jnp.asarray(x, jnp.float32)
+    return {"grad_dot": f32(grad_dot), "grad_sq": f32(grad_sq),
+            "lane_cos": f32(lane_cos), "grad_var": f32(var),
+            "grad_mu2": f32(mu2), "gain_ratio": f32(gain),
+            "noise_scale": f32(noise)}
+
+
+def gain_for_factor(var: float, mu2: float, factor: float) -> float:
+    """AdaScale gain of growing the lane count / batch by `factor`,
+    given the current per-lane variance and squared-mean estimates —
+    the LR rescale the controller applies at a resize (host floats)."""
+    if factor <= 1.0:
+        return 1.0
+    g = (var + mu2) / (var / factor + mu2 + EPS)
+    return float(min(max(g, 1.0), factor))
+
+
+class NoiseEMA:
+    """Debiased exponential moving average over a host-side scalar
+    stream, NaN/inf-guarded (a divergent step must not poison the
+    controller): `update(x)` returns the current debiased mean."""
+
+    def __init__(self, decay: float = 0.9):
+        assert 0.0 <= decay < 1.0, decay
+        self.decay = decay
+        self._acc = 0.0
+        self._w = 0.0
+        self.count = 0
+
+    def update(self, x: float) -> Optional[float]:
+        import math
+        if x is None or not math.isfinite(x):
+            return self.value
+        self._acc = self.decay * self._acc + (1.0 - self.decay) * float(x)
+        self._w = self.decay * self._w + (1.0 - self.decay)
+        self.count += 1
+        return self.value
+
+    @property
+    def value(self) -> Optional[float]:
+        if self._w <= 0.0:
+            return None
+        return self._acc / self._w

@@ -1,0 +1,136 @@
+"""Planned resize execution: the controller's decisions, made real.
+
+`runtime/elastic.py`'s failure-shrink path generalizes into a *planned*
+`resize()`: save a synchronous checkpoint, mutate the EngineConfig
+(global batch, Adasum span, LR), rebuild mesh/runtime/combiner from it,
+and resume from the manifest. The restore path re-places every leaf on
+the live shardings (the PR-7 bitwise fix) and `reshard_lanes` folds or
+splits the lane axis of per-lane optimizer state across a span change,
+so resumed steps stay bitwise with an uninterrupted run at the new
+operating point. Batches are pure (seed, step) functions, so the data
+stream stays aligned across the resize — step N+1's batch is the same
+whether or not a resize happened at N (at the new batch size, no
+skipped or replayed steps).
+
+`fit_adaptive` is the driver (`fit_elastic`'s sibling);
+`ControllerCallback` raises the `ResizeSignal`; `log_effective`
+validates + logs the settings actually in force after ANY rebuild.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.runtime.elastic import ResizePlan, ResizeSignal
+
+from .controller import BatchController, ControllerConfig
+
+
+def log_effective(session, label: str = "effective") -> Dict[str, Any]:
+    """Validate and log the *effective* global batch / span / LR a
+    session will actually run — called after every elastic rebuild
+    (shrink or controller resize), because the config a driver *asked*
+    for can be silently adjusted (span clamped to dp, preset
+    overrides). Raises if the effective combination is inconsistent."""
+    cfg, rt = session.config, session.runtime
+    cfg.validate(rt.dp_total)
+    if cfg.global_batch % rt.span:
+        raise ValueError(f"effective global_batch={cfg.global_batch} not "
+                         f"divisible by effective span={rt.span}")
+    eff = {"global_batch": cfg.global_batch, "span": rt.span,
+           "lane_rows": cfg.global_batch // rt.span, "lr": cfg.lr,
+           "dp": rt.dp_total, "combine_path": rt.combine_path}
+    print(f"[control] {label}: batch={eff['global_batch']} "
+          f"span={eff['span']} lane_rows={eff['lane_rows']} "
+          f"lr={eff['lr']:g} dp={eff['dp']} "
+          f"combine_path={eff['combine_path']}")
+    return eff
+
+
+def apply_resize(config, plan: ResizePlan):
+    """The config mutation a ResizePlan prescribes, validated. Span is
+    written explicitly (not 0/auto) so the rebuilt runtime can't
+    re-resolve it differently."""
+    return dataclasses.replace(
+        config, global_batch=plan.new_batch, span=plan.new_span,
+        lr=plan.new_lr).validate()
+
+
+class ControllerCallback:
+    """Feeds per-step metrics to the BatchController; raises ResizeSignal
+    when it decides to grow. Duck-typed Callback (no engine import —
+    control sits below engine)."""
+
+    def __init__(self, controller: BatchController):
+        self.controller = controller
+
+    def on_fit_start(self, session, start_step: int): ...
+
+    def on_step_start(self, session, step: int): ...
+
+    def on_fit_end(self, session, history): ...
+
+    def on_step_end(self, session, step: int, metrics: Dict[str, float],
+                    dt: float):
+        plan = self.controller.observe(step, metrics)
+        if plan is not None:
+            raise ResizeSignal(step + 1, plan)
+
+
+def fit_adaptive(config, steps: Optional[int] = None, *,
+                 callbacks: Optional[List] = None, max_resizes: int = 8,
+                 controller: Optional[BatchController] = None,
+                 model=None, mesh=None,
+                 ) -> Tuple[List[Dict[str, float]], Any]:
+    """Noise-adaptive training driver: run `fit` with a BatchController
+    watching the CombineStats metrics; on a ResizeSignal checkpoint,
+    apply the plan to the config, rebuild the session (same mesh — dp
+    does not change), and resume from the manifest. Returns (combined
+    history, final session); the executed plans are on
+    `session.resize_log` (and `controller.decisions`).
+
+    The sibling of `engine.pipeline.fit_elastic` — same
+    save -> rebuild -> resume skeleton, but the rebuild is *planned*
+    (a growth the controller chose) instead of reactive (a failure)."""
+    from repro.engine.session import TrainSession, default_callbacks
+
+    if not config.ckpt_dir:
+        raise ValueError("fit_adaptive needs EngineConfig.ckpt_dir (the "
+                         "resize resumes from the manifest)")
+    if not config.adaptive_batch:
+        config = dataclasses.replace(config, adaptive_batch=True)
+    config.validate()
+    cbs = (default_callbacks(config) if callbacks is None
+           else list(callbacks))
+    history: List[Dict[str, float]] = []
+    resize_log: List[Dict[str, Any]] = []
+    ctrl = controller
+    while True:
+        session = TrainSession.from_config(config, model=model, mesh=mesh,
+                                           callbacks=cbs)
+        if ctrl is None:
+            ctrl = BatchController(
+                ControllerConfig.from_engine(config),
+                global_batch=config.global_batch,
+                span=session.runtime.span,
+                dp_total=session.runtime.dp_total, lr=config.lr)
+        if len(ctrl.decisions) < max_resizes:
+            session.callbacks = list(session.callbacks) \
+                + [ControllerCallback(ctrl)]
+        log_effective(session, label="resize" if resize_log else "start")
+        session.resize_log = resize_log
+        try:
+            history += session.fit(steps)
+            return history, session
+        except ResizeSignal as e:
+            history += getattr(e, "history", [])
+            # the flagged step completed (the signal fires from
+            # on_step_end, carrying step+1): checkpoint it, barrier
+            session.save_sync()
+            resize_log.append({"step": e.step, **e.plan.to_dict()})
+            print(f"[control] resize at step {e.step}: "
+                  f"{e.plan.describe()}")
+            mesh = session.mesh          # dp unchanged: keep the mesh
+            session.close()
+            config = apply_resize(config, e.plan)
+            ctrl.notify_resized(e.plan)

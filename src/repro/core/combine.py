@@ -94,16 +94,33 @@ def _pair_combine_stacked(x: jnp.ndarray, acc_dtype) -> jnp.ndarray:
             + _bcast(s2, b.ndim).astype(x.dtype) * b)
 
 
-def tree_combine_per_layer(stacked: PyTree, acc_dtype) -> PyTree:
+def _level_triple(leaves, acc_dtype) -> jnp.ndarray:
+    """Total [dot, ‖a‖², ‖b‖²] of one tree level, summed over every leaf
+    and lane pair — the CombineStats payload. Recomputes the same dots
+    the combine itself takes (XLA CSEs the shared subgraph), so enabling
+    collection never perturbs the combined output."""
+    tot = jnp.zeros((3,), acc_dtype)
+    for l in leaves:
+        a, b = _split_lanes(l)
+        dot, na, nb = _pair_dots(a, b, acc_dtype)
+        tot = tot + jnp.stack([dot.sum(), na.sum(), nb.sum()]).astype(acc_dtype)
+    return tot
+
+
+def tree_combine_per_layer(stacked: PyTree, acc_dtype,
+                           collect: Optional[list] = None) -> PyTree:
     n = jax.tree.leaves(stacked)[0].shape[0]
     while n > 1:
+        if collect is not None:
+            collect.append(_level_triple(jax.tree.leaves(stacked), acc_dtype))
         stacked = jax.tree.map(
             lambda x: _pair_combine_stacked(x, acc_dtype), stacked)
         n //= 2
     return jax.tree.map(lambda x: x[0], stacked)
 
 
-def tree_combine_whole(stacked: PyTree, acc_dtype) -> PyTree:
+def tree_combine_whole(stacked: PyTree, acc_dtype,
+                       collect: Optional[list] = None) -> PyTree:
     """Whole-model granularity: dots accumulated across all leaves."""
     n = jax.tree.leaves(stacked)[0].shape[0]
     while n > 1:
@@ -113,6 +130,8 @@ def tree_combine_whole(stacked: PyTree, acc_dtype) -> PyTree:
         dot = sum(d[0] for d in dots)
         na = sum(d[1] for d in dots)
         nb = sum(d[2] for d in dots)
+        if collect is not None:
+            collect.append(jnp.stack([dot.sum(), na.sum(), nb.sum()]))
         s1, s2 = A.adasum_scalars(dot, na, nb)
         out = [(_bcast(s1, a.ndim).astype(l.dtype) * a
                 + _bcast(s2, b.ndim).astype(l.dtype) * b)
@@ -120,6 +139,18 @@ def tree_combine_whole(stacked: PyTree, acc_dtype) -> PyTree:
         stacked = jax.tree.unflatten(treedef, out)
         n //= 2
     return jax.tree.map(lambda x: x[0], stacked)
+
+
+def stack_stats(collect: list) -> dict:
+    """CombineStats pytree from collected per-level triples: {'levels':
+    f32 [num_levels, 3]} with rows [Σ dot, Σ ‖a‖², Σ ‖b‖²] summed over
+    every leaf/bucket and lane pair of that tree level. Level 0 pairs
+    lanes that saw independent batches — its triple IS the gradient-
+    noise-scale estimate `repro.control.noise` consumes. Empty collect
+    (span == 1: no pairing happens) yields a [0, 3] array."""
+    if not collect:
+        return {"levels": jnp.zeros((0, 3), jnp.float32)}
+    return {"levels": jnp.stack(collect).astype(jnp.float32)}
 
 
 # --------------------------------------------------------------- fused path
@@ -254,28 +285,37 @@ def _bucket_level_dots(buf, meta, cfg):
     return (a, b, ids, nblk), v
 
 
-def _bucket_chain(buf, meta, cfg):
+def _bucket_chain(buf, meta, cfg, collect: Optional[list] = None):
     """Full per-layer tree reduction of ONE bucket [n, L] -> [1, L]: a
     self-contained chain of level ops (dots -> psum -> scalars -> FMA)
     with no cross-bucket data dependency. The chains are what the
     delayed-combine mode hands XLA as a restartable stream: each
     bucket's psum chain is free to run concurrently with unrelated
     compute — including the next step's forward/backward, since the
-    carry it consumes was produced a step earlier."""
+    carry it consumes was produced a step earlier.
+
+    `collect`, when given, is a per-level accumulator list (one [3]
+    entry per tree level, shared across buckets): the already-psummed
+    dot triples `v` are reduced into it, so stats collection adds ZERO
+    extra collectives on this path."""
     n = buf.shape[0]
     block = meta[1]
+    level = 0
     while n > 1:
         (a, b, ids, _nblk), v = _bucket_level_dots(buf, meta, cfg)
+        if collect is not None:
+            collect[level] = collect[level] + v.sum(axis=(0, 1))
         s1, s2 = A.adasum_segment_scalars(v)     # [p, nseg1]
         s1b = s1.reshape(-1)[ids]
         s2b = s2.reshape(-1)[ids]
         out = _bucket_combine(a, b, s1b, s2b, block, cfg.use_pallas)
         n //= 2
+        level += 1
         buf = out.reshape(n, -1)
     return buf
 
 
-def _whole_model_levels(packed, metas, cfg):
+def _whole_model_levels(packed, metas, cfg, collect: Optional[list] = None):
     """Level-major reduction at whole-model granularity (§3.6 off):
     every level's dot triples are summed across ALL buckets before the
     scalars form, so bucket chains cannot run independently — the
@@ -290,8 +330,10 @@ def _whole_model_levels(packed, metas, cfg):
             dots.append(v)
         # one dot triple per pair, summed over every bucket (padding
         # segments contribute zeros)
-        s1w, s2w = A.adasum_segment_scalars(
-            sum(v.sum(axis=1) for v in dots))
+        level_v = sum(v.sum(axis=1) for v in dots)        # [p, 3]
+        if collect is not None:
+            collect.append(level_v.sum(axis=0))
+        s1w, s2w = A.adasum_segment_scalars(level_v)
         new = []
         for (a, b, ids, nblk), meta in zip(halves, metas):
             block = meta[1]
@@ -315,13 +357,18 @@ def _unpack_buffers(bufs, plan, leaves, treedef):
 
 def fused_combine_tree(stacked: PyTree, cfg: CombineConfig,
                        leaf_specs_flat: Optional[List] = None,
-                       psum: bool = False) -> PyTree:
+                       psum: bool = False,
+                       collect: Optional[list] = None) -> PyTree:
     """Bucketed single-pass Adasum tree reduction on (local) stacked
     leaves [n, *shape] -> [*shape]. With `psum=True` it must run inside
     shard_map manual over the mesh; each bucket's dots are finished by
     one psum over exactly the axes its leaves are sharded over. With
     per-layer granularity each bucket reduces as an independent chain
-    (`_bucket_chain`)."""
+    (`_bucket_chain`).
+
+    `collect`, when given, receives one [3] dot triple per tree level
+    (summed over buckets and pairs) — built from the SAME psummed `v`
+    every level already computes, so stats cost no extra collective."""
     leaves, treedef = jax.tree.flatten(stacked)
     if not leaves:
         return stacked
@@ -334,10 +381,17 @@ def fused_combine_tree(stacked: PyTree, cfg: CombineConfig,
     plan = fused_plan(leaves, specs, cfg, psum)
     packed, metas = _pack_buckets(leaves, plan)
     if cfg.per_layer:
-        packed = [_bucket_chain(buf, meta, cfg)
-                  for buf, meta in zip(packed, metas)]
+        if collect is not None:
+            levels = n.bit_length() - 1
+            acc = [jnp.zeros((3,), cfg.acc) for _ in range(levels)]
+            packed = [_bucket_chain(buf, meta, cfg, collect=acc)
+                      for buf, meta in zip(packed, metas)]
+            collect.extend(acc)
+        else:
+            packed = [_bucket_chain(buf, meta, cfg)
+                      for buf, meta in zip(packed, metas)]
     else:
-        packed = _whole_model_levels(packed, metas, cfg)
+        packed = _whole_model_levels(packed, metas, cfg, collect=collect)
     return _unpack_buffers(packed, plan, leaves, treedef)
 
 
@@ -379,7 +433,8 @@ def fused_correction_tree(stacked: PyTree, cfg: CombineConfig,
     return _unpack_buffers(diffs, plan, leaves, treedef)
 
 
-def _build_fused(cfg: CombineConfig, mesh, dp_axes, leaf_specs, tree_fn
+def _build_fused(cfg: CombineConfig, mesh, dp_axes, leaf_specs, tree_fn,
+                 with_stats: bool = False
                  ) -> Optional[Callable[[PyTree], PyTree]]:
     dp_total = 1
     if mesh is not None and dp_axes:
@@ -395,18 +450,36 @@ def _build_fused(cfg: CombineConfig, mesh, dp_axes, leaf_specs, tree_fn
     def run(stacked: PyTree) -> PyTree:
         leaves, treedef = jax.tree.flatten(stacked)
         if not leaves:
-            return stacked
+            return (stacked, stack_stats([])) if with_stats else stacked
         if leaf_specs is not None:
             specs = [s or P() for s in treedef.flatten_up_to(leaf_specs)]
         else:
             specs = [P()] * len(leaves)
         if not use_shard_map:
+            if with_stats:
+                collect: list = []
+                out = tree_fn(stacked, cfg, specs, psum=False,
+                              collect=collect)
+                return out, stack_stats(collect)
             return tree_fn(stacked, cfg, specs, psum=False)
         from .rvh import _shard_map_compat
         in_specs = jax.tree.unflatten(
             treedef, [P(None, *tuple(s)) for s in specs])
         out_specs = jax.tree.unflatten(
             treedef, [P(*tuple(s)) for s in specs])
+
+        if with_stats:
+            # the stats triples are psummed inside the body (sharded
+            # buckets) or computed from replicated payloads, so every
+            # device holds the same value — P() (replicated) is exact
+            def body_stats(tree):
+                collect: list = []
+                out = tree_fn(tree, cfg, specs, psum=True, collect=collect)
+                return out, stack_stats(collect)
+
+            return _shard_map_compat(
+                body_stats, mesh, (in_specs,),
+                (out_specs, {"levels": P()}))(stacked)
 
         def body(tree):
             return tree_fn(tree, cfg, specs, psum=True)
@@ -418,7 +491,8 @@ def _build_fused(cfg: CombineConfig, mesh, dp_axes, leaf_specs, tree_fn
 
 def build_fused_combiner(cfg: CombineConfig, *, mesh=None,
                          dp_axes: Sequence[str] = (),
-                         leaf_specs: Optional[PyTree] = None
+                         leaf_specs: Optional[PyTree] = None,
+                         with_stats: bool = False
                          ) -> Optional[Callable[[PyTree], PyTree]]:
     """Sharding-aware fused bucketed combine for the gspmd_tree backend.
 
@@ -427,8 +501,14 @@ def build_fused_combiner(cfg: CombineConfig, *, mesh=None,
     runtime's RVH layout, so local adjacent-lane pairing would cross
     devices — that regime belongs to the rvh backend (or the per-leaf
     reference tree, which lets GSPMD pick the collectives).
+
+    with_stats=True: the combiner returns (combined, CombineStats) —
+    the per-level dot triples read out of the psums the combine already
+    issues, so the traced program has the SAME collective multiset as
+    the plain combiner (the comms pass pins this).
     """
-    return _build_fused(cfg, mesh, dp_axes, leaf_specs, fused_combine_tree)
+    return _build_fused(cfg, mesh, dp_axes, leaf_specs, fused_combine_tree,
+                        with_stats=with_stats)
 
 
 def build_fused_correction(cfg: CombineConfig, *, mesh=None,

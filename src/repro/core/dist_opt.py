@@ -65,9 +65,35 @@ class DistributedOptimizer:
     def update(self, stacked_grads: PyTree, state: Dict[str, PyTree],
                params: PyTree) -> Tuple[PyTree, Dict[str, PyTree]]:
         """stacked_grads: leaves [span, *shape]. Returns (delta, new_state)."""
+        delta, new_state, _ = self._update(stacked_grads, state, params,
+                                           self.combiner)
+        return delta, new_state
+
+    def update_stats(self, stacked_grads: PyTree, state: Dict[str, PyTree],
+                     params: PyTree, stats_combiner: Callable
+                     ) -> Tuple[PyTree, Dict[str, PyTree], Optional[PyTree]]:
+        """`update` routed through a stats-enabled combiner (from
+        `make_combiner(..., with_stats=True)`): returns (delta,
+        new_state, CombineStats). The combine math is the same program —
+        stats only read intermediates the combine already computes.
+        At span 1 no combine runs and stats is None."""
+        return self._update(stacked_grads, state, params, stats_combiner)
+
+    def _update(self, stacked_grads: PyTree, state: Dict[str, PyTree],
+                params: PyTree, combiner: Callable
+                ) -> Tuple[PyTree, Dict[str, PyTree], Optional[PyTree]]:
+        stats = None
+
+        def combine(tree):
+            nonlocal stats
+            out = combiner(tree)
+            if isinstance(out, tuple):
+                out, stats = out
+            return out
+
         step = state["step"]
         if self.point == "pre":
-            combined = self.combiner(stacked_grads)
+            combined = combine(stacked_grads)
             delta, inner = self.opt.update(combined, state["inner"], params, step)
         else:
             if self.span > 1:
@@ -77,13 +103,13 @@ class DistributedOptimizer:
                                                       state["inner"])
                 if self.lane_constraint is not None:
                     deltas = self.lane_constraint(deltas)
-                delta = self.combiner(deltas)
+                delta = combine(deltas)
             else:
                 g = jax.tree.map(lambda x: x[0], stacked_grads)
                 delta, inner = self.opt.update(g, state["inner"], params, step)
         if self.delta_constraint is not None:
             delta = self.delta_constraint(delta)
-        return delta, {"inner": inner, "step": step + 1}
+        return delta, {"inner": inner, "step": step + 1}, stats
 
     def apply(self, params: PyTree, delta: PyTree) -> PyTree:
         return jax.tree.map(

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.control.noise import summarize_stats
 from repro.core.combine import CombineConfig
 from repro.core.dist_opt import DistributedOptimizer
 from repro.models.api import Model
@@ -77,6 +78,8 @@ class Runtime:
     combine_path: str = ""       # the combiner implementation that will
                                  # actually run (e.g. 'gspmd-fused' vs
                                  # 'gspmd-reference' after a fallback)
+    combine_stats: bool = False  # per-step CombineStats metrics emitted
+                                 # (grad-noise / orthogonality / gain)
     # delayed-combine split pieces (combine_delay > 0 only): train_step
     # == fold(local_fn, correction_fn(pending)); DelayedCombineStream
     # runs correction_fn on a host thread for observable overlap
@@ -211,6 +214,17 @@ def build_runtime(model: Model, mesh: jax.sharding.Mesh, rpol: RunPolicy,
     # fused bucketed path packs local shards along exactly these specs.
     combiner = make_combiner(ccfg, mesh=mesh, dp_axes=rvh_axes,
                              leaf_specs=lane_specs)
+    # CombineStats: the combiner's own dot triples, surfaced as per-step
+    # metrics (noise scale / lane orthogonality / adascale gain). The
+    # stats-enabled combiner runs the SAME combine program — on the
+    # fused path the triples ride the per-bucket psums it already
+    # issues — so enabling stats never perturbs the update. Scoped to
+    # the synchronous paths: the delayed carry's dots describe the
+    # previous round's deltas, not this step's gradients.
+    scombiner = None
+    if rpol.combine_stats and span > 1 and not delayed:
+        scombiner = make_combiner(ccfg, mesh=mesh, dp_axes=rvh_axes,
+                                  leaf_specs=lane_specs, with_stats=True)
     opt_kwargs = {}
     if rpol.optimizer in ("adam", "lamb"):
         opt_kwargs["state_dtype"] = jnp.dtype(rpol.opt_state_dtype)
@@ -323,15 +337,28 @@ def build_runtime(model: Model, mesh: jax.sharding.Mesh, rpol: RunPolicy,
 
         return jax.vmap(one_lane)(lanes)
 
+    def stat_metrics(stats, batch):
+        """CombineStats -> scalar metric dict (lane_rows is static from
+        the batch shape, so this traces into the jitted step)."""
+        rows = jax.tree.leaves(batch)[0].shape[0]
+        return summarize_stats(stats, span, rows // span)
+
     def sync_step(state, batch):
         params = state["params"]
         lanes = split_lanes(batch)
         (losses, mets), G = lane_grads(params, lanes)
         G = jax.lax.with_sharding_constraint(G, to_shardings(gspecs))
-        delta, opt_state = dopt.update(G, state["opt"], params)
+        if scombiner is not None:
+            delta, opt_state, stats = dopt.update_stats(
+                G, state["opt"], params, scombiner)
+        else:
+            delta, opt_state = dopt.update(G, state["opt"], params)
+            stats = None
         new_params = dopt.apply(params, delta)
         metrics = {k: jnp.mean(v) for k, v in mets.items()}
         metrics["grad_lanes"] = jnp.asarray(span, jnp.int32)
+        if stats is not None:
+            metrics.update(stat_metrics(stats, batch))
         new_state = {"params": new_params, "opt": opt_state,
                      "step": state["step"] + 1}
         return new_state, metrics
@@ -386,7 +413,11 @@ def build_runtime(model: Model, mesh: jax.sharding.Mesh, rpol: RunPolicy,
         """Paper §5.2: k local optimizer steps, then Adasum of the deltas."""
         deltas, inner, metrics = local_deltas(
             state["params"], state["opt"], batch)
-        delta = combiner(deltas)
+        if scombiner is not None:
+            delta, stats = scombiner(deltas)
+            metrics.update(stat_metrics(stats, batch))
+        else:
+            delta = combiner(deltas)
         new_params = dopt.apply(state["params"], delta)
         new_state = {"params": new_params,
                      "opt": {"inner": inner,
@@ -447,6 +478,7 @@ def build_runtime(model: Model, mesh: jax.sharding.Mesh, rpol: RunPolicy,
                    state_shapes, state_specs, step_fn, init_state,
                    lane_specs=lane_specs, gspecs=gspecs,
                    combine_path=getattr(combiner, "combine_path", ""),
+                   combine_stats=scombiner is not None,
                    correction_fn=correction_fn, local_fn=local_only_step,
                    fold_fn=dopt.apply if delayed else None)
 

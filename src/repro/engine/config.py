@@ -92,6 +92,32 @@ class EngineConfig:
     elastic: bool = False       # consume straggler flags: checkpoint +
                                 # halve-DP restart (needs ckpt_dir)
 
+    # ---- adaptive batch/span controller (repro.control) ----
+    combine_stats: bool = True  # surface CombineStats (grad-noise scale,
+                                # lane-orthogonality angle, adascale gain)
+                                # in per-step metrics + run_metadata(); on
+                                # the fused path the triples ride the
+                                # psums the combine already issues (zero
+                                # extra collectives)
+    adaptive_batch: bool = False # gradient-noise-adaptive controller:
+                                # grow global_batch (and span) when the
+                                # EMA noise scale exceeds the band, via
+                                # save -> rebuild -> resume (needs
+                                # ckpt_dir; driven by fit_adaptive)
+    grow_factor: int = 2        # batch multiplier per resize (AdaBatch
+                                # doubling; power of two when grow_span)
+    grow_threshold: float = 2.0 # resize while ema_noise > threshold *
+                                # global_batch (hysteresis: reset below
+                                # threshold/2)
+    grow_patience: int = 8      # consecutive in-band steps before a resize
+    grow_cooldown: int = 16     # steps after a resize before re-arming
+    max_global_batch: int = 0   # controller hard cap (0 = uncapped)
+    grow_span: bool = True      # grow Adasum span with the batch (kept a
+                                # power-of-two divisor of dp)
+    lr_rescale: str = "adascale" # LR rule at a resize: 'adascale' gain |
+                                # 'linear' | 'none'
+    noise_ema: float = 0.9      # noise-scale EMA decay
+
     # ---- serving (engine/serving.ServeEngine) ----
     max_slots: int = 8          # continuous-batching decode slot pool
     max_len: int = 0            # per-slot cache capacity; 0 => seq_len
@@ -156,6 +182,50 @@ class EngineConfig:
                 "use local_steps to amortize syncs instead")
         if self.data_kind == "memmap" and not self.data_path:
             raise ValueError("data_kind='memmap' needs data_path")
+        if self.grow_factor < 2:
+            raise ValueError(f"grow_factor must be >= 2 (AdaBatch-style "
+                             f"multiplicative growth), got {self.grow_factor}")
+        if self.grow_span and self.grow_factor & (self.grow_factor - 1):
+            raise ValueError(
+                f"grow_factor={self.grow_factor} must be a power of two "
+                f"when grow_span=True (the span must stay a power-of-two "
+                f"divisor of dp); set grow_span=False for other factors")
+        if self.grow_threshold <= 0:
+            raise ValueError(f"grow_threshold must be > 0, got "
+                             f"{self.grow_threshold}")
+        if self.grow_patience < 1 or self.grow_cooldown < 0:
+            raise ValueError("grow_patience must be >= 1 and grow_cooldown "
+                             ">= 0")
+        if self.max_global_batch < 0:
+            raise ValueError(f"max_global_batch must be >= 0 (0 = "
+                             f"uncapped), got {self.max_global_batch}")
+        if not 0.0 <= self.noise_ema < 1.0:
+            raise ValueError(f"noise_ema must be in [0, 1), got "
+                             f"{self.noise_ema}")
+        if self.lr_rescale not in ("adascale", "linear", "none"):
+            raise ValueError(f"lr_rescale={self.lr_rescale!r}; expected "
+                             f"adascale | linear | none")
+        if self.adaptive_batch:
+            if not self.ckpt_dir:
+                raise ValueError("adaptive_batch=True needs ckpt_dir (a "
+                                 "resize resumes from the checkpoint "
+                                 "manifest)")
+            if not self.combine_stats:
+                raise ValueError("adaptive_batch=True needs "
+                                 "combine_stats=True (the controller is "
+                                 "driven by the combiner's noise signal)")
+            if self.combine_delay:
+                raise ValueError(
+                    "adaptive_batch and combine_delay are mutually "
+                    "exclusive: CombineStats are collected on the "
+                    "synchronous combine paths only (the delayed carry's "
+                    "dots describe the previous round)")
+            if self.elastic:
+                raise ValueError(
+                    "adaptive_batch and elastic are mutually exclusive "
+                    "drivers (fit_adaptive vs fit_elastic) — straggler "
+                    "shrink + noise growth composition is not supported "
+                    "yet")
         if self.elastic and not self.ckpt_dir:
             raise ValueError("elastic=True needs ckpt_dir (restarts "
                              "resume from the checkpoint manifest)")
@@ -263,7 +333,8 @@ class EngineConfig:
             combine_point=self.combine_point, per_layer=self.per_layer,
             acc_dtype=self.acc_dtype, use_pallas=self.use_pallas,
             compress=self.compress, fused_combine=self.fused_combine,
-            fusion_threshold_mb=self.fusion_threshold_mb)
+            fusion_threshold_mb=self.fusion_threshold_mb,
+            combine_stats=self.combine_stats)
 
     def data_config(self, vocab_size: int) -> DataConfig:
         return DataConfig(seq_len=self.seq_len,
@@ -341,6 +412,39 @@ class EngineConfig:
         ap.add_argument("--elastic", action="store_true", default=None,
                         help="straggler flag => checkpoint + halve-DP "
                         "restart (needs --ckpt-dir)")
+        ap.add_argument("--no-combine-stats", action="store_true",
+                        help="drop the CombineStats per-step metrics "
+                        "(grad-noise scale / lane orthogonality / gain)")
+        ap.add_argument("--adaptive-batch", action="store_true",
+                        default=None, dest="adaptive_batch",
+                        help="noise-adaptive controller: grow batch/span "
+                        "when measured gradient noise exceeds the band "
+                        "(needs --ckpt-dir)")
+        ap.add_argument("--grow-factor", type=int, default=None,
+                        dest="grow_factor",
+                        help="batch multiplier per adaptive resize")
+        ap.add_argument("--grow-threshold", type=float, default=None,
+                        dest="grow_threshold",
+                        help="resize while ema noise_scale > threshold * "
+                        "global_batch")
+        ap.add_argument("--grow-patience", type=int, default=None,
+                        dest="grow_patience",
+                        help="consecutive in-band steps before a resize")
+        ap.add_argument("--grow-cooldown", type=int, default=None,
+                        dest="grow_cooldown",
+                        help="steps after a resize before re-arming")
+        ap.add_argument("--max-global-batch", type=int, default=None,
+                        dest="max_global_batch",
+                        help="adaptive controller batch cap (0 = uncapped)")
+        ap.add_argument("--no-grow-span", action="store_true",
+                        help="adaptive resizes grow only the batch, "
+                        "never the Adasum span")
+        ap.add_argument("--lr-rescale", default=None, dest="lr_rescale",
+                        choices=["adascale", "linear", "none"],
+                        help="LR rule at an adaptive resize")
+        ap.add_argument("--noise-ema", type=float, default=None,
+                        dest="noise_ema",
+                        help="noise-scale EMA decay in [0, 1)")
         ap.add_argument("--max-slots", type=int, default=None,
                         dest="max_slots",
                         help="serving: continuous-batching slot pool size")
@@ -384,6 +488,10 @@ class EngineConfig:
             over["async_checkpoint"] = False
         if args.no_prefix_sharing:
             over["prefix_sharing"] = False
+        if args.no_combine_stats:
+            over["combine_stats"] = False
+        if args.no_grow_span:
+            over["grow_span"] = False
         # Local CLI runs ride small host meshes: FSDP/ZeRO-2 presets from
         # the pod-scale table are switched off (as launch/train.py always
         # did) unless explicitly re-enabled via defaults.

@@ -29,6 +29,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 
+from repro.control.noise import STAT_KEYS
 from repro.runtime import (NodeLossError, Prefetcher, RestartSignal,
                            plan_shrink)
 
@@ -120,8 +121,10 @@ class StepPipeline:
                 # delayed-combine split accounting (combine_delay runs
                 # through a DelayedCombineStream): how much of the step
                 # was compute vs waiting on the exchange — the overlap
-                # is observable per step, not just in aggregate
-                for key in ("compute_s", "combine_wait_s"):
+                # is observable per step, not just in aggregate.
+                # CombineStats metrics (grad-noise scale / orthogonality
+                # / gain) ride along when the combiner emits them.
+                for key in ("compute_s", "combine_wait_s") + STAT_KEYS:
                     if key in metrics:
                         row[key] = metrics[key]
                 history.append(row)
@@ -183,6 +186,12 @@ def fit_elastic(config, steps: Optional[int] = None, *,
     restarts = 0
     while True:
         session = TrainSession.from_config(config, mesh=mesh, callbacks=cbs)
+        if restarts:
+            # after any elastic rebuild, validate + log the settings
+            # actually in force (span can be re-clamped by the smaller
+            # dp) — same check the controller-resize driver runs
+            from repro.control.resize import log_effective
+            log_effective(session, label=f"shrink #{restarts}")
         try:
             history += session.fit(steps)
             return history, session

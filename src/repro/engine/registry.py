@@ -36,7 +36,8 @@ from typing import Any, Callable, Dict, Optional, Sequence
 
 from repro.core import adasum as A
 from repro.core import rvh as R
-from repro.core.combine import (CombineConfig, build_fused_combiner,
+from repro.core.combine import (CombineConfig, _level_triple,
+                                build_fused_combiner, stack_stats,
                                 tree_combine_per_layer, tree_combine_whole)
 
 PyTree = Any
@@ -83,13 +84,20 @@ def registry_key(op: str, backend: str = "") -> str:
 
 def make_combiner(cfg: CombineConfig, *, mesh=None,
                   dp_axes: Sequence[str] = (),
-                  leaf_specs: Optional[PyTree] = None) -> Combiner:
+                  leaf_specs: Optional[PyTree] = None,
+                  with_stats: bool = False) -> Combiner:
     """Registry-dispatched replacement for core.combine.build_combiner.
 
     Every returned combiner carries a `combine_path` attribute naming
     the implementation that will actually run (e.g. 'gspmd-fused' vs
     'gspmd-reference') — the run-metadata hook benchmarks record, since
-    the registry key alone can hide a fallback."""
+    the registry key alone can hide a fallback.
+
+    with_stats=True returns a combiner whose calls yield
+    (combined, CombineStats) — see `stats_combiner`."""
+    if with_stats:
+        return stats_combiner(cfg, mesh=mesh, dp_axes=tuple(dp_axes),
+                              leaf_specs=leaf_specs)
     key = registry_key(cfg.op, cfg.backend)
     factory = get_combiner_factory(key)
     combiner = factory(cfg, mesh=mesh, dp_axes=tuple(dp_axes),
@@ -100,6 +108,65 @@ def make_combiner(cfg: CombineConfig, *, mesh=None,
         except AttributeError:      # exotic callables (partial, C ext)
             pass
     return combiner
+
+
+def probe_stats(stacked: PyTree, acc_dtype) -> dict:
+    """Level-0 CombineStats geometry probe for combiners that don't
+    natively surface dot triples (sum/mean/adascale/rvh/custom): pair
+    adjacent lanes once and total [dot, ‖a‖², ‖b‖²] over all leaves.
+    Level 0 pairs lanes that saw independent batches, which is all the
+    gradient-noise estimator needs; GSPMD picks the reduction
+    collectives. Returns {'levels': f32 [1, 3]} ([0, 3] at span 1)."""
+    import jax
+    leaves = jax.tree.leaves(stacked)
+    if not leaves or leaves[0].shape[0] < 2:
+        return stack_stats([])
+    return stack_stats([_level_triple(leaves, acc_dtype)])
+
+
+def stats_combiner(cfg: CombineConfig, *, mesh=None,
+                   dp_axes: Sequence[str] = (),
+                   leaf_specs: Optional[PyTree] = None) -> Combiner:
+    """A combiner returning (combined, CombineStats).
+
+    The adasum gspmd/fused paths surface their own per-level triples —
+    piggybacked on the per-bucket psums the combine already issues
+    (zero extra collectives on the fused path); every other combiner is
+    wrapped with the level-0 `probe_stats`. The combined output is the
+    SAME program as the plain combiner — stats only read existing
+    intermediates, never reorder the combine math."""
+    key = registry_key(cfg.op, cfg.backend)
+    if key in ("adasum-gspmd", "adasum-fused"):
+        if cfg.fused:
+            fused = build_fused_combiner(cfg, mesh=mesh, dp_axes=dp_axes,
+                                         leaf_specs=leaf_specs,
+                                         with_stats=True)
+            if fused is not None:
+                fused.combine_path = "gspmd-fused"
+                return fused
+            if key == "adasum-fused":
+                raise ValueError(
+                    "adasum-fused: the lane axis is device-sharded (one "
+                    "lane per DP rank); use backend='rvh' or "
+                    "backend='gspmd_tree' there")
+        fn = tree_combine_per_layer if cfg.per_layer else tree_combine_whole
+
+        def ref(stacked):
+            collect: list = []
+            out = fn(stacked, cfg.acc, collect=collect)
+            return out, stack_stats(collect)
+
+        ref.combine_path = "gspmd-reference"
+        return ref
+
+    base = make_combiner(cfg, mesh=mesh, dp_axes=dp_axes,
+                         leaf_specs=leaf_specs)
+
+    def probed(stacked):
+        return base(stacked), probe_stats(stacked, cfg.acc)
+
+    probed.combine_path = getattr(base, "combine_path", key)
+    return probed
 
 
 # --------------------------------------------------------------- built-ins

@@ -29,6 +29,8 @@ import numpy as np
 
 from repro.checkpoint import AsyncCheckpointManager, CheckpointManager
 from repro.configs.base import get_config, get_reduced, pad_heads_for_tp
+from repro.control.noise import STAT_KEYS
+from repro.control.telemetry import run_fingerprint
 from repro.data import make_source
 from repro.launch.mesh import make_local_mesh
 from repro.models import build_model
@@ -76,7 +78,10 @@ class CheckpointCallback(Callback):
         self.every = every
 
     def on_step_end(self, session, step, metrics, dt):
-        if session.checkpoint and (step + 1) % self.every == 0:
+        # every <= 0: periodic saves off — only the final on_fit_end
+        # save (and driver-side save_sync at elastic/resize boundaries)
+        if session.checkpoint and self.every > 0 \
+                and (step + 1) % self.every == 0:
             session.save(step + 1)
 
     def on_fit_end(self, session, history):
@@ -138,6 +143,7 @@ class TrainSession:
         self.state: PyTree = runtime.init_state(jax.random.key(0))
         self._step_fn = jax.jit(runtime.train_step, donate_argnums=(0,))
         self._delayed_stream = None   # set by use_delayed_stream()
+        self._last_stats: Dict[str, float] = {}   # latest CombineStats
 
     # ------------------------------------------------------------ construction
     @classmethod
@@ -202,7 +208,17 @@ class TrainSession:
                 "local_steps": self.config.local_steps,
                 "combine_delay": self.config.combine_delay,
                 "devices": int(self.mesh.devices.size),
-                "mesh": sizes}
+                "mesh": sizes,
+                # CombineStats observability: whether the step emits the
+                # grad-noise/orthogonality/gain metrics, and the latest
+                # values seen (empty before the first step / when off) —
+                # exposed even when the adaptive controller is off
+                "stats_enabled": rt.combine_stats,
+                "combine_stats": dict(self._last_stats),
+                "adaptive_batch": self.config.adaptive_batch,
+                "global_batch": self.config.global_batch,
+                "lr": self.config.lr,
+                **run_fingerprint(self.config)}
 
     def use_delayed_stream(self, comm_delay: float = 0.0):
         """Route steps through a host-level `DelayedCombineStream`: the
@@ -233,7 +249,11 @@ class TrainSession:
                                                             batch)
         else:
             self.state, metrics = self._step_fn(self.state, batch)
-        return {k: float(jax.device_get(v)) for k, v in metrics.items()}
+        out = {k: float(jax.device_get(v)) for k, v in metrics.items()}
+        stats = {k: out[k] for k in STAT_KEYS if k in out}
+        if stats:
+            self._last_stats = stats
+        return out
 
     def fit(self, steps: Optional[int] = None) -> List[Dict[str, float]]:
         """Train to `steps` total (resuming from the latest checkpoint if

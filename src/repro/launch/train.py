@@ -8,8 +8,9 @@ Runs on whatever devices exist (use XLA_FLAGS host-device-count for local
 multi-device runs). Fault-tolerant: periodic atomic checkpoints (written
 off-thread; --sync-checkpoint to block), SIGTERM save, resume from
 latest, prefetched batches (--no-prefetch for the serial loop),
-straggler monitor, optional injected failures for drills, and --elastic
-for the checkpoint + halve-DP restart driver. All of that lives in
+straggler monitor, optional injected failures for drills, --elastic
+for the checkpoint + halve-DP restart driver, and --adaptive-batch for
+the gradient-noise-adaptive batch/span grow driver (repro.control). All of that lives in
 `repro.engine` (TrainSession + pipeline); this module only parses flags
 and forwards.
 """
@@ -33,7 +34,10 @@ def main(argv=None):
 
     cfg = EngineConfig.from_cli(engine_argv)
     callbacks = default_callbacks(cfg, fail_at=args.fail_at)
-    if cfg.elastic:
+    if cfg.adaptive_batch:
+        from repro.control import fit_adaptive
+        history, session = fit_adaptive(cfg, cfg.steps, callbacks=callbacks)
+    elif cfg.elastic:
         history, session = fit_elastic(cfg, cfg.steps, callbacks=callbacks)
     else:
         session = TrainSession.from_config(cfg, callbacks=callbacks)

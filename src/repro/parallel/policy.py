@@ -43,6 +43,9 @@ class RunPolicy:
     compress: str = "none"            # 'int8' RVH wire compression
     fused_combine: bool = True        # bucketed single-pass gspmd_tree path
     fusion_threshold_mb: int = 64     # Horovod-style bucket budget (§4.4.3)
+    combine_stats: bool = True        # surface CombineStats (grad-noise /
+                                      # lane-orthogonality / gain metrics)
+                                      # from the combiner's own dot products
 
 
 def get_policy(arch: str) -> RunPolicy:

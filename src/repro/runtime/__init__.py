@@ -1,5 +1,6 @@
 from .monitor import (StepMonitor, StragglerConfig, FailureInjector,
                       NodeLossError, next_power_of_two_below)
 from .prefetch import DelayedSource, Prefetcher
-from .elastic import ElasticPlan, RestartSignal, plan_shrink
+from .elastic import (ElasticPlan, ResizePlan, ResizeSignal, RestartSignal,
+                      plan_grow, plan_shrink)
 from .delayed import DelayedCombineStream

@@ -48,3 +48,87 @@ def plan_shrink(dp_total: int) -> ElasticPlan:
     if dp_total <= 1:
         return ElasticPlan(dp_total, dp_total)
     return ElasticPlan(dp_total, next_power_of_two_below(dp_total))
+
+
+# ------------------------------------------------------- planned resize
+#
+# The failure-shrink path above, generalized: the noise-adaptive batch
+# controller (repro.control) *plans* a growth — larger global batch
+# and/or Adasum span, LR rescaled — and the driver executes it through
+# the same save -> rebuild-from-config -> resume machinery a shrink
+# uses. Adasum's scale invariance is again what makes the mid-run
+# change safe: the combined update stays well-conditioned at any span.
+
+
+class ResizeSignal(Exception):
+    """The batch controller requests a planned resize at `step`."""
+
+    def __init__(self, step: int, plan: "ResizePlan"):
+        super().__init__(f"adaptive resize requested at step {step} "
+                         f"({plan.describe()})")
+        self.step = step
+        self.plan = plan
+
+
+@dataclasses.dataclass(frozen=True)
+class ResizePlan:
+    """One controller growth decision, fully resolved: the batch/span/LR
+    to rebuild the session with."""
+    old_batch: int
+    new_batch: int
+    old_span: int
+    new_span: int
+    old_lr: float
+    new_lr: float
+    reason: str = "noise"
+
+    @property
+    def grew(self) -> bool:
+        return (self.new_batch > self.old_batch
+                or self.new_span > self.old_span)
+
+    def describe(self) -> str:
+        return (f"batch {self.old_batch}->{self.new_batch}, "
+                f"span {self.old_span}->{self.new_span}, "
+                f"lr {self.old_lr:g}->{self.new_lr:g}, {self.reason}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def plan_grow(global_batch: int, span: int, dp_total: int, lr: float, *,
+              factor: int = 2, grow_span: bool = True,
+              max_global_batch: int = 0, lr_scale: float = 1.0,
+              reason: str = "noise") -> ResizePlan:
+    """Resolve an AdaBatch-style growth by `factor` into a concrete
+    ResizePlan. Pure sizing logic:
+
+      * new batch = factor x old, capped at `max_global_batch` (0 = no
+        cap); if the cap already binds, the plan is a no-grow no-op
+        (`plan.grew` False) and the driver stops resizing;
+      * span grows with the batch when `grow_span`, but never past
+        dp_total and always to a power-of-two divisor of it (the fused
+        combine / RVH lane-count contract);
+      * new lr = lr * lr_scale — the caller computes lr_scale (AdaScale
+        gain for the factor, linear, or 1.0).
+    """
+    assert factor >= 2, factor
+    new_batch = global_batch * factor
+    if max_global_batch and new_batch > max_global_batch:
+        new_batch = max(max_global_batch, global_batch)
+    new_span = span
+    if grow_span and new_batch > global_batch:
+        cand = span * factor
+        while cand > dp_total or (dp_total % cand) or (cand & (cand - 1)):
+            cand //= 2
+            if cand <= span:
+                cand = span
+                break
+        # a lane must still hold at least one batch row
+        if cand > span and new_batch % cand == 0:
+            new_span = cand
+    if new_batch == global_batch:
+        return ResizePlan(global_batch, global_batch, span, span, lr, lr,
+                          reason="capped")
+    return ResizePlan(global_batch, new_batch, span, new_span, lr,
+                      float(lr * lr_scale), reason=reason)

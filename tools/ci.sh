@@ -33,6 +33,10 @@ echo "== delayed combine benchmark smoke (overlap hides the exchange) =="
 python -m benchmarks.delayed_combine --smoke | grep -q "delayed_combine smoke OK" || {
     echo "delayed_combine smoke failed"; exit 1; }
 
+echo "== adaptive batch benchmark smoke (>=1 controller resize) =="
+python -m benchmarks.adaptive_batch --smoke | grep -q "adaptive_batch smoke OK" || {
+    echo "adaptive_batch smoke failed"; exit 1; }
+
 echo "== serve smoke (3 staggered requests, continuous batching) =="
 serve_out=$(python -m repro.launch.serve --arch qwen3-32b --reduced \
     --requests 3 --prompt-len 16 --gen 8 --max-slots 2 --stagger 2)
