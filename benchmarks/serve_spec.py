@@ -1,0 +1,204 @@
+"""Speculative-decoding benchmark: draft propose + one-forward verify
+vs plain paged decode, at EQUAL tokens.
+
+The serve shape speculation targets: decode-heavy greedy streams, where
+the plain engine pays one target dispatch per token per batch and the
+speculative engine pays one draft scan + ONE target verify for up to
+k+1 tokens per slot. The workload runs the same requests through both
+engines; tokens are asserted bitwise-equal first (the speculation
+contract — verification recomputes every position, so the draft can
+only change speed, never content), then the timed repeats interleave
+the two engines and report medians.
+
+The draft must be genuinely cheaper than the target AND agree with it,
+without training anything: the target's blocks past the first get their
+output projections zeroed (attention `wo`, MLP down-projection — each
+block becomes a residual passthrough), so the 4-layer target computes
+EXACTLY what its first layer computes, and a 1-layer draft sliced from
+the same params proposes the target's own greedy continuation at ~1/4
+the depth. Acceptance is deterministically 1.0 — the upper bound; a
+real deployment's win scales with its measured acceptance rate
+(reported per run), while the bitwise guarantee is
+acceptance-independent.
+
+Emits `BENCH_serve_spec.json`. Acceptance bar: >= 2x fewer target
+dispatches per generated token, tok/s >= 1.5x plain paged.
+
+    python -m benchmarks.serve_spec            # full run + JSON
+    python -m benchmarks.serve_spec --smoke    # CI: tokens bitwise vs
+        plain decode, acceptance > 0
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+from .common import append_history, emit
+
+OUT = Path(__file__).resolve().parents[1] / "BENCH_serve_spec.json"
+
+# (prompt_len, gen_len): decode-heavy, mixed lengths, staggered arrivals
+WORKLOAD = [(12, 96), (17, 92), (9, 100), (14, 94)]
+MAX_SLOTS = 4
+STAGGER = 2
+SPEC_K = 4
+
+
+def _models():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import ModelConfig
+    from repro.models import build_model
+
+    mcfg = ModelConfig("bench", "dense", 4, 256, 8, 4, 512, 257,
+                       head_dim=32)
+    model = build_model(mcfg, attn_chunk=32,
+                        param_dtype=jnp.dtype("float32"))
+    params = model.init(jax.random.key(0))
+    # blocks 1..3: zero the output projections -> residual passthrough;
+    # the 4-layer target now computes exactly its first layer, and the
+    # 1-layer slice below is an EXACT draft at ~1/4 the depth
+    mask = jnp.asarray([1.0] + [0.0] * (mcfg.n_layers - 1), jnp.float32)
+    blocks = dict(params["blocks"])
+    blocks["attn"] = dict(blocks["attn"],
+                          wo=blocks["attn"]["wo"] * mask[:, None, None])
+    blocks["mlp"] = dict(blocks["mlp"],
+                         w_down=blocks["mlp"]["w_down"]
+                         * mask[:, None, None])
+    params = dict(params, blocks=blocks)
+    dparams = dict(params,
+                   blocks=jax.tree.map(lambda x: x[:1], params["blocks"]))
+    return model, params, dparams
+
+
+def _build(model, params, dparams, speculate: bool, max_len: int):
+    from repro.engine import EngineConfig, ServeEngine
+
+    cfg = EngineConfig(max_slots=MAX_SLOTS, max_len=max_len,
+                       kv_layout="paged",
+                       speculation_k=SPEC_K if speculate else 0,
+                       draft_config={"n_layers": 1, "name": "bench-draft"}
+                       if speculate else None)
+    return ServeEngine(cfg, model, None, params,
+                       draft_params=dparams if speculate else None)
+
+
+def _workload(vocab: int, workload):
+    import numpy as np
+    rng = np.random.RandomState(0)
+    return [(rng.randint(0, vocab, p), g) for p, g in workload]
+
+
+def _run(engine, reqs):
+    from repro.engine import GenerationRequest
+    handles = []
+    for prompt, gen in reqs:
+        handles.append(engine.submit(GenerationRequest(
+            prompt=prompt.copy(), max_new_tokens=gen)))
+        for _ in range(STAGGER):
+            engine.step()
+    engine.drain()
+    return handles
+
+
+def _fresh_stats(engine):
+    for k in ("submitted", "completed", "generated_tokens",
+              "prefill_calls", "decode_steps", "prefix_hits",
+              "prefix_tokens_reused", "cow_copies", "preemptions",
+              "spec_ticks", "spec_tokens_proposed",
+              "spec_tokens_accepted", "draft_prefills"):
+        engine.stats[k] = 0
+    engine.stats["started_at"] = None
+
+
+def main(smoke: bool = False):
+    # smoke trims generation (CI wall clock) but keeps every assertion
+    workload = ([(p, g // 4) for p, g in WORKLOAD[:3]] if smoke
+                else WORKLOAD)
+    plain_max = max(p + g for p, g in workload) + 1
+    # speculation stops within k of capacity; pad so the LAST tokens of
+    # the longest request still speculate (equal-token comparison)
+    max_len = plain_max + SPEC_K
+    model, params, dparams = _models()
+    plain = _build(model, params, dparams, False, max_len)
+    spec = _build(model, params, dparams, True, max_len)
+    reqs = _workload(model.cfg.vocab_size, workload)
+    toks = sum(g for _, g in workload)
+
+    # correctness first (doubles as compile warmup): bitwise tokens
+    hp = _run(plain, reqs)
+    hs = _run(spec, reqs)
+    for a, b in zip(hp, hs):
+        assert a.tokens == b.tokens, "spec tokens diverged from plain"
+    kv = spec.kv_stats()
+    assert kv["spec_acceptance_rate"] > 0, kv
+    dpt = {n: e.stats["decode_steps"] / e.stats["generated_tokens"]
+           for n, e in (("plain", plain), ("spec", spec))}
+
+    if smoke:
+        ratio = dpt["plain"] / dpt["spec"]
+        assert ratio >= 2.0, dpt
+        print(f"serve_spec smoke OK: acceptance="
+              f"{kv['spec_acceptance_rate']:.2f}, dispatches/token "
+              f"{dpt['plain']:.3f} -> {dpt['spec']:.3f} ({ratio:.1f}x), "
+              f"tokens bitwise-equal")
+        return {"dispatch_ratio": ratio}
+
+    # timed repeats, interleaved so host noise hits both engines
+    iters = 5
+    times = {"plain": [], "spec": []}
+    for _ in range(iters):
+        for name, eng in (("plain", plain), ("spec", spec)):
+            _fresh_stats(eng)
+            t0 = time.perf_counter()
+            _run(eng, reqs)
+            times[name].append(time.perf_counter() - t0)
+
+    results = {}
+    for name, eng in (("plain", plain), ("spec", spec)):
+        ts = sorted(times[name])
+        med = ts[len(ts) // 2]
+        results[name] = {
+            "wall_s": med, "wall_s_all": ts, "tok_s": toks / med,
+            "dispatches_per_token":
+                eng.stats["decode_steps"] / eng.stats["generated_tokens"],
+        }
+        emit(f"serve_spec_{name}", med * 1e6,
+             f"tok_s={results[name]['tok_s']:.1f} "
+             f"dpt={results[name]['dispatches_per_token']:.3f}")
+
+    kv = spec.kv_stats()
+    dispatch_ratio = (results["plain"]["dispatches_per_token"]
+                      / results["spec"]["dispatches_per_token"])
+    tok_ratio = results["spec"]["tok_s"] / results["plain"]["tok_s"]
+    result = {
+        "workload": workload, "max_slots": MAX_SLOTS,
+        "stagger": STAGGER, "speculation_k": SPEC_K,
+        "arch": model.cfg.name,
+        "draft": "1-layer slice of the 4-layer target (upper blocks "
+                 "zeroed: exact agreement, acceptance upper bound)",
+        "plain": results["plain"], "spec": results["spec"],
+        "acceptance_rate": kv["spec_acceptance_rate"],
+        "dispatch_ratio_plain_over_spec": dispatch_ratio,
+        "tok_s_ratio_spec_over_plain": tok_ratio,
+        "spec_stats": {k: spec.stats[k] for k in
+                       ("spec_ticks", "spec_tokens_proposed",
+                        "spec_tokens_accepted", "draft_prefills")},
+    }
+    OUT.write_text(json.dumps(result, indent=2) + "\n")
+    # replicated serving (ServeEngine built with mesh=None)
+    append_history("serve_spec", result, mesh=None)
+    emit("serve_spec_dispatch_ratio", dispatch_ratio,
+         f"tok_s_ratio={tok_ratio:.2f} wrote {OUT.name}")
+    assert dispatch_ratio >= 2.0, \
+        f"dispatch ratio {dispatch_ratio:.2f} < 2x"
+    assert tok_ratio >= 1.5, f"spec tok/s {tok_ratio:.2f}x of plain"
+    return result
+
+
+if __name__ == "__main__":
+    out = main(smoke="--smoke" in sys.argv)
+    if "--smoke" not in sys.argv:
+        print(json.dumps(out, indent=2))

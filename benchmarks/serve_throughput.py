@@ -99,11 +99,16 @@ def main():
         emit(f"serve_throughput_{name}", r["wall_s"] * 1e6,
              f"tok_s={r['tok_s']:.1f}")
 
+    # per-request latency percentiles (TTFT/TPOT), accumulated across
+    # the warmup + timed repeats by the engine's retirement hook
+    latency = {k: v for k, v in engine.throughput().items()
+               if k.startswith(("ttft_", "tpot_"))}
     result = {
         "requests": REQUESTS, "prompt_len": PROMPT, "gen_len": GEN,
         "arch": model.cfg.name,
         "legacy": results["legacy"], "engine": results["engine"],
         "speedup": results["legacy"]["wall_s"] / results["engine"]["wall_s"],
+        "latency": latency,
         "engine_stats": {k: v for k, v in engine.stats.items()
                          if k != "started_at"},
     }

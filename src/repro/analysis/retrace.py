@@ -13,6 +13,10 @@ computes), every transition the engine can apply to the cache
   set_page_tables                    (page churn: growth, COW, release)
   copy_pages                         (COW backing-store moves)
   select_rows(_paged)                (hot-reload dual-version merge)
+  verify / set_positions             (speculation: fused k+1 scoring,
+                                      accept/rollback pos rewrite)
+  draft propose / insert             (the draft's own dense cache, held
+                                      to its own steady signature)
 
 is eval_shaped and its output signature compared leaf-for-leaf against
 the steady signature. Any drift — a recurrent leaf re-emitted in the
@@ -94,7 +98,8 @@ def check_arch(arch: str, layout: str, *, max_slots: int = 4,
     from repro.models import build_model
 
     config = EngineConfig(arch=arch, reduced=True, max_slots=max_slots,
-                          max_len=max_len, kv_layout=layout)
+                          max_len=max_len, kv_layout=layout,
+                          speculation_k=2)
     model = build_model(get_reduced(arch))
     st = abstract_serve_state(config, model)
     cache, params = st["cache"], st["params"]
@@ -146,7 +151,51 @@ def check_arch(arch: str, layout: str, *, max_slots: int = 4,
             select_rows, jax.ShapeDtypeStruct((B,), jnp.bool_), cache,
             cache)))
 
+    # speculation transitions: the verify step must map the TARGET cache
+    # signature onto itself (it is dispatched on the same jitted cache
+    # the decode tick owns), and the draft's dense cache — a separate
+    # steady signature — must survive its own propose/prefill-insert
+    # cycle. Absent for recurrent targets (speculation disables itself).
+    spec = st["speculation"]
+    draft_transitions: List[Tuple[str, Any]] = []
+    if spec is not None:
+        from repro.engine.build import (make_draft_propose,
+                                        make_verify_step)
+        from repro.engine.serving.slots import set_positions
+        k = spec["k"]
+        posB = jax.ShapeDtypeStruct((B,), i32)
+        vtok = jax.ShapeDtypeStruct((B, k + 1), i32)
+        nxt, g, acc, vout = jax.eval_shape(make_verify_step(model),
+                                           params, vtok, cache)
+        transitions.append(("verify", vout))
+        for what, got, shape in (("verify nxt", nxt, (B, 1)),
+                                 ("verify g", g, (B, k + 1)),
+                                 ("verify acc", acc, (B,))):
+            if (tuple(got.shape), jnp.dtype(got.dtype)) != (
+                    shape, jnp.dtype(i32)):
+                tok_errs.append(f"{what} {got.shape}/{got.dtype} != "
+                                f"{shape}/int32")
+        transitions.append(("set_positions(accept/rollback)",
+                            jax.eval_shape(set_positions, cache, posB)))
+        dmodel, dparams = spec["draft_model"], spec["draft_params"]
+        dcache = spec["draft_cache"]
+        drafts, dout = jax.eval_shape(make_draft_propose(dmodel, k),
+                                      dparams, tok, dcache, posB)
+        draft_transitions.append(("draft_propose", dout))
+        if (tuple(drafts.shape), jnp.dtype(drafts.dtype)) != (
+                (B, k), jnp.dtype(i32)):
+            tok_errs.append(f"draft tokens {drafts.shape}/{drafts.dtype} "
+                            f"!= ({B}, {k})/int32")
+        for n in group_sizes:
+            draft_transitions.append(
+                (f"draft_insert[n={n}]", jax.eval_shape(
+                    insert_rows_at, dcache, spec["draft_rows"][n],
+                    jax.ShapeDtypeStruct((n,), i32))))
+
     violations = tok_errs + signature_violations(cache, transitions)
+    if spec is not None:
+        violations += signature_violations(spec["draft_cache"],
+                                           draft_transitions)
     return {
         "arch": arch,
         "layout_requested": layout,
@@ -155,7 +204,8 @@ def check_arch(arch: str, layout: str, *, max_slots: int = 4,
         "prefill_mode": st["prefill_mode"],
         "dense_fallback_leaves": st["dense_fallback"][0],
         "dense_fallback_bytes": st["dense_fallback"][1],
-        "transitions": len(transitions),
+        "transitions": len(transitions) + len(draft_transitions),
+        "speculation_checked": spec is not None,
         "violations": violations,
     }
 

@@ -553,3 +553,71 @@ def make_sampling_decode_step(model: Model):
                             top_k, top_p)
         return nxt[:, None], cache
     return decode_step
+
+
+def make_verify_step(model: Model):
+    """Greedy speculative verification, ONE target dispatch per tick.
+
+    tokens [B, k+1] = [last committed token, draft_1..draft_k]; the
+    model's verify_step scores all k+1 positions in one fused forward
+    (writing their K/V rows as it goes), then in the SAME jit: per-slot
+    greedy argmax g [B, k+1], acceptance = longest prefix of drafts
+    matching g, cache pos advanced to pos + accepted + 1 — which both
+    commits the accepted rows and rolls back the rejected ones (they
+    become masked garbage the next writes overwrite). Shapes are fixed
+    at [max_slots, k+1], so slot churn, rollback depth, and hot-reload
+    never retrace.
+
+    Returns (next feed token [B,1], greedy tokens [B,k+1], accepted [B],
+    cache). Row b commits g[b, :accepted[b]+1]; the next tick feeds
+    g[b, accepted[b]] — the last committed token, exactly like plain
+    decode."""
+    from .serving.slots import set_positions, slot_positions
+
+    def verify(params, tokens, cache):
+        pos = slot_positions(cache)
+        logits, cache = model.verify_step(params, tokens, cache)
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)        # [B,k+1]
+        match = (g[:, :-1] == tokens[:, 1:]).astype(jnp.int32)
+        acc = jnp.sum(jnp.cumprod(match, axis=1), axis=1)        # [B] 0..k
+        cache = set_positions(cache, pos + acc + 1)
+        nxt = jnp.take_along_axis(g, acc[:, None], axis=1)       # [B,1]
+        return nxt, g, acc, cache
+    return verify
+
+
+def make_draft_propose(draft_model: Model, k: int):
+    """k autoregressive greedy draft steps in ONE dispatch: a lax.scan
+    of batched decode steps over the draft's dense per-slot cache,
+    chaining each argmax into the next feed. `pos` [B] (the host's
+    committed position per slot) is written into the draft cache first —
+    that single rewrite heals last tick's draft overrun (its rejected
+    rows become masked garbage this scan overwrites), so draft rollback
+    costs nothing and adds no extra dispatch.
+
+    tokens [B,1] = last committed token; returns (drafts [B,k], cache at
+    pos + k + 1).
+
+    The scan runs k+1 steps, not k: step t writes the K/V row for its
+    INPUT token, so k steps would leave the last draft d_k proposed but
+    never fed — a hole at row pos+k. On full acceptance the target
+    commits through d_k and the next propose would attend across that
+    hole, collapsing acceptance to zero from then on. The extra step
+    feeds d_k (its output d_{k+1} is discarded), keeping the draft cache
+    contiguous through every accept depth."""
+    from .serving.slots import set_positions
+
+    def propose(params, tokens, cache, pos):
+        cache = set_positions(cache, pos)
+
+        def body(carry, _):
+            tok, cache = carry
+            logits, cache = draft_model.decode_step(params, tok, cache)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(
+                jnp.int32)[:, None]
+            return (nxt, cache), nxt
+
+        (_, cache), drafts = jax.lax.scan(body, (tokens, cache), None,
+                                          length=k + 1)
+        return jnp.moveaxis(drafts[:k, ..., 0], 0, 1), cache     # [B,k]
+    return propose

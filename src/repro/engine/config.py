@@ -136,6 +136,17 @@ class EngineConfig:
     prefix_sharing: bool = True # map page-aligned shared prompt prefixes
                                 # onto the same read-only pages; prefill
                                 # computes only the unshared tail
+    speculation_k: int = 0      # draft-model speculative decoding: draft
+                                # tokens proposed + verified per tick
+                                # (0 = off). Greedy-only — sampled slots
+                                # make the tick fall back to plain decode
+    draft_config: Optional[Dict[str, Any]] = None
+                                # draft model spec: {'arch': preset-name
+                                # [, 'reduced': bool, field overrides]}
+                                # or plain ModelConfig field overrides
+                                # applied to the target config; None =>
+                                # auto-derived shrunken target (quarter
+                                # depth). Must share the target's vocab
 
     # ------------------------------------------------------------ validation
     def validate(self, dp_total: Optional[int] = None) -> "EngineConfig":
@@ -258,6 +269,21 @@ class EngineConfig:
                     f"model-aware one-full-slot minimum — sliding "
                     f"windows cap it below max_len — is checked at "
                     f"ServeEngine build)")
+        if self.speculation_k < 0:
+            raise ValueError(
+                f"speculation_k must be >= 0 (draft tokens per tick; 0 "
+                f"disables speculation), got {self.speculation_k}")
+        if self.draft_config is not None:
+            if not self.speculation_k:
+                raise ValueError(
+                    "draft_config is set but speculation_k=0; speculation "
+                    "is off without draft tokens — set speculation_k >= 1 "
+                    "or drop draft_config")
+            if not isinstance(self.draft_config, dict) or not self.draft_config:
+                raise ValueError(
+                    f"draft_config must be a non-empty dict ({{'arch': "
+                    f"preset[, 'reduced': bool]}} or ModelConfig field "
+                    f"overrides), got {self.draft_config!r}")
         if dp_total is not None:
             span = self.span or dp_total
             if span > dp_total or dp_total % span:
@@ -468,6 +494,14 @@ class EngineConfig:
                         "(0 = enough for every slot at full capacity)")
         ap.add_argument("--no-prefix-sharing", action="store_true",
                         help="serving: disable shared-prefix page reuse")
+        ap.add_argument("--speculation-k", type=int, default=None,
+                        dest="speculation_k",
+                        help="serving: draft tokens proposed + verified "
+                        "per tick (0 = plain decode)")
+        ap.add_argument("--draft-preset", default=None, dest="draft_preset",
+                        help="serving: draft model arch preset for "
+                        "speculation (default: auto-derived shrunken "
+                        "target); honors --reduced")
         args, extra = ap.parse_known_args(argv)
         if extra:
             raise SystemExit(f"unknown arguments: {extra}")
@@ -492,6 +526,10 @@ class EngineConfig:
             over["combine_stats"] = False
         if args.no_grow_span:
             over["grow_span"] = False
+        if getattr(args, "draft_preset", None):
+            over["draft_config"] = {"arch": args.draft_preset,
+                                    "reduced": cfg.reduced
+                                    or bool(over.get("reduced"))}
         # Local CLI runs ride small host meshes: FSDP/ZeRO-2 presets from
         # the pod-scale table are switched off (as launch/train.py always
         # did) unless explicitly re-enabled via defaults.

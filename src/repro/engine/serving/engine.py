@@ -142,6 +142,53 @@ def resolve_serve_parts(config, *, model=None, mesh=None, params=None,
     return model, mesh, params, checkpoint, loaded_step
 
 
+def derive_draft_config(target_cfg, spec: Optional[Dict[str, Any]] = None):
+    """The draft ModelConfig a speculation-enabled engine builds.
+
+    `spec` (EngineConfig.draft_config) forms:
+      * None — auto-derived shrink of the target: quarter depth, MoE
+        routing dropped (a draft exists to be cheap), same widths/vocab;
+      * {'arch': preset-name[, 'reduced': bool, field overrides]} — a
+        registry preset (the --draft-preset CLI path);
+      * {field overrides} — dataclasses.replace over the target config.
+
+    Invariants enforced for every form: the draft shares the target's
+    vocab (proposals must live in the target's token space), is an
+    attention-family decoder (its per-slot cache rolls back by a pos
+    rewrite), and runs full attention (sliding_window forced to 0 so the
+    dense draft cache masks by pos alone — no rolling wrap to heal)."""
+    import dataclasses as _dc
+    from repro.configs.base import get_config, get_reduced
+    if spec and "arch" in spec:
+        extra = {k: v for k, v in spec.items() if k not in ("arch",
+                                                            "reduced")}
+        dcfg = (get_reduced(spec["arch"]) if spec.get("reduced")
+                else get_config(spec["arch"]))
+        if extra:
+            dcfg = _dc.replace(dcfg, **extra)
+    elif spec:
+        dcfg = _dc.replace(target_cfg, **spec)
+    else:
+        dcfg = _dc.replace(target_cfg,
+                           name=f"{target_cfg.name}-draft",
+                           n_layers=max(1, target_cfg.n_layers // 4),
+                           n_experts=0, n_experts_per_tok=0,
+                           n_shared_experts=0, first_dense_layers=0)
+    if dcfg.sliding_window:
+        dcfg = _dc.replace(dcfg, sliding_window=0)
+    if dcfg.family in ("ssm", "hybrid") or dcfg.is_encoder_decoder:
+        raise ValueError(
+            f"draft model {dcfg.name} (family={dcfg.family}) cannot "
+            f"draft for speculation: recurrent/enc-dec state has no "
+            f"pos-rewrite rollback — pick an attention-family draft")
+    if dcfg.vocab_size != target_cfg.vocab_size:
+        raise ValueError(
+            f"draft vocab_size={dcfg.vocab_size} != target vocab_size="
+            f"{target_cfg.vocab_size} ({target_cfg.name}): draft "
+            f"proposals must be target token ids")
+    return dcfg
+
+
 def _make_parallel_prefill(model, cap: int):
     """Returns the last-position logits [B, V] (not an argmax'd token):
     the engine applies the per-request sampling policy — greedy argmax
@@ -260,17 +307,42 @@ def abstract_serve_state(config, model) -> Dict[str, Any]:
             jax.ShapeDtypeStruct((n,), jnp.int32))[1]
     fallback = (dense_fallback_stats(cache)
                 if config.kv_layout == "paged" else (0, 0))
+    speculation = None
+    if config.speculation_k and model.verify_step is not None:
+        from repro.models import build_model as _build_model
+        dcfg = derive_draft_config(cfg, config.draft_config)
+        dmodel = _build_model(dcfg,
+                              param_dtype=jnp.dtype(config.param_dtype))
+        dparams = jax.eval_shape(dmodel.init, kshape)
+        ddtypes = _steady_cache_dtypes(dmodel, dparams, B, cap)
+        dcache = jax.eval_shape(
+            lambda p: jax.tree.map(lambda c, dt: c.astype(dt),
+                                   dmodel.init_cache(p, B, cap,
+                                                     per_slot=True),
+                                   ddtypes), dparams)
+        drows = {}
+        dprefill = _make_parallel_prefill(dmodel, cap)
+        for n in sorted({1, B}):
+            drows[n] = jax.eval_shape(
+                dprefill, dparams,
+                jax.ShapeDtypeStruct((n, P), jnp.int32),
+                jax.ShapeDtypeStruct((n,), jnp.int32))[1]
+        speculation = {"k": config.speculation_k, "draft_model": dmodel,
+                       "draft_params": dparams, "draft_cache": dcache,
+                       "draft_rows": drows}
     return {"params": params, "cache": cache, "rows": rows,
             "layout": layout, "fallback_reason": fallback_reason,
             "dense_fallback": fallback, "prefill_mode": mode,
-            "pages": pages, "max_slots": B, "capacity": cap}
+            "pages": pages, "max_slots": B, "capacity": cap,
+            "speculation": speculation}
 
 
 class ServeEngine:
     """Continuous-batching serving engine for one (model, mesh, config)."""
 
     def __init__(self, config, model, mesh, params: PyTree, *,
-                 checkpoint=None, loaded_step: Optional[int] = None):
+                 checkpoint=None, loaded_step: Optional[int] = None,
+                 draft_params: Optional[PyTree] = None):
         cfg = model.cfg
         if cfg.is_encoder_decoder or cfg.frontend != "none":
             raise ValueError(
@@ -431,6 +503,53 @@ class ServeEngine:
                 return logits[:, -1, :], rows
             self._prefill_ext = jax.jit(_ext,
                                         static_argnames=("prefix_len",))
+        # ---- speculative decoding: draft propose -> one-forward verify
+        self.spec_k = int(config.speculation_k or 0)
+        self._draft_model = None
+        if self.spec_k and model.verify_step is None:
+            import warnings
+            from ..build import EngineWarning
+            warnings.warn(
+                f"{cfg.name} (family={cfg.family}): recurrent state has "
+                f"no pos-rewrite rollback — speculation disabled, every "
+                f"tick runs plain decode", EngineWarning, stacklevel=3)
+            self.spec_k = 0
+        if self.spec_k:
+            from repro.models import build_model as _build_model
+            from repro.models.attention import paged_capacity
+            from ..build import make_draft_propose, make_verify_step
+            dcfg = derive_draft_config(cfg, config.draft_config)
+            self._draft_model = _build_model(
+                dcfg, attn_chunk=64,
+                param_dtype=jnp.dtype(config.param_dtype))
+            self._draft_params = (draft_params if draft_params is not None
+                                  else self._draft_model.init(
+                                      jax.random.key(1)))
+            ddtypes = _steady_cache_dtypes(self._draft_model,
+                                           self._draft_params,
+                                           self.max_slots, self.max_len)
+            # the draft cache is DENSE per-slot by design: drafts are
+            # small, their rows are transient (rolled back by the next
+            # propose's pos rewrite), and paging them would double the
+            # host bookkeeping for no memory story
+            self._draft_cache = jax.tree.map(
+                lambda c, dt: c.astype(dt),
+                self._draft_model.init_cache(self._draft_params,
+                                             self.max_slots, self.max_len,
+                                             per_slot=True), ddtypes)
+            self._draft_prefill = jax.jit(
+                _make_parallel_prefill(self._draft_model, self.max_len))
+            self._propose = jax.jit(
+                make_draft_propose(self._draft_model, self.spec_k))
+            self._verify = jax.jit(make_verify_step(model))
+            # spec-tick feasibility ceiling: pos + k must stay BELOW the
+            # rolling capacity for every active slot, so verify writes
+            # land at rows pos+t exactly (no wrap/clamp) and rollback is
+            # a pure pos rewrite. SWA targets stop speculating once the
+            # window fills; everyone stops within k of max_len.
+            self._spec_cap = paged_capacity(cfg, self.max_len)
+        self._ttft: List[float] = []
+        self._tpot: List[float] = []
         self.stats = {"submitted": 0, "completed": 0, "generated_tokens": 0,
                       "prefill_calls": 0, "decode_steps": 0, "reloads": 0,
                       "kv_bytes_in_use": 0, "peak_kv_bytes_in_use": 0,
@@ -438,6 +557,8 @@ class ServeEngine:
                           self._pool.pages_free if self._pool else 0),
                       "prefix_hits": 0, "prefix_tokens_reused": 0,
                       "cow_copies": 0, "preemptions": 0,
+                      "spec_ticks": 0, "spec_tokens_proposed": 0,
+                      "spec_tokens_accepted": 0, "draft_prefills": 0,
                       "started_at": None}
         if not self.paged:
             # dense slots pay full capacity up front — that constant IS
@@ -448,16 +569,20 @@ class ServeEngine:
     # ------------------------------------------------------- construction
     @classmethod
     def from_config(cls, config, *, model=None, mesh=None, params=None,
-                    checkpoint=None, attn_chunk: int = 64) -> "ServeEngine":
+                    checkpoint=None, attn_chunk: int = 64,
+                    draft_params=None) -> "ServeEngine":
         """Build model/mesh/params from the same EngineConfig surface as
         TrainSession; with `ckpt_dir` set, serves the *trained* weights
         via the params-only restore (and hot-reloads later saves when
-        `hot_reload=True`)."""
+        `hot_reload=True`). `draft_params`: trained weights for the
+        speculation draft model (default: fresh init — correct but low
+        acceptance; speculation pays off with a draft that agrees with
+        the target)."""
         model, mesh, params, checkpoint, loaded_step = resolve_serve_parts(
             config, model=model, mesh=mesh, params=params,
             checkpoint=checkpoint, attn_chunk=attn_chunk)
         return cls(config, model, mesh, params, checkpoint=checkpoint,
-                   loaded_step=loaded_step)
+                   loaded_step=loaded_step, draft_params=draft_params)
 
     # ------------------------------------------------------------- submit
     def submit(self, request: GenerationRequest) -> RequestHandle:
@@ -727,6 +852,32 @@ class ServeEngine:
                 prompt = handle.request.prompt
                 key = (_bucket(len(prompt), self.max_len), ())
             groups.setdefault(key, []).append((slot, handle))
+        if self._draft_model is not None:
+            # draft-cache lifecycle, admit: the draft prefills the FULL
+            # prompt (plus generated tokens for preempted re-admissions
+            # — i.e. prompt+accepted only, rejected drafts were never
+            # committed) into its dense per-slot cache. No prefix
+            # sharing: the draft has no page arena to share through.
+            # Runs BEFORE the target groups commit their first token so
+            # the draft lands at the same position the target is at.
+            dgroups: Dict[int, list] = {}
+            for slot, handle in admitted:
+                fp = self._full_prompt(handle)
+                dgroups.setdefault(_bucket(len(fp), self.max_len),
+                                   []).append((slot, fp))
+            for P, dgroup in dgroups.items():
+                toks = np.zeros((len(dgroup), P), np.int32)
+                lengths = np.zeros((len(dgroup),), np.int32)
+                for i, (_, fp) in enumerate(dgroup):
+                    toks[i, :len(fp)] = fp
+                    lengths[i] = len(fp)
+                _, rows = self._draft_prefill(self._draft_params,
+                                              jnp.asarray(toks),
+                                              jnp.asarray(lengths))
+                self._draft_cache = self._insert(
+                    self._draft_cache, rows,
+                    jnp.asarray([s for s, _ in dgroup]))
+                self.stats["draft_prefills"] += 1
         params = self._params[self._version]
         for (P, shared), group in groups.items():
             n = len(group)
@@ -772,7 +923,134 @@ class ServeEngine:
             for i, (_, handle) in enumerate(group):
                 self._commit(handle, int(nxt[i]))
 
+    # ------------------------------------------------- speculative decoding
+    def _can_speculate(self) -> bool:
+        """Host-side spec-tick preconditions; any miss makes THIS tick
+        run plain decode (never an error — speculation is opportunistic):
+        single live param version (hot-reload transition ticks verify
+        under one set of weights or not at all), all-greedy (sampled
+        requests bypass speculation), and pos + k < capacity for every
+        active slot — the no-wrap/no-clamp contract that makes verify
+        rows exactly pos+t and rollback a pure pos rewrite."""
+        active = self.scheduler.active
+        if not active:
+            return False
+        if len({h.version for h in active.values()}) != 1:
+            return False
+        k = self.spec_k
+        for h in active.values():
+            if h.request.temperature > 0:
+                return False
+            # rows in cache = prompt + generated - 1 (the last committed
+            # token's K/V lands when it is fed); verify writes k+1 more
+            rows = len(h.request.prompt) + len(h.tokens) - 1
+            if rows + k >= self._spec_cap:
+                return False
+        return True
+
+    def _grow_spec(self, k: int) -> Dict[int, list]:
+        """Claim every page the verify forward may write (rows
+        pos..pos+k per active slot; fresh page, or COW of a shared one,
+        preempting under pool pressure like plain growth). Each claim
+        records (logical page, previous table entry, was-shared) so
+        `_rollback_spec` can return pages that ended up holding only
+        rejected rows. Claims for a slot preempted by a LATER claim are
+        already released with its other pages; its undo entries are
+        simply never applied."""
+        ps = self._page_size
+        undo: Dict[int, list] = {}
+        for slot in sorted(self.scheduler.active):
+            if slot not in self.scheduler.active:   # preempted meanwhile
+                continue
+            p = int(self._host_pos[slot])
+            for lp in range(p // ps, (p + k) // ps + 1):
+                if not self._owned[slot, lp]:
+                    undo.setdefault(slot, []).append(
+                        (lp, int(self._tables[slot, lp]),
+                         bool(self._shared[slot, lp])))
+                    self._claim_page(slot, lp)
+        return undo
+
+    def _rollback_spec(self, entries, slot: int, last_row: int):
+        """Undo this tick's page claims that hold ONLY rejected rows
+        (logical pages strictly beyond `last_row`, the K/V row of the
+        last committed token): release the page and restore the
+        pre-claim table entry — trash for plain growth, the
+        re-referenced read-only original for a COW'd shared page (the
+        original was never written; the copy holds only rejected rows).
+        Pages up to `last_row` keep their claims: they hold committed
+        K/V. Device tables re-sync values-only on the next tick."""
+        ps = self._page_size
+        for lp, old_pid, old_shared in entries:
+            if lp * ps > last_row:
+                self._pool.release([int(self._tables[slot, lp])])
+                self._tables[slot, lp] = old_pid
+                self._owned[slot, lp] = False
+                self._shared[slot, lp] = old_shared
+                if old_shared:
+                    self._pool.ref([old_pid])
+                self._tables_dirty = True
+
+    def _spec_tick(self) -> bool:
+        """One speculation tick: draft proposes k tokens per slot (one
+        scanned dispatch over its dense cache, healing last tick's
+        overrun via the pos rewrite), the target scores all k+1
+        positions in ONE verify dispatch, and each slot commits its
+        longest draft prefix matching the target's greedy argmax plus
+        the corrected token — 1..k+1 tokens for one target dispatch,
+        bitwise what k+1 plain ticks would have produced. Returns False
+        when preconditions fail (caller runs the plain tick)."""
+        if not self._can_speculate():
+            return False
+        k = self.spec_k
+        undo: Dict[int, list] = {}
+        if self.paged:
+            undo = self._grow_spec(k)       # may preempt under pressure
+            self._sync_tables()
+        active = dict(self.scheduler.active)
+        if not active:                      # growth preempted everything
+            return True
+        p_vec = np.zeros((self.max_slots,), np.int32)
+        for slot, h in active.items():
+            # K/V rows currently in cache == the device pos (see
+            # _can_speculate); equals _host_pos for the paged layout
+            p_vec[slot] = len(h.request.prompt) + len(h.tokens) - 1
+        version = next(iter({h.version for h in active.values()}))
+        toks = jnp.asarray(self._tokens)
+        drafts, self._draft_cache = self._propose(
+            self._draft_params, toks, self._draft_cache,
+            jnp.asarray(p_vec))
+        spec_toks = jnp.concatenate([toks, drafts], axis=1)   # [B, k+1]
+        nxt, g, acc, self.cache = self._verify(
+            self._params[version], spec_toks, self.cache)
+        del nxt   # == g[b, acc[b]]; _commit feeds _tokens from g anyway
+        g = np.asarray(g)
+        acc_np = np.asarray(acc)
+        self.stats["decode_steps"] += 1     # ONE target dispatch
+        self.stats["spec_ticks"] += 1
+        for slot, handle in active.items():
+            a = int(acc_np[slot])
+            self.stats["spec_tokens_proposed"] += k
+            self.stats["spec_tokens_accepted"] += a
+            handle.spec_proposed += k
+            handle.spec_accepted += a
+            if self.paged:
+                self._host_pos[slot] += a + 1
+            for t in range(a + 1):
+                self._commit(handle, int(g[slot, t]))
+                if handle.done:
+                    # EOS/budget inside the accepted run: later tokens
+                    # are discarded; the slot's pages are already
+                    # released wholesale, no rollback needed
+                    break
+            if self.paged and not handle.done:
+                self._rollback_spec(undo.get(slot, ()), slot,
+                                    int(p_vec[slot]) + a)
+        return True
+
     def _decode_tick(self):
+        if self.spec_k and self._spec_tick():
+            return
         if self.paged:
             # every active slot must own its write page before the batch
             # advances (growth / COW; may preempt under pool pressure)
@@ -848,6 +1126,10 @@ class ServeEngine:
         if reason is not None:
             self.scheduler.retire(slot, reason)
             self.stats["completed"] += 1
+            if handle.ttft is not None:
+                self._ttft.append(handle.ttft)
+            if handle.tpot is not None:
+                self._tpot.append(handle.tpot)
             if self.paged:
                 self._release_slot_pages(slot)
 
@@ -868,10 +1150,21 @@ class ServeEngine:
                 "prefix_hits": self.stats["prefix_hits"],
                 "prefix_tokens_reused": self.stats["prefix_tokens_reused"],
                 "cow_copies": self.stats["cow_copies"],
-                "preemptions": self.stats["preemptions"]}
+                "preemptions": self.stats["preemptions"],
+                "spec_ticks": self.stats["spec_ticks"],
+                "spec_tokens_proposed": self.stats["spec_tokens_proposed"],
+                "spec_tokens_accepted": self.stats["spec_tokens_accepted"],
+                "spec_acceptance_rate": (
+                    self.stats["spec_tokens_accepted"]
+                    / self.stats["spec_tokens_proposed"]
+                    if self.stats["spec_tokens_proposed"] else 0.0)}
 
     def throughput(self) -> Dict[str, float]:
-        """Completion/throughput fields (the serve CLI prints these)."""
+        """Completion/throughput fields (the serve CLI prints these):
+        tok/s plus per-request latency — TTFT (submit -> first token)
+        and TPOT (per-token cadence after the first), each mean/p50/p99
+        over completed requests — and, under speculation, acceptance
+        accounting and target dispatches per generated token."""
         started = self.stats["started_at"]
         wall = (time.perf_counter() - started) if started else 0.0
         toks = self.stats["generated_tokens"]
@@ -887,10 +1180,33 @@ class ServeEngine:
                "peak_kv_bytes": self.stats["peak_kv_bytes_in_use"],
                "prefix_hits": self.stats["prefix_hits"],
                "prefix_tokens_reused": self.stats["prefix_tokens_reused"]}
+        for name, samples in (("ttft", self._ttft), ("tpot", self._tpot)):
+            if samples:
+                # host wall-clock stats, not device pulls: `samples` are
+                # time.perf_counter deltas recorded at retirement
+                arr = np.asarray(samples, np.float64)
+                out[f"{name}_mean_s"] = float(arr.mean())  # lint: allow(host-pull)
+                out[f"{name}_p50_s"] = float(np.percentile(arr, 50))  # lint: allow(host-pull)
+                out[f"{name}_p99_s"] = float(np.percentile(arr, 99))  # lint: allow(host-pull)
         if self.paged:
             out["kv_pages_used"] = self.stats["kv_pages_used"]
             out["kv_pages_free"] = self.stats["kv_pages_free"]
             out["preemptions"] = self.stats["preemptions"]
+        if self.spec_k:
+            proposed = self.stats["spec_tokens_proposed"]
+            out["spec_ticks"] = self.stats["spec_ticks"]
+            out["spec_tokens_proposed"] = proposed
+            out["spec_tokens_accepted"] = self.stats["spec_tokens_accepted"]
+            out["spec_acceptance_rate"] = (
+                self.stats["spec_tokens_accepted"] / proposed
+                if proposed else 0.0)
+            out["draft_prefills"] = self.stats["draft_prefills"]
+            # dispatches_per_token: target-model decode+verify dispatches
+            # per generated token — the quantity speculation exists to
+            # shrink (1.0 for plain decode; 1/(1 + acceptance*k) under
+            # speculation)
+            out["dispatches_per_token"] = (
+                self.stats["decode_steps"] / toks if toks else 0.0)
         return out
 
     def close(self):

@@ -79,6 +79,10 @@ class RequestHandle:
         self.submitted_at = time.perf_counter()
         self.first_token_at: Optional[float] = None
         self.done_at: Optional[float] = None
+        # speculative-decoding accounting (engine speculation ticks):
+        # draft tokens proposed for / accepted by this request
+        self.spec_proposed = 0
+        self.spec_accepted = 0
 
     @property
     def done(self) -> bool:
@@ -89,6 +93,21 @@ class RequestHandle:
         """prompt + generated tokens, the legacy `generate` row layout."""
         return np.concatenate(
             [self.request.prompt, np.asarray(self.tokens, np.int32)])
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token (submit -> first commit), seconds."""
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Mean time per output token AFTER the first (the streaming
+        cadence), seconds; None until 2+ tokens exist."""
+        if self.done_at is None or len(self.tokens) < 2:
+            return None
+        return (self.done_at - self.first_token_at) / (len(self.tokens) - 1)
 
     def __repr__(self):
         return (f"RequestHandle(id={self.request.request_id}, "

@@ -85,6 +85,27 @@ def slot_positions(cache: PyTree) -> jnp.ndarray:
                      "per_slot=True?")
 
 
+_POS_TYPES = PAGED_TYPES + (ATT.KVCache, ATT.MLACache)
+
+
+def set_positions(cache: PyTree, pos: jnp.ndarray) -> PyTree:
+    """Overwrite every attention cache's per-slot pos with `pos` [B]
+    (broadcast over the layer axis). This single values-only rewrite IS
+    speculative accept AND rollback: advancing pos to
+    old_pos + accepted + 1 commits the accepted rows, and everything the
+    verify forward wrote beyond that is instantly masked garbage that
+    the next decode writes overwrite — no arena copies, no retrace.
+    Attention caches only (recurrent ssm/hybrid state has no pos to
+    rewrite; the engine never speculates on those families)."""
+    def fix(c):
+        if isinstance(c, _POS_TYPES):
+            return c._replace(
+                pos=jnp.broadcast_to(pos.astype(jnp.int32), c.pos.shape))
+        return c
+    return jax.tree.map(fix, cache,
+                        is_leaf=lambda x: isinstance(x, _POS_TYPES))
+
+
 # ============================================================== page pool
 class PagePool:
     """Host-side physical-page allocator for the paged KV arena.

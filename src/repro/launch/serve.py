@@ -54,6 +54,13 @@ def main(argv=None):
                     dest="system_prompt",
                     help="prepend this many shared system-prompt tokens "
                     "to every request (exercises prefix sharing)")
+    ap.add_argument("--speculation-k", type=int, default=0,
+                    dest="speculation_k",
+                    help="draft tokens per speculation tick (0 = off); "
+                    "greedy requests only")
+    ap.add_argument("--draft-preset", default="", dest="draft_preset",
+                    help="registry arch for the draft model (default: "
+                    "auto-shrunk target)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy argmax (default); >0 samples")
     ap.add_argument("--top-k", type=int, default=0, dest="top_k",
@@ -77,6 +84,9 @@ def main(argv=None):
         ap.error(f"--max-len {max_len} leaves no room for a prompt "
                  f"beyond --system-prompt {args.system_prompt} + --gen "
                  f"{args.gen} tokens")
+    draft_config = None
+    if args.draft_preset:
+        draft_config = {"arch": args.draft_preset, "reduced": args.reduced}
     cfg = EngineConfig(arch=args.arch, reduced=args.reduced,
                        data_mesh=args.data_mesh, model_mesh=args.model_mesh,
                        max_slots=args.max_slots, max_len=max_len,
@@ -84,6 +94,8 @@ def main(argv=None):
                        kv_layout=args.kv_layout, page_size=args.page_size,
                        kv_pages=args.kv_pages,
                        prefix_sharing=not args.no_prefix_sharing,
+                       speculation_k=args.speculation_k,
+                       draft_config=draft_config,
                        ckpt_dir=args.ckpt_dir,
                        hot_reload=args.hot_reload).validate()
     rng = np.random.RandomState(1)
@@ -146,10 +158,24 @@ def main(argv=None):
     engine.drain()
 
     tp = engine.throughput()
+    lat = {k: tp.pop(k) for k in list(tp)
+           if k.startswith(("ttft_", "tpot_"))}
     fields = " ".join(
         f"{k}={v:.2f}" if isinstance(v, float) else f"{k}={v}"
         for k, v in tp.items())
     print(f"[serve] {fields}")
+    if lat:
+        print("[serve] latency " + " ".join(
+            f"{k[:-2]}_ms={v * 1e3:.1f}" for k, v in lat.items()))
+    if args.speculation_k:
+        kv = engine.kv_stats()
+        print(f"[serve] spec k={args.speculation_k} "
+              f"ticks={tp.get('spec_ticks', 0)} "
+              f"proposed={tp.get('spec_tokens_proposed', 0)} "
+              f"accepted={tp.get('spec_tokens_accepted', 0)} "
+              f"acceptance={kv.get('spec_acceptance_rate', 0.0):.3f} "
+              f"dispatches_per_token="
+              f"{tp.get('dispatches_per_token', 0.0):.3f}")
     kv = engine.kv_stats()
     print(f"[serve] kv layout={kv['kv_layout']} "
           f"in_use={kv['kv_bytes_in_use']} peak={kv['peak_kv_bytes_in_use']} "

@@ -43,6 +43,13 @@ class Model:
     # forward (ssm/hybrid/enc-dec) — engine/serving falls back to a fused
     # scan.
     prefill_cache: Optional[Callable] = None
+    # speculative verification: (params, tokens [B,T], cache) ->
+    # (logits [B,T,V], cache with rows written, pos unchanged). Scores
+    # T = k+1 positions in one forward for the engine's speculation
+    # tick; greedy argmax per position is bitwise-equal to T decode
+    # steps. None for ssm/hybrid/enc-dec (recurrent state cannot be
+    # rolled back by a pos rewrite).
+    verify_step: Optional[Callable] = None
 
 
 def build_model(cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
@@ -123,6 +130,7 @@ def build_model(cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
         return logits
 
     prefill_cache = None
+    verify_step = None
     if cfg.family not in ("ssm", "hybrid"):
         def prefill_cache(params, tokens, lengths, max_len,
                           prefix_kv=None, prefix_len=0):
@@ -134,8 +142,11 @@ def build_model(cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
                 cache_dtype=compute_dtype,
                 prefix_kv=prefix_kv, prefix_len=prefix_len)
 
+        def verify_step(params, tokens, cache):
+            return TF.verify_step(params, cfg, tokens, cache, compute_dtype)
+
     return Model(cfg, init, loss, forward, prefill, init_cache, decode_step,
-                 prefill_cache)
+                 prefill_cache, verify_step)
 
 
 # --------------------------------------------------------------- accounting

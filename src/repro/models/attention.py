@@ -411,6 +411,196 @@ def gqa_paged_decode_step(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
     return out, PagedKVCache(knew, vnew, cache.page_table, pos + 1)
 
 
+# ------------------------------------------------- speculative verification
+#
+# Multi-token verify steps for speculative decoding: x holds the embeds
+# of [last committed token, draft_1 .. draft_{T-1}] and row b scores all
+# T positions pos_b..pos_b+T-1 against the cache in ONE forward. The
+# write-then-mask design keeps greedy argmax per position bitwise-equal
+# to T sequential decode steps: all T K/V rows are written first, then
+# query t masks rows at positions > pos_b + t to NEG_INF — exactly the
+# key set (and the identical masked-softmax float program) single-token
+# decode sees, with the not-yet-valid rows contributing exact fp32
+# zeros, the same way trash-page garbage already cancels on the paged
+# path. The returned cache keeps `pos` UNCHANGED: the caller commits the
+# accepted prefix by rewriting pos (and, paged, page-table values) only
+# — rejected rows beyond the new pos are masked garbage that the next
+# writes overwrite, which is what makes rejection free.
+#
+# Caller contract (ServeEngine's speculation tick falls back to plain
+# decode otherwise): per-slot pos [B], and pos + T - 1 < capacity for
+# every live row — no rolling wrap-around and no linear clamping, so
+# write rows are exactly pos+t and no live row is clobbered.
+
+def _verify_rows(cfg: ModelConfig, pos: jnp.ndarray, T: int, cap: int):
+    """(absolute positions [B,T], write rows [B,T]) for a verify step.
+    Live rows satisfy pos+T-1 < cap so rows == positions; the mod/min
+    only keeps garbage (free-slot) rows in bounds, same as decode."""
+    post = pos[:, None] + jnp.arange(T)
+    row = jnp.where(cfg.sliding_window > 0, post % cap,
+                    jnp.minimum(post, cap - 1))
+    return post, row
+
+
+def _verify_valid(cfg: ModelConfig, post: jnp.ndarray, cap: int):
+    """Per-query-position validity mask [B,T,cap]: query t sees exactly
+    the rows a single-token decode at pos+t would (rolling or linear)."""
+    B, T = post.shape
+    idx = jnp.arange(cap)
+    posb = post[:, :, None]                                  # [B,T,1]
+    if cfg.sliding_window:
+        slot_pos = posb - ((posb - idx[None, None, :]) % cap)
+    else:
+        slot_pos = jnp.broadcast_to(idx[None, None, :], (B, T, cap))
+    return (slot_pos >= 0) & (slot_pos <= posb)
+
+
+def _gqa_verify_attend(params, cfg: ModelConfig, q, kfull, vfull, valid,
+                       compute_dtype):
+    """Masked multi-position GQA attention: q [B,T,H,Dh] against the
+    dense-layout keys [B,cap,KV,Dh] under `valid` [B,T,cap]."""
+    B, T = q.shape[:2]
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, T, kvh, h // kvh, dh)
+    scores = jnp.einsum("btkgd,bskd->btkgs", qg.astype(jnp.float32),
+                        kfull.astype(jnp.float32)) * scale
+    scores = jnp.where(valid[:, :, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(vfull.dtype)
+    out = jnp.einsum("btkgs,bskd->btkgd", probs, vfull).reshape(B, T, h * dh)
+    return out.astype(compute_dtype) @ params["wo"].astype(compute_dtype)
+
+
+def _gqa_verify_qkv(params, cfg: ModelConfig, x, post, compute_dtype):
+    B, T, _ = x.shape
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    x = x.astype(compute_dtype)
+    q = (x @ params["wq"].astype(compute_dtype)).reshape(B, T, h, dh)
+    k = (x @ params["wk"].astype(compute_dtype)).reshape(B, T, kvh, dh)
+    v = (x @ params["wv"].astype(compute_dtype)).reshape(B, T, kvh, dh)
+    if cfg.qk_norm:
+        q = L.headwise_rmsnorm(params["q_norm"], q)
+        k = L.headwise_rmsnorm(params["k_norm"], k)
+    posv = post.astype(jnp.float32)
+    q = L.apply_rope(q, posv, cfg.rope_theta)
+    k = L.apply_rope(k, posv, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_verify_step(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
+                    cache: KVCache, compute_dtype=jnp.bfloat16
+                    ) -> Tuple[jnp.ndarray, KVCache]:
+    """T-token verify over the dense slotted cache. x: [B,T,D]."""
+    B, T, _ = x.shape
+    cap = cache.k.shape[1]
+    pos = cache.pos
+    post, row = _verify_rows(cfg, pos, T, cap)
+    q, k, v = _gqa_verify_qkv(params, cfg, x, post, compute_dtype)
+    rows_b = jnp.arange(B)[:, None]
+    knew = cache.k.at[rows_b, row].set(k.astype(cache.k.dtype))
+    vnew = cache.v.at[rows_b, row].set(v.astype(cache.v.dtype))
+    valid = _verify_valid(cfg, post, cap)
+    out = _gqa_verify_attend(params, cfg, q, knew, vnew, valid,
+                             compute_dtype)
+    return out, KVCache(knew, vnew, pos)
+
+
+def gqa_paged_verify_step(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
+                          cache: PagedKVCache, compute_dtype=jnp.bfloat16
+                          ) -> Tuple[jnp.ndarray, PagedKVCache]:
+    """T-token verify over the paged arena: identical math to
+    `gqa_verify_step` on the page-gathered K/V (free slots write through
+    trash page 0, inert as ever)."""
+    B, T, _ = x.shape
+    h, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ps = cache.k.shape[1]
+    cap = cache.page_table.shape[1] * ps
+    pos = cache.pos
+    post, row = _verify_rows(cfg, pos, T, cap)
+    q, k, v = _gqa_verify_qkv(params, cfg, x, post, compute_dtype)
+    pgs = jnp.take_along_axis(cache.page_table, row // ps, axis=1)
+    offs = row % ps
+    knew = cache.k.at[pgs, offs].set(k.astype(cache.k.dtype))
+    vnew = cache.v.at[pgs, offs].set(v.astype(cache.v.dtype))
+    kfull = knew[cache.page_table].reshape(B, cap, kvh, dh)
+    vfull = vnew[cache.page_table].reshape(B, cap, kvh, dh)
+    valid = _verify_valid(cfg, post, cap)
+    out = _gqa_verify_attend(params, cfg, q, kfull, vfull, valid,
+                             compute_dtype)
+    return out, PagedKVCache(knew, vnew, cache.page_table, pos)
+
+
+def _mla_verify_attend(params, cfg: ModelConfig, q_nope, q_rope, cfull,
+                       rfull, post, compute_dtype):
+    """Absorbed-latent multi-position MLA attention (linear layout only —
+    MLA has no sliding window)."""
+    B, T = post.shape
+    h = cfg.n_heads
+    qk_n, qk_r, vh, r = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                         cfg.v_head_dim, cfg.kv_lora_rank)
+    cap = cfull.shape[1]
+    kv_up = params["kv_up"].astype(compute_dtype).reshape(r, h, qk_n + vh)
+    w_k = kv_up[..., :qk_n]
+    w_v = kv_up[..., qk_n:]
+    q_eff = jnp.einsum("bthn,rhn->bthr", q_nope, w_k)
+    scores = (jnp.einsum("bthr,bsr->bths", q_eff.astype(jnp.float32),
+                         cfull.astype(jnp.float32))
+              + jnp.einsum("bthr,bsr->bths", q_rope.astype(jnp.float32),
+                           rfull.astype(jnp.float32)))
+    scores = scores / math.sqrt(qk_n + qk_r)
+    valid = jnp.arange(cap)[None, None, :] <= post[:, :, None]  # [B,T,cap]
+    scores = jnp.where(valid[:, :, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    lat = jnp.einsum("bths,bsr->bthr", probs.astype(cfull.dtype), cfull)
+    out = jnp.einsum("bthr,rhv->bthv", lat, w_v).reshape(B, T, h * vh)
+    return out.astype(compute_dtype) @ params["wo"].astype(compute_dtype)
+
+
+def mla_verify_step(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
+                    cache: "MLACache", compute_dtype=jnp.bfloat16):
+    """T-token absorbed-latent verify over the dense slotted MLA cache."""
+    B, T, _ = x.shape
+    pos = cache.pos
+    cap = cache.c_kv.shape[1]
+    x = x.astype(compute_dtype)
+    post, row = _verify_rows(cfg, pos, T, cap)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x,
+                                            post.astype(jnp.float32),
+                                            compute_dtype)
+    rows_b = jnp.arange(B)[:, None]
+    cnew = cache.c_kv.at[rows_b, row].set(c_kv.astype(cache.c_kv.dtype))
+    rnew = cache.k_rope.at[rows_b, row].set(k_rope.astype(
+        cache.k_rope.dtype))
+    out = _mla_verify_attend(params, cfg, q_nope, q_rope, cnew, rnew, post,
+                             compute_dtype)
+    return out, MLACache(cnew, rnew, pos)
+
+
+def mla_paged_verify_step(params: PyTree, cfg: ModelConfig, x: jnp.ndarray,
+                          cache: PagedMLACache, compute_dtype=jnp.bfloat16
+                          ) -> Tuple[jnp.ndarray, PagedMLACache]:
+    """T-token absorbed-latent verify over the paged latent arena."""
+    B, T, _ = x.shape
+    r, qk_r = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    ps = cache.c_kv.shape[1]
+    cap = cache.page_table.shape[1] * ps
+    pos = cache.pos
+    x = x.astype(compute_dtype)
+    post, row = _verify_rows(cfg, pos, T, cap)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x,
+                                            post.astype(jnp.float32),
+                                            compute_dtype)
+    pgs = jnp.take_along_axis(cache.page_table, row // ps, axis=1)
+    offs = row % ps
+    cnew = cache.c_kv.at[pgs, offs].set(c_kv.astype(cache.c_kv.dtype))
+    rnew = cache.k_rope.at[pgs, offs].set(k_rope.astype(cache.k_rope.dtype))
+    cfull = cnew[cache.page_table].reshape(B, cap, r)
+    rfull = rnew[cache.page_table].reshape(B, cap, qk_r)
+    out = _mla_verify_attend(params, cfg, q_nope, q_rope, cfull, rfull,
+                             post, compute_dtype)
+    return out, PagedMLACache(cnew, rnew, cache.page_table, pos)
+
+
 # ---------------------------------------------------------------- MLA path
 class MLACache(NamedTuple):
     c_kv: jnp.ndarray    # [B, cap, kv_lora]

@@ -484,3 +484,65 @@ def decode_step(params: PyTree, cfg: ModelConfig, tokens: jnp.ndarray,
     else:
         logits = L.lm_head(params["lm_head"], x, compute_dtype)
     return logits, DecodeCache(layer_caches, dense_caches)
+
+
+def _block_verify(params: PyTree, cfg: ModelConfig, x, cache, moe_block,
+                  compute_dtype):
+    """T speculative tokens through one block. x: [B,T,D]. Attention
+    families only — recurrent state cannot be rolled back by rewriting
+    `pos`, so ssm/hybrid never reach this path."""
+    h = L.rmsnorm(params["norm1"], x, cfg.norm_eps)
+    if isinstance(cache["attn"], ATT.PagedKVCache):
+        a, att = ATT.gqa_paged_verify_step(params["attn"], cfg, h,
+                                           cache["attn"], compute_dtype)
+    elif isinstance(cache["attn"], ATT.PagedMLACache):
+        a, att = ATT.mla_paged_verify_step(params["attn"], cfg, h,
+                                           cache["attn"], compute_dtype)
+    elif cfg.attn_type == "mla":
+        a, att = ATT.mla_verify_step(params["attn"], cfg, h, cache["attn"],
+                                     compute_dtype)
+    else:
+        a, att = ATT.gqa_verify_step(params["attn"], cfg, h, cache["attn"],
+                                     compute_dtype)
+    cache = dict(cache, attn=att)
+    x = x + a
+    h = L.rmsnorm(params["norm2"], x, cfg.norm_eps)
+    if moe_block:
+        m, _ = MOE.moe_apply(params["moe"], cfg, h, compute_dtype)
+    else:
+        m = L.mlp_apply(params["mlp"], h, cfg.mlp_type, compute_dtype)
+    return x + m, cache
+
+
+def verify_step(params: PyTree, cfg: ModelConfig, tokens: jnp.ndarray,
+                cache: DecodeCache, compute_dtype=jnp.bfloat16
+                ) -> Tuple[jnp.ndarray, DecodeCache]:
+    """Speculative verification: tokens [B,T] = [last committed token,
+    draft_1..draft_{T-1}] -> (logits [B,T,V], cache). ONE forward scores
+    all T positions; the returned cache has K/V rows written for
+    positions pos..pos+T-1 but `pos` UNCHANGED — the caller advances pos
+    by accepted+1 (engine/build's make_verify_step), which is both the
+    accept and the rollback. Per-position greedy argmax is bitwise-equal
+    to T sequential decode_step calls (see models/attention.py)."""
+    assert cfg.family not in ("ssm", "hybrid") and not cfg.is_encoder_decoder
+    x = L.embed(params["embed"], tokens, compute_dtype)
+
+    def scan_seg(x, blocks, caches, moe_block):
+        def step(h, inp):
+            bp, c = inp
+            h, c = _block_verify(bp, cfg, h, c, moe_block, compute_dtype)
+            return h, c
+        return jax.lax.scan(step, x, (blocks, caches))
+
+    dense_caches = cache.dense_layers
+    if "dense_blocks" in params:
+        x, dense_caches = scan_seg(x, params["dense_blocks"],
+                                   cache.dense_layers, False)
+    x, layer_caches = scan_seg(x, params["blocks"], cache.layers,
+                               bool(cfg.n_experts))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x, compute_dtype)
+    else:
+        logits = L.lm_head(params["lm_head"], x, compute_dtype)
+    return logits, DecodeCache(layer_caches, dense_caches)

@@ -194,6 +194,39 @@ class TestSharedPrefix:
         assert eng.stats["prefix_tokens_reused"] == 2 * 2 * 16
         assert eng.stats["prefill_calls"] == 2
 
+    def test_first_contact_chained_registration_same_tick(self):
+        """Same-tick trio with NESTED cold prefixes: A registers the
+        system pages at reservation, B (deeper prompt) matches them and
+        registers its extra page with start>0, and C — still in the same
+        admission batch — matches the full 3-page chain A+B built
+        moments earlier. Exercises register(start>0) at reservation
+        time, not just the flat leader/follower split."""
+        model = tiny_model()
+        params = model.init(jax.random.key(0))
+        rng = np.random.RandomState(3)
+        sys_p = rng.randint(0, 257, 37)               # 2 full pages
+        deep = np.concatenate([sys_p, rng.randint(0, 257, 16)])  # 3 full
+        prompts = [np.concatenate([sys_p, rng.randint(0, 257, 5)]),
+                   np.concatenate([deep, rng.randint(0, 257, 4)]),
+                   np.concatenate([deep, rng.randint(0, 257, 6)])]
+        reqs = [dict(prompt=p, max_new_tokens=6) for p in prompts]
+        _, dense = run_engine(model, params, reqs, stagger=0,
+                              kv_layout="dense", max_slots=4, max_len=80)
+        eng = ServeEngine(EngineConfig(kv_layout="paged", max_slots=4,
+                                       max_len=80), model, None, params)
+        handles = [eng.submit(GenerationRequest(**r)) for r in reqs]
+        eng.step()          # one tick admits all three
+        # C rides the chain A+B registered this same tick: 3 shared pages
+        sB, sC = handles[1].slot, handles[2].slot
+        assert (eng._tables[sC][:3] == eng._tables[sB][:3]).all()
+        assert eng._shared[sC][:3].all()
+        assert eng._shared[sB][:2].all() and not eng._shared[sB][2]
+        eng.drain()
+        assert [h.tokens for h in handles] == dense
+        assert eng.stats["prefix_hits"] == 2          # B and C
+        # B reuses A's 2 pages; C reuses those plus B's page 2
+        assert eng.stats["prefix_tokens_reused"] == (2 + 3) * 16
+
     def test_shared_pages_are_physically_shared(self):
         model = tiny_model()
         params = model.init(jax.random.key(0))

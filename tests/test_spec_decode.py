@@ -1,0 +1,310 @@
+"""Speculative decoding on the serving engine (draft propose -> one
+fused verify -> page-table rollback).
+
+The contract under test: greedy tokens with speculation enabled are
+BITWISE identical to plain decode — across attention families, both KV
+layouts, across page-boundary and COW rollbacks, and through preemption
+mid-speculation — because verification recomputes every position under
+the target model and the masked verify rows are exact (write-then-mask,
+fp32 on CPU). Speculation only ever changes HOW MANY dispatches produce
+the same tokens, never the tokens.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, get_reduced
+from repro.engine import EngineConfig, GenerationRequest, ServeEngine
+from repro.engine.build import EngineWarning
+from repro.engine.serving.engine import derive_draft_config
+from repro.models import build_model
+
+TINY = ModelConfig("spec-tiny", "dense", 2, 64, 4, 2, 128, 257,
+                   head_dim=16)
+
+
+def tiny_model():
+    return build_model(TINY, compute_dtype=jnp.float32, attn_chunk=16)
+
+
+def reduced_model(arch):
+    cfg = get_reduced(arch)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    return build_model(cfg, compute_dtype=jnp.float32, attn_chunk=8)
+
+
+def run_engine(model, params, reqs, *, stagger=1, draft_params=None,
+               **cfg_kw):
+    cfg_kw.setdefault("max_slots", 2)
+    cfg_kw.setdefault("max_len", 48)
+    eng = ServeEngine(EngineConfig(**cfg_kw), model, None, params,
+                      draft_params=draft_params)
+    handles = []
+    for r in reqs:
+        handles.append(eng.submit(GenerationRequest(**r)))
+        for _ in range(stagger):
+            eng.step()
+    eng.drain()
+    return eng, [h.tokens for h in handles]
+
+
+def self_draft(model):
+    """Draft == target (same config under another name, same params):
+    every proposal matches, acceptance is 1.0 — the deterministic way to
+    drive the deep-accept paths without training a real draft."""
+    return dict(draft_config={"name": f"{model.cfg.name}-self"})
+
+
+# -------------------------------------------------- bitwise token matrix
+class TestSpecBitwise:
+    """Plain vs speculative across families and layouts. The auto-
+    derived fresh-init draft proposes near-random tokens (acceptance
+    ~0): every tick exercises propose -> verify -> full rollback, and
+    the streams must STILL match plain decode bitwise."""
+
+    CASES = {
+        "gqa": "qwen3-32b",
+        "swa": "mixtral-8x22b",     # window caps speculation feasibility
+        "mla": "minicpm3-4b",       # absorbed-latent verify path
+    }
+
+    @pytest.mark.parametrize("name", sorted(CASES))
+    def test_tokens_bitwise_matrix(self, name):
+        model = reduced_model(self.CASES[name])
+        params = model.init(jax.random.key(0))
+        rng = np.random.RandomState(0)
+        V = model.cfg.vocab_size
+        reqs = [dict(prompt=rng.randint(0, V, n), max_new_tokens=g)
+                for n, g in [(7, 6), (13, 9), (19, 4)]]
+        streams = {}
+        for layout in ("dense", "paged"):
+            _, streams["plain", layout] = run_engine(
+                model, params, reqs, kv_layout=layout)
+            eng, streams["spec", layout] = run_engine(
+                model, params, reqs, kv_layout=layout, speculation_k=2)
+            assert eng.stats["spec_ticks"] > 0, (name, layout)
+        ref = streams["plain", "dense"]
+        for key, toks in streams.items():
+            assert toks == ref, (name, key)
+
+    def test_self_draft_accepts_everything(self):
+        """A draft that IS the target proposes exactly the target's
+        greedy continuation: acceptance 1.0, k+1 tokens per target
+        dispatch, same tokens."""
+        model = tiny_model()
+        params = model.init(jax.random.key(0))
+        rng = np.random.RandomState(1)
+        reqs = [dict(prompt=rng.randint(0, 257, n), max_new_tokens=g)
+                for n, g in [(7, 8), (13, 9)]]
+        _, plain = run_engine(model, params, reqs, kv_layout="paged")
+        eng, spec = run_engine(model, params, reqs, kv_layout="paged",
+                               speculation_k=3, draft_params=params,
+                               **self_draft(model))
+        assert spec == plain
+        kv = eng.kv_stats()
+        assert kv["spec_acceptance_rate"] == 1.0
+        # every verify dispatch committed k+1 tokens for its slots
+        assert eng.stats["spec_ticks"] < eng.stats["generated_tokens"]
+
+    def test_recurrent_targets_fall_back_loudly(self):
+        """ssm/hybrid targets have no pos-rewrite rollback: speculation
+        disables itself with ONE EngineWarning at build and every tick
+        runs plain decode — same tokens, zero spec ticks."""
+        for arch in ("rwkv6-7b", "hymba-1.5b"):
+            model = reduced_model(arch)
+            params = model.init(jax.random.key(0))
+            reqs = [dict(prompt=list(range(1, 8)), max_new_tokens=4)]
+            _, plain = run_engine(model, params, reqs, kv_layout="dense")
+            with pytest.warns(EngineWarning, match="speculation disabled"):
+                eng, spec = run_engine(model, params, reqs,
+                                       kv_layout="dense", speculation_k=2)
+            assert spec == plain, arch
+            assert eng.spec_k == 0 and eng.stats["spec_ticks"] == 0
+
+    def test_sampled_requests_bypass_speculation(self):
+        """temperature>0 anywhere in the active set makes the tick run
+        the plain sampling path — speculation is greedy-only."""
+        model = tiny_model()
+        params = model.init(jax.random.key(0))
+        rng = np.random.RandomState(2)
+        mixed = [dict(prompt=rng.randint(0, 257, 9), max_new_tokens=6,
+                      temperature=0.8, seed=7),
+                 dict(prompt=rng.randint(0, 257, 11), max_new_tokens=6)]
+        _, plain = run_engine(model, params, mixed, stagger=0,
+                              kv_layout="paged")
+        eng, spec = run_engine(model, params, mixed, stagger=0,
+                               kv_layout="paged", speculation_k=2,
+                               draft_params=params, **self_draft(model))
+        assert spec == plain        # sampled stream reproducible by seed
+        assert eng.stats["spec_ticks"] == 0
+
+
+# ------------------------------------------------------ rollback surface
+class TestSpecRollback:
+    def _one_slot(self, prompt_len, gen, k=3, seed=4, **kw):
+        model = tiny_model()
+        params = model.init(jax.random.key(0))
+        rng = np.random.RandomState(seed)
+        reqs = [dict(prompt=rng.randint(0, 257, prompt_len),
+                     max_new_tokens=gen)]
+        _, ref = run_engine(model, params, reqs, kv_layout="dense",
+                            max_slots=1, max_len=64)
+        eng = ServeEngine(EngineConfig(max_slots=1, max_len=64,
+                                       kv_layout="paged",
+                                       speculation_k=k, **kw),
+                          model, None, params)
+        h = eng.submit(GenerationRequest(**reqs[0]))
+        return eng, h, ref[0]
+
+    def test_rollback_across_page_boundary(self):
+        """Verify rows 15..18 straddle pages 0|1; the fresh-init draft
+        is rejected wholesale (acceptance ~0), so the page claimed for
+        the overhang must be RETURNED: table entry back to trash, pool
+        usage back to the pre-tick footprint."""
+        eng, h, ref = self._one_slot(prompt_len=15, gen=20)
+        eng.step()                 # admit + first spec tick
+        slot = h.slot
+        assert eng.stats["spec_ticks"] == 1
+        assert eng.stats["spec_tokens_accepted"] == 0    # random draft
+        # rows 15..18 crossed into page 1; rollback returned it
+        assert int(eng._tables[slot, 1]) == 0
+        assert not eng._owned[slot, 1] and not eng._shared[slot, 1]
+        assert eng._pool.pages_used == 1                 # page 0 only
+        eng.drain()
+        assert h.tokens == ref
+
+    def test_rollback_restores_cow_shared_page(self):
+        """A SHARED page sitting beyond the accept point: the spec claim
+        copies it (COW), rejection releases the copy and restores the
+        read-only original — same table entry, same refcount, tokens
+        bitwise."""
+        eng, h, ref = self._one_slot(prompt_len=15, gen=25)
+        for _ in range(15):        # acceptance ~0: pos 15 -> 30
+            eng.step()
+        slot = h.slot
+        assert int(eng._host_pos[slot]) == 30
+        # map logical page 2 (rows 32..47, strictly beyond pos) to an
+        # externally shared page, as rolling-over-a-registered-prefix
+        # would: the slot holds it read-only, someone else holds a ref
+        pid = eng._pool.alloc(1)[0]
+        eng._pool.ref([pid])                 # the external holder
+        eng._tables[slot, 2] = pid
+        eng._shared[slot, 2] = True
+        eng._tables_dirty = True
+        cows = eng.stats["cow_copies"]
+        eng.step()                 # rows 30..33 straddle pages 1|2
+        assert eng.stats["cow_copies"] == cows + 1
+        # rollback restored the ORIGINAL shared mapping, not the copy
+        assert int(eng._tables[slot, 2]) == pid
+        assert eng._shared[slot, 2] and not eng._owned[slot, 2]
+        assert eng._pool.refcount(pid) == 2
+        eng.drain()
+        eng._pool.release([pid])             # drop the external ref
+        assert h.tokens == ref
+
+    def test_preempt_mid_speculation_is_bitwise(self):
+        """Pool pressure during spec-tick growth preempts the youngest
+        request; its re-admission re-prefills prompt+accepted (both
+        target and draft caches) and the streams still match the
+        unconstrained run."""
+        model = tiny_model()
+        params = model.init(jax.random.key(0))
+        rng = np.random.RandomState(5)
+        reqs = [dict(prompt=rng.randint(0, 257, n), max_new_tokens=20)
+                for n in (20, 25, 18)]
+        kw = dict(max_slots=3, max_len=48, prefix_sharing=False,
+                  speculation_k=3, draft_params=params,
+                  **self_draft(model))
+        _, full = run_engine(model, params, reqs, kv_layout="paged", **kw)
+        eng, tight = run_engine(model, params, reqs, kv_layout="paged",
+                                kv_pages=6, **kw)
+        assert tight == full
+        assert eng.stats["preemptions"] >= 1
+        assert eng.stats["draft_prefills"] > 3   # re-admissions re-prefill
+        assert eng.throughput()["completed"] == 3
+
+    def test_swa_stops_speculating_at_window(self):
+        """A rolling-window target speculates only while pos + k stays
+        below the window: once it fills, ticks fall back to plain decode
+        (no wrap healing exists) — and tokens stay bitwise."""
+        model = build_model(
+            dataclasses.replace(TINY, name="spec-swa", sliding_window=16),
+            compute_dtype=jnp.float32, attn_chunk=16)
+        params = model.init(jax.random.key(0))
+        rng = np.random.RandomState(6)
+        reqs = [dict(prompt=rng.randint(0, 257, 9), max_new_tokens=16)]
+        _, plain = run_engine(model, params, reqs, kv_layout="paged")
+        eng, spec = run_engine(model, params, reqs, kv_layout="paged",
+                               speculation_k=2, draft_params=params,
+                               **self_draft(model))
+        assert spec == plain
+        # 9 prompt + 16 gen crosses the 16-row window: some ticks must
+        # have run plain (spec stops with pos+k at the window)
+        assert 0 < eng.stats["spec_ticks"]
+        assert eng.stats["spec_tokens_accepted"] > 0
+
+
+# ------------------------------------------------- accounting + config
+class TestSpecAccounting:
+    def test_per_request_and_engine_counters_agree(self):
+        model = tiny_model()
+        params = model.init(jax.random.key(0))
+        rng = np.random.RandomState(7)
+        reqs = [dict(prompt=rng.randint(0, 257, n), max_new_tokens=g)
+                for n, g in [(7, 8), (12, 6)]]
+        eng = ServeEngine(EngineConfig(max_slots=2, max_len=48,
+                                       kv_layout="paged", speculation_k=2,
+                                       **self_draft(tiny_model())),
+                          model, None, params, draft_params=params)
+        handles = [eng.submit(GenerationRequest(**r)) for r in reqs]
+        eng.drain()
+        assert sum(h.spec_proposed for h in handles) == \
+            eng.stats["spec_tokens_proposed"] > 0
+        assert sum(h.spec_accepted for h in handles) == \
+            eng.stats["spec_tokens_accepted"] > 0
+        kv = eng.kv_stats()
+        assert kv["spec_acceptance_rate"] == pytest.approx(
+            eng.stats["spec_tokens_accepted"]
+            / eng.stats["spec_tokens_proposed"])
+        tp = eng.throughput()
+        assert tp["dispatches_per_token"] < 1.0      # the perf claim
+        assert tp["ttft_mean_s"] > 0 and tp["tpot_mean_s"] > 0
+
+    def test_latency_percentiles_reported(self):
+        model = tiny_model()
+        params = model.init(jax.random.key(0))
+        rng = np.random.RandomState(8)
+        reqs = [dict(prompt=rng.randint(0, 257, 9), max_new_tokens=4)
+                for _ in range(3)]
+        eng, _ = run_engine(model, params, reqs)
+        tp = eng.throughput()
+        for k in ("ttft_mean_s", "ttft_p50_s", "ttft_p99_s",
+                  "tpot_mean_s", "tpot_p50_s", "tpot_p99_s"):
+            assert tp[k] > 0, k
+        assert tp["ttft_p50_s"] <= tp["ttft_p99_s"]
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="speculation_k"):
+            EngineConfig(speculation_k=-1).validate()
+        with pytest.raises(ValueError, match="draft_config"):
+            EngineConfig(draft_config={"arch": "x"}).validate()
+        cfg = EngineConfig(speculation_k=4,
+                           draft_config={"n_layers": 1}).validate()
+        assert cfg.speculation_k == 4
+
+    def test_derive_draft_config(self):
+        tgt = get_reduced("qwen3-32b")
+        auto = derive_draft_config(tgt)
+        assert auto.n_layers == max(1, tgt.n_layers // 4)
+        assert auto.vocab_size == tgt.vocab_size and auto.n_experts == 0
+        swa = derive_draft_config(get_reduced("mixtral-8x22b"))
+        assert swa.sliding_window == 0       # drafts run full attention
+        with pytest.raises(ValueError, match="vocab"):
+            derive_draft_config(tgt, {"vocab_size": tgt.vocab_size + 1})
+        with pytest.raises(ValueError, match="attention-family"):
+            derive_draft_config(tgt, {"arch": "rwkv6-7b", "reduced": True,
+                                      "vocab_size": tgt.vocab_size})

@@ -50,4 +50,8 @@ echo "== paged KV smoke (shared system prompt, dense-vs-paged bitwise) =="
 python -m benchmarks.serve_paged --smoke | grep -q "serve_paged smoke OK" || {
     echo "serve_paged smoke failed"; exit 1; }
 
+echo "== speculative decoding smoke (spec-vs-plain bitwise, acceptance > 0) =="
+python -m benchmarks.serve_spec --smoke | grep -q "serve_spec smoke OK" || {
+    echo "serve_spec smoke failed"; exit 1; }
+
 echo "== ci.sh OK =="
