@@ -1,0 +1,295 @@
+"""Chaos soak: seeded fault injection across the whole stack, with the
+resilience invariants asserted end to end.
+
+Four phases, each in its own subprocess, all driven by deterministic
+`ChaosSchedule`s (same seed => same faults => replayable failures):
+
+  train   node loss -> elastic shrink; bit-flipped boundary checkpoint
+          -> quarantine + last-good fallback; capacity return ->
+          grow-back with AdaScale-rescaled LR. Invariant: the
+          (seed, step) batch stream is BITWISE aligned across every
+          restart (a replayed step fetches the exact batch the aborted
+          attempt saw), and the cumulative resilience counters surface
+          in run_metadata.
+  sigterm SIGTERM mid-run -> exit 143 with a consistent, integrity-valid
+          last-good checkpoint on disk.
+  serve   slow prefill + page pressure + corrupt hot-reload step +
+          deadline + drain, pressure ladder on. Invariants: every
+          submitted request terminal (never hung), reload fell back past
+          the corrupt step, ZERO leaked KV pages after drain + prefix
+          flush.
+  bitwise comm-latency spikes through the delayed combine stream are
+          latency-only (spiked run == un-spiked run, bitwise), and the
+          chaos machinery with an EMPTY schedule is a bitwise no-op on
+          the plain sync path.
+
+    python -m benchmarks.chaos_soak --smoke   # CI: fixed seed, >=5
+        fault classes, every invariant asserted
+    python -m benchmarks.chaos_soak           # longer soak + random
+        generated schedule, JSON + history record
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from .common import SRC, append_history, run_devices
+
+OUT = Path(__file__).resolve().parents[1] / "BENCH_chaos_soak.json"
+
+TRAIN = r"""
+import json, numpy as np, tempfile
+from repro.chaos import (CapacityReturnCallback, ChaosCallback,
+                         ChaosSchedule, FaultEvent, make_chaos_on_restart)
+from repro.engine import (CheckpointCallback, EngineConfig, LoggingCallback,
+                          StragglerCallback, fit_elastic)
+
+STEPS = %(steps)d
+seen, dps, sums = [], [], {}
+class Record:
+    def on_fit_end(self, session, history): ...
+    def on_step_end(self, session, step, metrics, dt): ...
+    def on_fit_start(self, session, start):
+        dps.append((start, session.runtime.dp_total))
+    def on_step_start(self, session, step):
+        seen.append(step)
+        key = float(np.asarray(session.batch(step)["tokens"],
+                               np.float64).sum())
+        # bitwise stream alignment across restarts: a replayed step
+        # must fetch the exact batch the aborted attempt saw
+        assert sums.setdefault(step, key) == key, (step, key, sums[step])
+
+with tempfile.TemporaryDirectory() as root:
+    ck = root + "/ck"
+    sched = ChaosSchedule([FaultEvent(2, "node_loss"),
+                           FaultEvent(0, "ckpt_bitflip")] + %(extra)s)
+    cfg = EngineConfig(arch="hymba-1p5b", reduced=True, combine="adasum",
+                       seq_len=32, global_batch=8, lr=%(lr)s, ckpt_dir=ck,
+                       ckpt_every=1, log_every=1, elastic=True,
+                       combine_stats=True)
+    cbs = [LoggingCallback(1), StragglerCallback(), Record(),
+           CheckpointCallback(1), ChaosCallback(sched),
+           CapacityReturnCallback(delay=1)]
+    hist, sess = fit_elastic(cfg, STEPS, callbacks=cbs,
+                             on_restart=make_chaos_on_restart(sched, ck))
+    res = sess.run_metadata()["resilience"]
+    # corrupted boundary checkpoint -> quarantine + last-good fallback
+    assert res["restore_fallbacks"] >= 1, res
+    assert res["quarantined_steps"], res
+    assert res["restarts"] >= 1 and res["grow_backs"] >= 1, res
+    # shrink then grow-back, ending at the full degree
+    assert dps[0][1] == 8 and dps[-1][1] == 8 and 4 in [d for _, d in dps]
+    # every step executed; history ends at the last step
+    assert sorted(set(seen)) == list(range(STEPS)), seen
+    assert hist[-1]["step"] == STEPS - 1
+    assert np.isfinite([h["loss"] for h in hist]).all()
+    gb = [p for p in sess.elastic_log["plans"] if p["kind"] == "grow_back"]
+    assert gb and sess.config.lr == gb[-1]["new_lr"]
+    sess.close()
+print("RESULT " + json.dumps({
+    "steps": STEPS, "restarts": res["restarts"],
+    "grow_backs": res["grow_backs"],
+    "restore_fallbacks": res["restore_fallbacks"],
+    "quarantined": res["quarantined_steps"],
+    "grow_back_gain": gb[-1]["gain"],
+    "faults": sorted(e.kind for e in sched.applied)}))
+"""
+
+SIGTERM_INNER = r"""
+from repro.chaos import ChaosCallback, ChaosSchedule, FaultEvent
+from repro.engine import EngineConfig, TrainSession, default_callbacks
+
+cfg = EngineConfig(arch="hymba-1p5b", reduced=True, combine="adasum",
+                   seq_len=32, global_batch=8, ckpt_dir=%(ck)r,
+                   ckpt_every=2, log_every=1, async_checkpoint=True)
+sched = ChaosSchedule([FaultEvent(3, "sigterm")])
+cbs = default_callbacks(cfg) + [ChaosCallback(sched)]
+TrainSession.from_config(cfg, callbacks=cbs).fit(8)
+"""
+
+SERVE = r"""
+import json, os, signal, tempfile
+import numpy as np, jax, jax.numpy as jnp
+from repro.chaos import bitflip_leaf, slow_prefill
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.engine import (EngineConfig, GenerationRequest, HotReloader,
+                          ServeEngine)
+from repro.models import build_model
+
+mcfg = ModelConfig("soak-tiny", "dense", 2, 64, 4, 2, 128, 257, head_dim=16)
+model = build_model(mcfg, compute_dtype=jnp.float32, attn_chunk=16)
+params = model.init(jax.random.key(0))
+root = tempfile.mkdtemp()
+mgr = CheckpointManager(root + "/ck", keep=5)
+mgr.save(1, {"params": jax.tree.map(lambda x: np.asarray(x) * 1.01,
+                                    params)})
+mgr.save(2, {"params": jax.tree.map(lambda x: np.asarray(x) * 1.02,
+                                    params)})
+bitflip_leaf(mgr.root)               # corrupt the newest (reload_corrupt)
+
+cfg = EngineConfig(max_slots=2, max_len=48, kv_layout="paged",
+                   page_size=8, kv_pages=9, pressure_ladder=True)
+eng = ServeEngine(cfg, model, None, params)
+eng._reloader = HotReloader(mgr, params)
+eng.install_drain_handler()
+undo = slow_prefill(eng, 0.01)       # slow_prefill fault, whole run
+
+rng = np.random.RandomState(0)
+req = lambda n, g, **kw: GenerationRequest(
+    prompt=rng.randint(0, 257, n), max_new_tokens=g, **kw)
+handles = [eng.submit(req(16, %(gen)d))]            # page pressure
+eng.step()
+handles.append(eng.submit(req(16, %(gen)d, max_retries=1)))
+handles.append(eng.submit(req(8, 4, deadline_s=1e-6)))  # deadline kill
+for _ in range(3):
+    eng.step()
+os.kill(os.getpid(), signal.SIGTERM)  # handled: drain mode, no exit
+handles.append(eng.submit(req(8, 4)))               # queued -> drained
+eng.drain()
+undo()
+
+tp = eng.throughput()
+# every submitted request terminal, never hung
+assert all(h.done for h in handles), [h.status for h in handles]
+assert tp["completed"] + tp["failed"] == len(handles), tp
+assert tp["completed"] >= 1, tp
+assert tp["deadline_kills"] >= 1 and tp["drained"] >= 1, tp
+# hot-reload fell back past the corrupt step (quarantined on disk)
+assert eng.loaded_step == 1 and tp["restore_fallbacks"] == 1, tp
+assert (mgr.root / "step_00000002.bad").exists()
+# zero leaked pages after drain + prefix flush
+assert eng.leaked_pages() == 0
+eng.flush_prefix()
+assert eng._pool.pages_used == 0, eng._pool.pages_used
+print("RESULT " + json.dumps({
+    "completed": tp["completed"], "failed": tp["failed"],
+    "deadline_kills": tp["deadline_kills"], "drained": tp["drained"],
+    "retries": tp["retries"], "preemptions": tp["preemptions"],
+    "restore_fallbacks": tp["restore_fallbacks"],
+    "degradation_changes": tp["degradation_changes"],
+    "leaked_pages": 0}))
+"""
+
+BITWISE = r"""
+import json, numpy as np, jax
+from repro.chaos import ChaosCallback, ChaosSchedule, FaultEvent
+from repro.configs.base import ModelConfig
+from repro.engine import EngineConfig, TrainSession
+from repro.launch.mesh import make_mesh_compat
+from repro.models import build_model
+
+mcfg = ModelConfig("soak-tiny", "dense", 2, 64, 4, 2, 128, 257, head_dim=16)
+model = build_model(mcfg, attn_chunk=32)
+mesh = make_mesh_compat((8, 1), ("data", "model"))
+STEPS = %(steps)d
+
+def run(delay, sched):
+    cfg = EngineConfig(combine="adasum", span=2, backend="gspmd_tree",
+                       optimizer="momentum", lr=0.05, seq_len=32,
+                       global_batch=8, data_seed=7, combine_delay=delay)
+    sess = TrainSession.from_config(cfg, model=model, mesh=mesh,
+                                    callbacks=[])
+    cb = ChaosCallback(sched) if sched is not None else None
+    if delay:
+        sess.use_delayed_stream()
+    for s in range(STEPS):
+        if cb:
+            cb.on_step_start(sess, s)
+        m = sess.step(sess.batch(s))
+        if cb:
+            cb.on_step_end(sess, s, m, 0.0)
+    out = [np.asarray(x) for x in jax.tree.leaves(sess.state["params"])]
+    sess.close()
+    return out
+
+def same(a, b):
+    return all((x == y).all() for x, y in zip(a, b))
+
+# comm spikes through the delayed stream are latency-only: bitwise
+spikes = ChaosSchedule([FaultEvent(1, "comm_spike", 0.02),
+                        FaultEvent(3, "comm_spike", 0.01)])
+assert same(run(1, None), run(1, spikes))
+assert len(spikes.applied) == 2
+# empty schedule on the plain sync path (combine_delay=0): bitwise no-op
+assert same(run(0, None), run(0, ChaosSchedule([])))
+print("RESULT " + json.dumps({"bitwise_comm_spike": True,
+                              "bitwise_no_fault": True}))
+"""
+
+
+def _result(out: str) -> dict:
+    for line in out.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise RuntimeError(f"no RESULT line in soak output:\n{out[-2000:]}")
+
+
+def _sigterm_phase(tmp_ck: str) -> dict:
+    """Run the SIGTERM-mid-run drill; the inner process must exit 143
+    and leave an integrity-valid last-good checkpoint behind."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run(
+        [sys.executable, "-c", SIGTERM_INNER % {"ck": tmp_ck}],
+        env=env, capture_output=True, text=True, timeout=900)
+    if res.returncode != 143:
+        raise RuntimeError(f"SIGTERM drill exited {res.returncode}, "
+                           f"wanted 143:\n{res.stderr[-2000:]}")
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(tmp_ck)
+    latest = mgr.latest_step()
+    assert latest is not None, "no checkpoint survived SIGTERM"
+    problems = mgr.validate_step(latest)
+    assert problems == [], problems
+    return {"exit_code": 143, "last_good_step": latest, "valid": True}
+
+
+def main(smoke: bool = False):
+    import tempfile
+
+    steps = 6 if smoke else 12
+    # full mode adds a flagged straggler before the node loss: two
+    # independent shrink -> grow-back round trips, each with the LR
+    # rescaled by the live AdaScale gain. The base LR is dropped so the
+    # compounded gains stay in the stable regime at 12 steps.
+    extra = "[]" if smoke else "[FaultEvent(1, 'straggler')]"
+    phases = {}
+    phases["train"] = _result(run_devices(
+        TRAIN % {"steps": steps, "extra": extra,
+                 "lr": "0.01" if smoke else "0.003"},
+        devices=8, timeout=1800))
+    with tempfile.TemporaryDirectory() as d:
+        phases["sigterm"] = _sigterm_phase(d + "/ck")
+    phases["serve"] = _result(run_devices(
+        SERVE % {"gen": 16 if smoke else 28}, devices=1, timeout=1800))
+    phases["bitwise"] = _result(run_devices(
+        BITWISE % {"steps": 4 if smoke else 8}, devices=8, timeout=1800))
+
+    classes = set(phases["train"]["faults"]) | {
+        "sigterm", "slow_prefill", "reload_corrupt", "comm_spike"}
+    if phases["serve"]["deadline_kills"]:
+        classes.add("deadline")
+    if phases["serve"]["preemptions"]:
+        classes.add("page_exhaustion")
+    result = {"mode": "smoke" if smoke else "full",
+              "fault_classes": sorted(classes), "phases": phases}
+    assert len(classes) >= 5, classes
+
+    if smoke:
+        print(f"chaos_soak smoke OK: {len(classes)} fault classes, "
+              f"all invariants held")
+    else:
+        OUT.write_text(json.dumps(result, indent=2) + "\n")
+        append_history("chaos_soak", result, devices=8,
+                       mesh={"data": 8, "model": 1})
+        print(f"chaos_soak full OK: wrote {OUT.name}")
+    return result
+
+
+if __name__ == "__main__":
+    main(smoke="--smoke" in sys.argv[1:])

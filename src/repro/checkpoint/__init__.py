@@ -1,2 +1,2 @@
-from .manager import (AsyncCheckpointManager, CheckpointManager,
-                      reshard_lanes)
+from .manager import (AsyncCheckpointManager, CheckpointIntegrityError,
+                      CheckpointManager, reshard_lanes)

@@ -31,14 +31,33 @@ import shutil
 import signal
 import sys
 import time
+import zlib
 from pathlib import Path
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 PyTree = Any
+
+
+class CheckpointIntegrityError(ValueError):
+    """A checkpoint step failed restore-time validation (missing, torn,
+    or bit-flipped leaf files; missing/unreadable manifest). The manager
+    quarantines the offending step before raising, so a retry against
+    `latest_step()` lands on the previous (last-good) step."""
+
+    def __init__(self, step: int, problems: List[str]):
+        super().__init__(
+            f"checkpoint step {step} failed integrity validation: "
+            + "; ".join(problems))
+        self.step = step
+        self.problems = list(problems)
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
 def _leaf_files(tree: PyTree) -> List[str]:
@@ -61,6 +80,9 @@ class CheckpointManager:
         self.root.mkdir(parents=True, exist_ok=True)
         self._in_save = False
         self._pending_sigterm = False
+        # resilience counters (surfaced in run_metadata()/throughput())
+        self.restore_fallbacks = 0
+        self.quarantined: List[Dict[str, Any]] = []
 
     # ------------------------------------------------------------- save
     def save(self, step: int, state: PyTree, host_owns=None) -> Path:
@@ -88,7 +110,8 @@ class CheckpointManager:
                 np.save(tmp / fname, arr)
                 meta["leaves"].append({"file": fname, "path": lpath,
                                        "shape": list(arr.shape),
-                                       "dtype": str(arr.dtype)})
+                                       "dtype": str(arr.dtype),
+                                       "crc32": _crc(arr)})
             (tmp / "manifest.json").write_text(json.dumps(meta))
             os.rename(tmp, final)
             self._gc()
@@ -108,6 +131,10 @@ class CheckpointManager:
         steps = CheckpointManager.all_steps(self)
         for s in steps[:-self.keep]:
             shutil.rmtree(self.root / f"step_{s:08d}", ignore_errors=True)
+        bad = sorted(p.name for p in self.root.iterdir()
+                     if re.fullmatch(r"step_\d+\.bad", p.name))
+        for name in bad[:-self.keep] if self.keep else bad:
+            shutil.rmtree(self.root / name, ignore_errors=True)
 
     # ---------------------------------------------------------- restore
     def all_steps(self) -> List[int]:
@@ -122,20 +149,133 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    # ------------------------------------------------ integrity / quarantine
+    def _load_step(self, step: int) -> Tuple[Dict, Dict[str, np.ndarray]]:
+        """Read every leaf file the manifest names, verifying existence,
+        np.load-ability (torn writes fail here), shape/dtype against the
+        manifest, and the per-leaf crc32 written at save time (absent in
+        pre-integrity checkpoints — tolerated). Returns (manifest,
+        {file: array}); raises CheckpointIntegrityError listing EVERY
+        problem found, not just the first."""
+        d = self.root / f"step_{step:08d}"
+        mf = d / "manifest.json"
+        if not mf.exists():
+            raise CheckpointIntegrityError(
+                step, [f"missing manifest.json under {d}"])
+        try:
+            meta = json.loads(mf.read_text())
+        except (json.JSONDecodeError, OSError) as e:
+            raise CheckpointIntegrityError(
+                step, [f"unreadable manifest.json: {e}"])
+        problems, arrays = [], {}
+        for entry in meta.get("leaves", []):
+            fname = entry["file"]
+            lpath = entry.get("path", "?")
+            f = d / fname
+            if not f.exists():
+                problems.append(f"missing leaf {fname} ({lpath})")
+                continue
+            try:
+                arr = np.load(f)
+            except Exception as e:  # torn write: bad .npy header/payload
+                problems.append(f"unreadable leaf {fname} ({lpath}): "
+                                f"{type(e).__name__}")
+                continue
+            if (list(arr.shape) != list(entry["shape"])
+                    or str(arr.dtype) != entry["dtype"]):
+                problems.append(
+                    f"leaf {fname} ({lpath}): stored "
+                    f"{arr.dtype}{list(arr.shape)} != manifest "
+                    f"{entry['dtype']}{entry['shape']}")
+                continue
+            crc = entry.get("crc32")
+            if crc is not None and _crc(arr) != crc:
+                problems.append(f"checksum mismatch in {fname} ({lpath})")
+                continue
+            arrays[fname] = arr
+        if problems:
+            raise CheckpointIntegrityError(step, problems)
+        return meta, arrays
+
+    def validate_step(self, step: int) -> List[str]:
+        """Integrity problems for `step` ([] = valid)."""
+        try:
+            self._load_step(step)
+        except CheckpointIntegrityError as e:
+            return e.problems
+        return []
+
+    def quarantine(self, step: int, problems: List[str]) -> None:
+        """Rename the step dir to `step_XXXXXXXX.bad` — a name
+        `all_steps()` (and hence `latest_step()`/`_gc`) never matches —
+        so subsequent restores fall through to the previous step. The
+        dir is kept (not deleted) for post-mortem inspection until _gc
+        trims old .bad dirs."""
+        d = self.root / f"step_{step:08d}"
+        bad = self.root / f"step_{step:08d}.bad"
+        if d.exists():
+            if bad.exists():
+                shutil.rmtree(bad, ignore_errors=True)
+            os.rename(d, bad)
+        self.quarantined.append({"step": step, "problems": list(problems)})
+        print(f"[ckpt] quarantined step {step} -> {bad.name}: "
+              + "; ".join(problems))
+
+    def _resolve_verified(self, step: Optional[int]):
+        """(step, manifest, arrays) for an explicitly requested `step`
+        (quarantine + raise if invalid), or — when step is None — the
+        NEWEST step that passes validation, quarantining invalid ones on
+        the way down and counting each skip as a restore fallback."""
+        if step is not None:
+            try:
+                meta, arrays = self._load_step(step)
+            except CheckpointIntegrityError as e:
+                self.quarantine(step, e.problems)
+                raise
+            return step, meta, arrays
+        steps = self.all_steps()
+        if not steps:
+            raise ValueError(f"no checkpoints under {self.root}")
+        for s in reversed(steps):
+            try:
+                meta, arrays = self._load_step(s)
+            except CheckpointIntegrityError as e:
+                self.quarantine(s, e.problems)
+                self.restore_fallbacks += 1
+                print(f"[ckpt] falling back past corrupt step {s} "
+                      f"to last good")
+                continue
+            return s, meta, arrays
+        raise ValueError(
+            f"no valid checkpoints under {self.root}: every step failed "
+            f"integrity validation (all quarantined)")
+
     def restore(self, like: PyTree, step: Optional[int] = None,
                 shardings: Optional[PyTree] = None) -> PyTree:
         """Loads into the structure of `like` (shapes may differ on the
-        lane axis — see reshard_lanes)."""
-        step = step if step is not None else self.latest_step()
-        assert step is not None, f"no checkpoints under {self.root}"
-        d = self.root / f"step_{step:08d}"
+        lane axis — see reshard_lanes). Every leaf is validated against
+        the manifest checksums first; with step=None a corrupt newest
+        step is quarantined and the previous (last-good) one restored
+        automatically."""
+        step, meta, arrays = self._resolve_verified(step)
         leaves, treedef = jax.tree.flatten(like)
         files = _leaf_files(like)
+        if meta.get("n_leaves", len(leaves)) != len(leaves):
+            raise ValueError(
+                f"checkpoint step {step} holds {meta['n_leaves']} leaves "
+                f"but the restore template has {len(leaves)} — saved from "
+                f"a different model/optimizer structure?")
+        missing = [f for f in files if f not in arrays]
+        if missing:
+            raise ValueError(
+                f"checkpoint step {step} is missing {len(missing)} leaf "
+                f"file(s): {', '.join(missing[:5])}"
+                + ("..." if len(missing) > 5 else ""))
         out = []
         shard_leaves = (jax.tree.leaves(shardings)
                         if shardings is not None else [None] * len(leaves))
         for leaf, fname, sh in zip(leaves, files, shard_leaves):
-            arr = np.load(d / fname)
+            arr = arrays[fname]
             want = tuple(leaf.shape)
             if tuple(arr.shape) != want:
                 arr = reshard_lanes(arr, want)
@@ -154,28 +294,36 @@ class CheckpointManager:
 
         This is what lets a ServeEngine/ServeSession serve trained
         weights without reconstructing the optimizer state the training
-        run checkpointed alongside them."""
-        step = step if step is not None else self.latest_step()
-        assert step is not None, f"no checkpoints under {self.root}"
-        d = self.root / f"step_{step:08d}"
-        meta = json.loads((d / "manifest.json").read_text())
+        run checkpointed alongside them. Same integrity contract as
+        `restore`: validated leaves, quarantine + last-good fallback
+        with step=None, one clear ValueError (naming the step and every
+        missing leaf) on structural mismatch."""
+        step, meta, arrays = self._resolve_verified(step)
         by_path = {l["path"]: l["file"] for l in meta["leaves"]
                    if "path" in l}
         if not by_path:
             raise ValueError(
-                f"{d} predates path-indexed manifests; re-save the "
-                f"checkpoint (or restore the full state and take "
-                f"state['params'])")
+                f"checkpoint step {step} predates path-indexed manifests; "
+                f"re-save the checkpoint (or restore the full state and "
+                f"take state['params'])")
         flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        missing = []
+        for path, _ in flat:
+            key = "['params']" + jax.tree_util.keystr(path)
+            if key not in by_path:
+                missing.append(key)
+        if missing:
+            raise ValueError(
+                f"checkpoint step {step} is missing {len(missing)} params "
+                f"leaf/leaves: {', '.join(missing[:5])}"
+                + ("..." if len(missing) > 5 else "")
+                + "; was it saved from a compatible model?")
         shard_leaves = (jax.tree.leaves(shardings)
                         if shardings is not None else [None] * len(flat))
         out = []
         for (path, leaf), sh in zip(flat, shard_leaves):
             key = "['params']" + jax.tree_util.keystr(path)
-            if key not in by_path:
-                raise KeyError(f"checkpoint {d} has no leaf {key}; "
-                               f"was it saved from a compatible model?")
-            arr = np.load(d / by_path[key])
+            arr = arrays[by_path[key]]
             if tuple(arr.shape) != tuple(leaf.shape):
                 raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
                                  f"model shape {tuple(leaf.shape)}")
@@ -256,6 +404,10 @@ class AsyncCheckpointManager(CheckpointManager):
     def restore_params(self, template, step=None, shardings=None) -> PyTree:
         self.wait()
         return super().restore_params(template, step, shardings)
+
+    def validate_step(self, step: int) -> List[str]:
+        self.wait()
+        return super().validate_step(step)
 
     def close(self):
         self.wait()

@@ -26,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
-from repro.runtime.elastic import ResizePlan, plan_grow
+from repro.runtime.elastic import ResizePlan, plan_grow, plan_shrink_batch
 
 from .noise import NoiseEMA, gain_for_factor
 
@@ -42,6 +42,10 @@ class ControllerConfig:
     grow_span: bool = True       # grow Adasum span with the batch
     lr_rescale: str = "adascale" # 'adascale' | 'linear' | 'none'
     ema: float = 0.9             # noise-EMA decay
+    shrink_threshold: float = 0.0  # shrink while ema_noise < this * batch
+                                 # (0 = shrink direction off); LR divided
+                                 # by the same gain the growth multiplied by
+    min_global_batch: int = 0    # shrink floor (0 = span/1 floor only)
 
     @classmethod
     def from_engine(cls, cfg) -> "ControllerConfig":
@@ -51,7 +55,9 @@ class ControllerConfig:
                    patience=cfg.grow_patience, cooldown=cfg.grow_cooldown,
                    max_global_batch=cfg.max_global_batch,
                    grow_span=cfg.grow_span, lr_rescale=cfg.lr_rescale,
-                   ema=cfg.noise_ema)
+                   ema=cfg.noise_ema,
+                   shrink_threshold=cfg.shrink_threshold,
+                   min_global_batch=cfg.min_global_batch)
 
 
 class BatchController:
@@ -61,6 +67,10 @@ class BatchController:
                  span: int, dp_total: int, lr: float):
         assert cfg.grow_factor >= 2
         assert cfg.lr_rescale in ("adascale", "linear", "none")
+        assert cfg.shrink_threshold >= 0.0
+        if cfg.shrink_threshold:
+            # the bands must not overlap (2x reset margins either side)
+            assert cfg.shrink_threshold < cfg.grow_threshold, cfg
         self.cfg = cfg
         self.global_batch = int(global_batch)
         self.span = int(span)
@@ -70,18 +80,23 @@ class BatchController:
         self.var = NoiseEMA(cfg.ema)
         self.mu2 = NoiseEMA(cfg.ema)
         self._above = 0
+        self._below = 0
         self._cool = 0
-        self._exhausted = False
+        self._exhausted = False         # growth capped
+        self._shrink_stopped = False    # shrink floored
         self.decisions: List[ResizePlan] = []
 
     # ------------------------------------------------------------- observe
     def observe(self, step: int, metrics: Dict[str, float]
                 ) -> Optional[ResizePlan]:
         """Feed one step's metrics; returns a ResizePlan when the
-        hysteresis schedule decides to grow, else None. Metrics without
-        a noise_scale key (stats off / span 1) are ignored."""
+        hysteresis schedule decides to grow — or, with a shrink band
+        configured (`shrink_threshold` > 0), to shrink when the noise
+        scale falls below it. Metrics without a noise_scale key (stats
+        off / span 1) are ignored."""
         ns = metrics.get("noise_scale")
-        if ns is None or self._exhausted:
+        shrink_on = self.cfg.shrink_threshold > 0 and not self._shrink_stopped
+        if ns is None or (self._exhausted and not shrink_on):
             return None
         ema = self.noise.update(ns)
         self.var.update(metrics.get("grad_var"))
@@ -96,15 +111,28 @@ class BatchController:
             self._above += 1
         elif ema < hi / 2.0:
             self._above = 0          # firmly out of band: reset patience
-        if self._above < self.cfg.patience:
-            return None
-        plan = self._plan()
-        self._above = 0
-        if plan is None or not plan.grew:
-            # cap reached: stop asking (the run continues at this batch)
-            self._exhausted = True
-            return None
-        return plan
+        lo = self.cfg.shrink_threshold * self.global_batch
+        if shrink_on and ema < lo:
+            self._below += 1
+        elif ema > 2.0 * lo:
+            self._below = 0          # firmly above the shrink band
+        if self._above >= self.cfg.patience and not self._exhausted:
+            plan = self._plan()
+            self._above = 0
+            if plan is None or not plan.grew:
+                # cap reached: stop asking (the run continues at this batch)
+                self._exhausted = True
+                return None
+            return plan
+        if shrink_on and self._below >= self.cfg.patience:
+            plan = self._plan_shrink()
+            self._below = 0
+            if plan is None or not plan.changed:
+                # floor reached: stop planning shrinks
+                self._shrink_stopped = True
+                return None
+            return plan
+        return None
 
     # ---------------------------------------------------------------- plan
     def _lr_scale(self, factor: int) -> float:
@@ -129,6 +157,18 @@ class BatchController:
                                 f"{self.global_batch}")
         return plan
 
+    def _plan_shrink(self) -> Optional[ResizePlan]:
+        # the LR comes back down by the same gain the growth multiplied
+        # by: 1/gain (adascale), 1/factor (linear), 1 (none)
+        inv = 1.0 / max(self._lr_scale(self.cfg.grow_factor), 1e-12)
+        plan = plan_shrink_batch(
+            self.global_batch, self.span, self.dp_total, self.lr,
+            factor=self.cfg.grow_factor, shrink_span=self.cfg.grow_span,
+            min_global_batch=self.cfg.min_global_batch, lr_scale=inv,
+            reason=f"ema_noise={self.noise.value:.1f}"
+                   f"<{self.cfg.shrink_threshold:g}x{self.global_batch}")
+        return plan
+
     # ------------------------------------------------------------- resized
     def notify_resized(self, plan: ResizePlan):
         """The driver executed `plan`: adopt the new operating point and
@@ -140,4 +180,9 @@ class BatchController:
         self.span = plan.new_span
         self.lr = plan.new_lr
         self._above = 0
+        self._below = 0
         self._cool = self.cfg.cooldown
+        if plan.shrank:
+            self._exhausted = False   # headroom above the cap again
+        if plan.grew:
+            self._shrink_stopped = False

@@ -27,12 +27,13 @@ from .session import (Callback, CheckpointCallback, FailureInjectionCallback,
                       LoggingCallback, ServeSession, StragglerCallback,
                       TrainSession, default_callbacks)
 from .pipeline import StepPipeline, fit_elastic
-from .serving import (GenerationRequest, HotReloader, RequestHandle,
-                      ServeEngine)
+from .serving import (GenerationRequest, HotReloader, PressureLadder,
+                      RequestHandle, ServeEngine)
 
 __all__ = [
     "EngineConfig", "TrainSession", "ServeSession",
     "ServeEngine", "GenerationRequest", "RequestHandle", "HotReloader",
+    "PressureLadder",
     "register_combiner", "make_combiner", "available_combiners",
     "get_combiner_factory", "registry_key",
     "build_runtime", "make_serve_step", "make_batched_decode_step",

@@ -117,6 +117,11 @@ class EngineConfig:
     lr_rescale: str = "adascale" # LR rule at a resize: 'adascale' gain |
                                 # 'linear' | 'none'
     noise_ema: float = 0.9      # noise-scale EMA decay
+    shrink_threshold: float = 0.0 # shrink while ema_noise < this *
+                                # global_batch (0 = shrink direction off;
+                                # must stay below grow_threshold); LR is
+                                # divided by the gain growth multiplied by
+    min_global_batch: int = 0   # controller shrink floor (0 = span floor)
 
     # ---- serving (engine/serving.ServeEngine) ----
     max_slots: int = 8          # continuous-batching decode slot pool
@@ -147,6 +152,11 @@ class EngineConfig:
                                 # applied to the target config; None =>
                                 # auto-derived shrunken target (quarter
                                 # depth). Must share the target's vocab
+    pressure_ladder: bool = False # serve graceful degradation under
+                                # kv/queue pressure: disable speculation
+                                # -> stop admissions -> preempt-by-
+                                # recompute (opt-in; off keeps the
+                                # aggressive-admission default behavior)
 
     # ------------------------------------------------------------ validation
     def validate(self, dp_total: Optional[int] = None) -> "EngineConfig":
@@ -213,6 +223,18 @@ class EngineConfig:
         if not 0.0 <= self.noise_ema < 1.0:
             raise ValueError(f"noise_ema must be in [0, 1), got "
                              f"{self.noise_ema}")
+        if self.shrink_threshold < 0:
+            raise ValueError(f"shrink_threshold must be >= 0 (0 = shrink "
+                             f"off), got {self.shrink_threshold}")
+        if self.shrink_threshold and (self.shrink_threshold
+                                      >= self.grow_threshold):
+            raise ValueError(
+                f"shrink_threshold={self.shrink_threshold} must stay "
+                f"below grow_threshold={self.grow_threshold} (the bands "
+                f"must not overlap or the controller oscillates)")
+        if self.min_global_batch < 0:
+            raise ValueError(f"min_global_batch must be >= 0, got "
+                             f"{self.min_global_batch}")
         if self.lr_rescale not in ("adascale", "linear", "none"):
             raise ValueError(f"lr_rescale={self.lr_rescale!r}; expected "
                              f"adascale | linear | none")
@@ -465,6 +487,14 @@ class EngineConfig:
         ap.add_argument("--no-grow-span", action="store_true",
                         help="adaptive resizes grow only the batch, "
                         "never the Adasum span")
+        ap.add_argument("--shrink-threshold", type=float, default=None,
+                        dest="shrink_threshold",
+                        help="adaptive shrink band: halve while ema "
+                        "noise_scale < threshold * global_batch (0 = off)")
+        ap.add_argument("--min-global-batch", type=int, default=None,
+                        dest="min_global_batch",
+                        help="adaptive controller shrink floor (0 = span "
+                        "floor only)")
         ap.add_argument("--lr-rescale", default=None, dest="lr_rescale",
                         choices=["adascale", "linear", "none"],
                         help="LR rule at an adaptive resize")
@@ -502,6 +532,11 @@ class EngineConfig:
                         help="serving: draft model arch preset for "
                         "speculation (default: auto-derived shrunken "
                         "target); honors --reduced")
+        ap.add_argument("--pressure-ladder", action="store_true",
+                        default=None, dest="pressure_ladder",
+                        help="serving: graceful degradation under "
+                        "kv/queue pressure (no-spec -> no-admit -> "
+                        "preempt)")
         args, extra = ap.parse_known_args(argv)
         if extra:
             raise SystemExit(f"unknown arguments: {extra}")

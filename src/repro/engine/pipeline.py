@@ -23,15 +23,16 @@ including across save/restore/resume and elastic rebuilds.
 """
 from __future__ import annotations
 
+import dataclasses
 import sys
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 
 from repro.control.noise import STAT_KEYS
-from repro.runtime import (NodeLossError, Prefetcher, RestartSignal,
-                           plan_shrink)
+from repro.runtime import (GrowBackSignal, NodeLossError, Prefetcher,
+                           RestartSignal, plan_grow_back, plan_shrink)
 
 PyTree = Any
 
@@ -162,17 +163,31 @@ class StepPipeline:
 
 def fit_elastic(config, steps: Optional[int] = None, *,
                 callbacks: Optional[List] = None, max_restarts: int = 2,
+                max_grow_backs: int = 4,
+                on_restart: Optional[Callable] = None,
                 ) -> Tuple[List[Dict[str, float]], Any]:
     """Fault-tolerant driver: run `fit`, and on node loss (injected
     failure) or a flagged persistent straggler do the monitor.py ladder —
     checkpoint, halve the DP degree (power of two), rebuild mesh +
     runtime + combiner from the same EngineConfig, resume from the
-    manifest. Returns (combined history, final session).
+    manifest. A `GrowBackSignal` (capacity returned) runs the same
+    save -> rebuild -> resume machinery in the other direction: DP
+    re-expands toward the run's original degree and the LR is rescaled
+    by the AdaScale gain of the growth factor (computed from the live
+    CombineStats; 1.0 without stats) — per §5.4 nothing else changes.
+    Returns (combined history, final session); the final session carries
+    an `elastic_log` dict (restarts / grow_backs / plans).
 
     The callback list is shared across attempts (a FailureInjector must
     not re-arm a failure it already fired), but straggler monitors are
     reset on restart — evicting the straggler clears the flag.
+
+    `on_restart(session, signal)` — optional hook invoked after each
+    boundary `save_sync` and before the rebuild. The chaos harness uses
+    it to corrupt the just-written checkpoint and prove the restore
+    falls back to last-good.
     """
+    from repro.control.noise import gain_for_factor
     from repro.launch.mesh import make_local_mesh
     from repro.runtime import StepMonitor
     from .session import StragglerCallback, TrainSession, default_callbacks
@@ -181,17 +196,41 @@ def fit_elastic(config, steps: Optional[int] = None, *,
         raise ValueError("fit_elastic needs EngineConfig.ckpt_dir (the "
                          "restart resumes from the manifest)")
     cbs = default_callbacks(config) if callbacks is None else list(callbacks)
+
+    def _reset_monitors():
+        for cb in cbs:
+            if isinstance(cb, StragglerCallback):
+                cb.monitor = StepMonitor(cb.monitor.cfg)
+
     mesh = None
     history: List[Dict[str, float]] = []
-    restarts = 0
+    restarts = grow_backs = 0
+    full_dp = 0    # the original DP degree: the grow-back target
+    elastic_log: Dict[str, Any] = {"restarts": 0, "grow_backs": 0,
+                                   "plans": [],
+                                   "prior_restore_fallbacks": 0,
+                                   "prior_quarantined": []}
+
+    def _bank_counters(session):
+        # each rebuild gets a fresh CheckpointManager; bank the closing
+        # session's integrity counters so run_metadata stays cumulative
+        if session.checkpoint is not None:
+            elastic_log["prior_restore_fallbacks"] \
+                += session.checkpoint.restore_fallbacks
+            elastic_log["prior_quarantined"] \
+                += [q["step"] for q in session.checkpoint.quarantined]
     while True:
         session = TrainSession.from_config(config, mesh=mesh, callbacks=cbs)
-        if restarts:
+        session.elastic_log = elastic_log
+        if not full_dp:
+            full_dp = session.runtime.dp_total
+        if restarts or grow_backs:
             # after any elastic rebuild, validate + log the settings
             # actually in force (span can be re-clamped by the smaller
             # dp) — same check the controller-resize driver runs
             from repro.control.resize import log_effective
-            log_effective(session, label=f"shrink #{restarts}")
+            log_effective(session,
+                          label=f"rebuild #{restarts + grow_backs}")
         try:
             history += session.fit(steps)
             return history, session
@@ -200,15 +239,59 @@ def fit_elastic(config, steps: Optional[int] = None, *,
             # state sits at a step boundary (failures fire at step start,
             # straggler flags after step end): checkpoint it, barrier
             session.save_sync()
+            if on_restart is not None:
+                on_restart(session, e)
             plan = plan_shrink(session.runtime.dp_total)
             if not plan.shrunk or restarts >= max_restarts:
                 session.close()
                 raise
+            _bank_counters(session)
             restarts += 1
+            elastic_log["restarts"] = restarts
+            elastic_log["plans"].append(
+                {"kind": "shrink", "old_dp": plan.old_dp,
+                 "new_dp": plan.new_dp})
             print(f"[elastic] {e}: restarting at dp={plan.new_dp} "
                   f"(was {plan.old_dp}), no hyperparameter change")
             session.close()    # the abandoned session's writer thread
             mesh = make_local_mesh(plan.new_dp, config.model_mesh)
-            for cb in cbs:
-                if isinstance(cb, StragglerCallback):
-                    cb.monitor = StepMonitor(cb.monitor.cfg)
+            _reset_monitors()
+        except GrowBackSignal as e:
+            history += getattr(e, "history", [])
+            session.save_sync()
+            if on_restart is not None:
+                on_restart(session, e)
+            grow_backs += 1
+            if grow_backs > max_grow_backs:
+                session.close()
+                raise
+            _bank_counters(session)
+            dp_now = session.runtime.dp_total
+            target = e.target_dp or full_dp
+            prov = plan_grow_back(dp_now, target, config.lr)
+            if not prov.grew:
+                # nothing to re-expand: resume as-is from the manifest
+                session.close()
+                continue
+            # AdaScale gain of the growth factor from live CombineStats
+            stats = getattr(session, "_last_stats", {}) or {}
+            # _last_stats is already host floats (device_get in step())
+            var = float(stats.get("grad_var", 0.0))    # lint: allow(host-pull)
+            mu2 = float(stats.get("grad_mu2", 0.0))    # lint: allow(host-pull)
+            factor = prov.new_dp // prov.old_dp
+            gain = (gain_for_factor(var, mu2, float(factor))
+                    if (var > 0.0 or mu2 > 0.0) else 1.0)
+            plan = plan_grow_back(dp_now, target, config.lr, lr_scale=gain)
+            elastic_log["grow_backs"] = grow_backs
+            elastic_log["plans"].append(
+                {"kind": "grow_back", "old_dp": plan.old_dp,
+                 "new_dp": plan.new_dp, "old_lr": plan.old_lr,
+                 "new_lr": plan.new_lr, "gain": gain})
+            print(f"[elastic] {e}: growing back to dp={plan.new_dp} "
+                  f"(was {plan.old_dp}), lr {plan.old_lr:g}->"
+                  f"{plan.new_lr:g} (adascale gain {gain:.3f} for "
+                  f"factor {factor})")
+            session.close()
+            config = dataclasses.replace(config, lr=plan.new_lr)
+            mesh = make_local_mesh(plan.new_dp, config.model_mesh)
+            _reset_monitors()

@@ -18,11 +18,11 @@
 from .engine import ServeEngine
 from .reload import HotReloader
 from .scheduler import (ContinuousBatchingScheduler, GenerationRequest,
-                        PrefixIndex, RequestHandle)
+                        PrefixIndex, PressureLadder, RequestHandle)
 from .slots import PagePool, insert_rows, select_rows, slot_positions
 
 __all__ = [
     "ServeEngine", "GenerationRequest", "RequestHandle",
     "ContinuousBatchingScheduler", "HotReloader", "PagePool", "PrefixIndex",
-    "insert_rows", "select_rows", "slot_positions",
+    "PressureLadder", "insert_rows", "select_rows", "slot_positions",
 ]

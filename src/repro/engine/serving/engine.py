@@ -53,7 +53,7 @@ import numpy as np
 
 from .reload import HotReloader
 from .scheduler import (ContinuousBatchingScheduler, GenerationRequest,
-                        PrefixIndex, RequestHandle)
+                        PrefixIndex, PressureLadder, RequestHandle)
 from .slots import (PagePool, cast_paged_like as _cast_paged, copy_pages,
                     dense_fallback_stats, dense_kv_bytes, gather_prefix,
                     insert_rows_at, paged_insert_rows, paged_kv_page_bytes,
@@ -550,6 +550,11 @@ class ServeEngine:
             self._spec_cap = paged_capacity(cfg, self.max_len)
         self._ttft: List[float] = []
         self._tpot: List[float] = []
+        # graceful degradation (opt-in): the pressure ladder watches
+        # page-pool and queue pressure each tick and sheds load in
+        # stages instead of thrashing on preemptions
+        self._ladder = PressureLadder() if config.pressure_ladder else None
+        self._draining = False
         self.stats = {"submitted": 0, "completed": 0, "generated_tokens": 0,
                       "prefill_calls": 0, "decode_steps": 0, "reloads": 0,
                       "kv_bytes_in_use": 0, "peak_kv_bytes_in_use": 0,
@@ -559,6 +564,10 @@ class ServeEngine:
                       "cow_copies": 0, "preemptions": 0,
                       "spec_ticks": 0, "spec_tokens_proposed": 0,
                       "spec_tokens_accepted": 0, "draft_prefills": 0,
+                      "failed": 0, "deadline_kills": 0, "retries": 0,
+                      "drained": 0, "restore_fallbacks": 0,
+                      "degradation_level": 0, "degradation_changes": 0,
+                      "ladder_preempts": 0,
                       "started_at": None}
         if not self.paged:
             # dense slots pay full capacity up front — that constant IS
@@ -607,12 +616,21 @@ class ServeEngine:
         # weights — flush them so new admissions re-prefill under the
         # new version (pages still referenced by in-flight old-version
         # slots survive until those slots retire)
+        self.flush_prefix()
+
+    def flush_prefix(self) -> int:
+        """Release every prefix-index page reference; returns the number
+        of pages flushed. Hot-reload calls this; the chaos soak uses it
+        before asserting the zero-leaked-pages invariant."""
+        n = 0
         if self._prefix is not None:
             while True:
                 pid = self._prefix.evict_lru()
                 if pid is None:
                     break
                 self._pool.release([pid])
+                n += 1
+        return n
 
     def _gc_versions(self):
         live = {h.version for h in self.scheduler.active.values()}
@@ -631,21 +649,53 @@ class ServeEngine:
 
     # --------------------------------------------------------------- tick
     def step(self) -> bool:
-        """One scheduler tick: hot-reload poll -> admit (fused prefill;
-        paged admission reserves pages, shared prefixes prefill only the
+        """One scheduler tick: deadline enforcement -> hot-reload poll
+        -> pressure-ladder update -> admit (fused prefill; paged
+        admission reserves pages, shared prefixes prefill only the
         unshared tail) -> one batched decode over the active slots (paged
         growth/COW first) -> retire finished. Returns True while queued
         or in-flight work remains."""
+        self._enforce_deadlines()
         if self._reloader is not None:
             got = self._reloader.poll()
             if got is not None:
                 self.swap_params(got[1], step=got[0])
-        admitted = self.scheduler.admit(
-            self._reserve_pages if self.paged else None)
-        if admitted:
-            self._admit_batch(admitted)
+            self.stats["restore_fallbacks"] = self._reloader.fallbacks
+        level = 0
+        if self._ladder is not None:
+            free_frac = 1.0
+            if self.paged:
+                free_frac = (self._pool.pages_free
+                             / max(1, self._num_pages - 1))
+            level = self._ladder.update(
+                free_frac=free_frac, queue_len=len(self.scheduler.queue),
+                max_slots=self.max_slots)
+            self.stats["degradation_level"] = level
+            self.stats["degradation_changes"] = self._ladder.changes
+        # admissions stop while draining, and at ladder level >= 2 while
+        # anything is in flight (an empty active set must still admit —
+        # pausing then would deadlock the queue against a full pool)
+        blocked = self._draining or (level >= 2 and self.scheduler.active)
+        if not blocked:
+            admitted = self.scheduler.admit(
+                self._reserve_pages if self.paged else None)
+            if admitted:
+                self._admit_batch(admitted)
+        if (level >= 3 and self.paged and self._pool.pages_free == 0
+                and len(self.scheduler.active) > 1):
+            # preempt-by-recompute rung: free the youngest slot's pages
+            # proactively so the older slots can keep growing
+            if self._preempt_youngest(None):
+                self.stats["ladder_preempts"] += 1
         if self.scheduler.active:
             self._decode_tick()
+        if self._draining and not self.scheduler.active:
+            # active set drained: queued requests end terminally (never
+            # hung) with finish_reason 'drained'
+            for h in list(self.scheduler.queue):
+                self.scheduler.fail(h, "drained")
+                self.stats["failed"] += 1
+                self.stats["drained"] += 1
         self._gc_versions()
         if self.paged:
             used = self._pool.pages_used
@@ -658,9 +708,60 @@ class ServeEngine:
         return self.scheduler.has_work
 
     def drain(self) -> None:
-        """Run ticks until every submitted request has completed."""
+        """Run ticks until every submitted request is terminal."""
         while self.step():
             pass
+
+    # --------------------------------------------------------- resilience
+    def _enforce_deadlines(self):
+        """Fail every queued/running request past its deadline_s budget
+        (terminal finish_reason 'deadline'; a running slot's pages are
+        released first). Requests without a deadline are untouched."""
+        now = time.perf_counter()
+        for h in self.scheduler.expired(now):
+            if h.slot is not None and self.paged:
+                self._release_slot_pages(h.slot)
+            self.scheduler.fail(h, "deadline")
+            self.stats["deadline_kills"] += 1
+            self.stats["failed"] += 1
+
+    def request_drain(self):
+        """Graceful-drain mode (SIGTERM): no new admissions; in-flight
+        slots decode to completion; once the active set empties, queued
+        requests fail terminally with finish_reason 'drained'. `drain()`
+        then falls through — no request is ever left hanging."""
+        self._draining = True
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    def install_drain_handler(self):
+        """SIGTERM => request_drain(): the serve-side analogue of the
+        checkpoint preemption handler (train already exits through one).
+        The process keeps running until the caller's drain loop ends."""
+        import signal
+
+        def handler(signum, frame):
+            print("[serve] SIGTERM: draining (no new admissions; "
+                  "in-flight requests finish)")
+            self.request_drain()
+        signal.signal(signal.SIGTERM, handler)
+
+    def leaked_pages(self) -> int:
+        """Pages the pool holds that no active slot and no prefix-index
+        entry accounts for. After a drain (empty active set) and a
+        `flush_prefix()`, this must be exactly `pages_used` == 0 — the
+        zero-leak invariant the chaos soak asserts."""
+        if not self.paged:
+            return 0
+        pids = set()
+        for slot in self.scheduler.active:
+            mask = self._owned[slot] | self._shared[slot]
+            pids.update(int(p) for p in self._tables[slot][mask])
+        if self._prefix is not None:
+            pids.update(self._prefix.pages())
+        return self._pool.pages_used - len(pids)
 
     # ------------------------------------------------------ paged plumbing
     def _full_prompt(self, handle) -> np.ndarray:
@@ -738,18 +839,25 @@ class ServeEngine:
         self._shared[slot] = False
         self._tables_dirty = True
 
-    def _preempt_youngest(self, keep_slot: int) -> bool:
+    def _preempt_youngest(self, keep_slot: Optional[int]) -> bool:
         """Pool pressure: push the most recently admitted request (other
-        than `keep_slot`) back to the queue front, freeing its pages. It
-        re-prefills prompt+generated on re-admission — same tokens, but
-        on the CURRENT param version."""
+        than `keep_slot`; None keeps nothing) back to the queue front,
+        freeing its pages. It re-prefills prompt+generated on
+        re-admission — same tokens, but on the CURRENT param version. A
+        request over its `max_retries` budget fails terminally instead
+        of requeueing (finish_reason 'retries')."""
         others = [s for s in self.scheduler.active if s != keep_slot]
         if not others:
             return False
         victim = max(others, key=lambda s: self._admit_seq[s])
+        handle = self.scheduler.active[victim]
         self._release_slot_pages(victim)
         self.scheduler.preempt(victim)
         self.stats["preemptions"] += 1
+        if handle.failed:
+            self.stats["failed"] += 1
+        else:
+            self.stats["retries"] += 1
         return True
 
     def _claim_page(self, slot: int, lp: int):
@@ -931,7 +1039,11 @@ class ServeEngine:
         under one set of weights or not at all), all-greedy (sampled
         requests bypass speculation), and pos + k < capacity for every
         active slot — the no-wrap/no-clamp contract that makes verify
-        rows exactly pos+t and rollback a pure pos rewrite."""
+        rows exactly pos+t and rollback a pure pos rewrite. The first
+        pressure-ladder rung also lands here: degraded mode sheds the
+        draft's extra dispatches before touching admissions."""
+        if self._ladder is not None and self._ladder.level >= 1:
+            return False
         active = self.scheduler.active
         if not active:
             return False
@@ -1179,7 +1291,19 @@ class ServeEngine:
                "kv_bytes_in_use": self.stats["kv_bytes_in_use"],
                "peak_kv_bytes": self.stats["peak_kv_bytes_in_use"],
                "prefix_hits": self.stats["prefix_hits"],
-               "prefix_tokens_reused": self.stats["prefix_tokens_reused"]}
+               "prefix_tokens_reused": self.stats["prefix_tokens_reused"],
+               # resilience counters: every submitted request ends in
+               # completed or failed; failed splits into deadline kills,
+               # retry-budget exhaustion, and drain-time shedding
+               "failed": self.stats["failed"],
+               "deadline_kills": self.stats["deadline_kills"],
+               "retries": self.stats["retries"],
+               "drained": self.stats["drained"],
+               "restore_fallbacks": self.stats["restore_fallbacks"]}
+        if self._ladder is not None:
+            out["degradation_level"] = self.stats["degradation_level"]
+            out["degradation_changes"] = self.stats["degradation_changes"]
+            out["ladder_preempts"] = self.stats["ladder_preempts"]
         for name, samples in (("ttft", self._ttft), ("tpot", self._tpot)):
             if samples:
                 # host wall-clock stats, not device pulls: `samples` are

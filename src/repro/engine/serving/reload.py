@@ -22,11 +22,19 @@ from __future__ import annotations
 
 from typing import Any, Optional, Tuple
 
+from repro.checkpoint import CheckpointIntegrityError
+
 PyTree = Any
 
 
 class HotReloader:
-    """Polls a CheckpointManager; restores the params subtree on change."""
+    """Polls a CheckpointManager; restores the params subtree on change.
+
+    A corrupt latest step (torn write, bit-flip — anything integrity
+    validation rejects) is quarantined by the manager and the reloader
+    falls back to the next-newest valid step instead of raising into
+    the serve tick: the engine keeps serving, on older weights, and
+    `fallbacks` counts how often that happened."""
 
     def __init__(self, manager, template: PyTree, *,
                  poll_every: int = 1, loaded_step: Optional[int] = None):
@@ -39,6 +47,7 @@ class HotReloader:
         self.template = template
         self.poll_every = max(1, poll_every)
         self.loaded_step = loaded_step
+        self.fallbacks = 0
         self._tick = 0
 
     def poll(self) -> Optional[Tuple[int, PyTree]]:
@@ -47,11 +56,20 @@ class HotReloader:
         self._tick += 1
         if (self._tick - 1) % self.poll_every:
             return None
-        latest = self.manager.latest_step()      # async manager: barrier
-        if latest is None or latest == self.loaded_step:
-            return None
-        if self.loaded_step is not None and latest < self.loaded_step:
-            return None                          # gc'd / rolled back dir
-        params = self.manager.restore_params(self.template, latest)
-        self.loaded_step = latest
-        return latest, params
+        while True:
+            latest = self.manager.latest_step()  # async manager: barrier
+            if latest is None or latest == self.loaded_step:
+                return None
+            if self.loaded_step is not None and latest < self.loaded_step:
+                return None                      # gc'd / rolled back dir
+            try:
+                params = self.manager.restore_params(self.template, latest)
+            except CheckpointIntegrityError as e:
+                # the manager quarantined the step (renamed *.bad), so
+                # latest_step() moves past it next iteration — the loop
+                # strictly descends and terminates
+                self.fallbacks += 1
+                print(f"[reload] skipping corrupt step {latest}: {e}")
+                continue
+            self.loaded_step = latest
+            return latest, params

@@ -218,7 +218,27 @@ class TrainSession:
                 "adaptive_batch": self.config.adaptive_batch,
                 "global_batch": self.config.global_batch,
                 "lr": self.config.lr,
+                "resilience": self._resilience_metadata(),
                 **run_fingerprint(self.config)}
+
+    def _resilience_metadata(self) -> Dict[str, Any]:
+        """Fault-recovery accounting for the run: checkpoint restore
+        fallbacks + quarantined steps (from the manager) and elastic
+        restart/grow-back counts (attached by fit_elastic). Benchmarks
+        record this so a result that survived faults says so."""
+        log = getattr(self, "elastic_log", None) or {}
+        out: Dict[str, Any] = {
+            # cumulative across elastic rebuilds: earlier sessions'
+            # counters are banked in elastic_log by fit_elastic
+            "restore_fallbacks": log.get("prior_restore_fallbacks", 0),
+            "quarantined_steps": list(log.get("prior_quarantined", [])),
+            "restarts": log.get("restarts", 0),
+            "grow_backs": log.get("grow_backs", 0)}
+        if self.checkpoint is not None:
+            out["restore_fallbacks"] += self.checkpoint.restore_fallbacks
+            out["quarantined_steps"] += [
+                q["step"] for q in self.checkpoint.quarantined]
+        return out
 
     def use_delayed_stream(self, comm_delay: float = 0.0):
         """Route steps through a host-level `DelayedCombineStream`: the

@@ -70,6 +70,18 @@ def main(argv=None):
     ap.add_argument("--sample-seed", type=int, default=None,
                     dest="sample_seed",
                     help="base sampling seed (default: per request_id)")
+    ap.add_argument("--deadline-s", type=float, default=0.0,
+                    dest="deadline_s",
+                    help="per-request wall-clock deadline in seconds "
+                    "(0 = none); past it the request fails terminally")
+    ap.add_argument("--max-retries", type=int, default=None,
+                    dest="max_retries",
+                    help="preemption retry budget per request (default: "
+                    "unlimited)")
+    ap.add_argument("--pressure-ladder", action="store_true",
+                    dest="pressure_ladder",
+                    help="graceful degradation under kv/queue pressure: "
+                    "shed speculation, pause admissions, preempt")
     ap.add_argument("--ckpt-dir", default="", dest="ckpt_dir")
     ap.add_argument("--hot-reload", action="store_true", dest="hot_reload")
     ap.add_argument("--legacy", action="store_true",
@@ -96,6 +108,7 @@ def main(argv=None):
                        prefix_sharing=not args.no_prefix_sharing,
                        speculation_k=args.speculation_k,
                        draft_config=draft_config,
+                       pressure_ladder=args.pressure_ladder,
                        ckpt_dir=args.ckpt_dir,
                        hot_reload=args.hot_reload).validate()
     rng = np.random.RandomState(1)
@@ -152,7 +165,9 @@ def main(argv=None):
         handles.append(engine.submit(GenerationRequest(
             prompt=prompt, max_new_tokens=args.gen,
             temperature=args.temperature, top_k=args.top_k,
-            top_p=args.top_p, seed=seed, stream=stream)))
+            top_p=args.top_p, seed=seed, stream=stream,
+            deadline_s=args.deadline_s or None,
+            max_retries=args.max_retries)))
         for _ in range(args.stagger):
             engine.step()
     engine.drain()
@@ -160,10 +175,16 @@ def main(argv=None):
     tp = engine.throughput()
     lat = {k: tp.pop(k) for k in list(tp)
            if k.startswith(("ttft_", "tpot_"))}
+    res = {k: tp.pop(k) for k in
+           ("failed", "deadline_kills", "retries", "drained",
+            "restore_fallbacks", "degradation_level",
+            "degradation_changes", "ladder_preempts") if k in tp}
     fields = " ".join(
         f"{k}={v:.2f}" if isinstance(v, float) else f"{k}={v}"
         for k, v in tp.items())
     print(f"[serve] {fields}")
+    print("[serve] resilience " + " ".join(
+        f"{k}={v}" for k, v in res.items()))
     if lat:
         print("[serve] latency " + " ".join(
             f"{k[:-2]}_ms={v * 1e3:.1f}" for k, v in lat.items()))
@@ -187,7 +208,15 @@ def main(argv=None):
     for h in handles:
         print(f"[serve] req {h.request.request_id} "
               f"({h.finish_reason}): {h.tokens}")
-    if tp["completed"] != args.requests:
+    # every submitted request must be terminal (completed or, with
+    # deadlines/retry budgets in force, failed) — never hung
+    terminal = tp["completed"] + res.get("failed", 0)
+    if terminal != args.requests:
+        print(f"[serve] ERROR: {terminal}/{args.requests} terminal",
+              file=sys.stderr)
+        sys.exit(1)
+    if tp["completed"] != args.requests and not (
+            args.deadline_s or args.max_retries is not None):
         print(f"[serve] ERROR: {tp['completed']}/{args.requests} completed",
               file=sys.stderr)
         sys.exit(1)

@@ -47,6 +47,12 @@ def main(argv=None):
         print(f"[train] done: final loss {history[-1]['loss']:.4f}")
     else:
         print(f"[train] nothing to do: run already at step {cfg.steps}")
+    res = session.run_metadata().get("resilience", {})
+    if any(res.get(k) for k in ("restore_fallbacks", "quarantined_steps",
+                                "restarts", "grow_backs")):
+        print("[train] resilience " + " ".join(
+            f"{k}={len(v) if isinstance(v, list) else v}"
+            for k, v in res.items()))
     if args.metrics_out:
         Path(args.metrics_out).write_text(json.dumps(history))
     return history

@@ -1,6 +1,7 @@
 from .monitor import (StepMonitor, StragglerConfig, FailureInjector,
                       NodeLossError, next_power_of_two_below)
 from .prefetch import DelayedSource, Prefetcher
-from .elastic import (ElasticPlan, ResizePlan, ResizeSignal, RestartSignal,
-                      plan_grow, plan_shrink)
+from .elastic import (ElasticPlan, GrowBackSignal, ResizePlan, ResizeSignal,
+                      RestartSignal, plan_grow, plan_grow_back, plan_shrink,
+                      plan_shrink_batch)
 from .delayed import DelayedCombineStream

@@ -30,15 +30,37 @@ class RestartSignal(Exception):
         self.reason = reason
 
 
+class GrowBackSignal(Exception):
+    """Capacity returned: a callback asks the elastic driver to re-expand
+    the DP degree at `step` (caught by `fit_elastic`, which saves,
+    rebuilds at the target DP, and resumes — LR rescaled by the AdaScale
+    gain of the growth factor, per §5.4 no other hyperparameter moves)."""
+
+    def __init__(self, step: int, target_dp: int = 0,
+                 reason: str = "capacity returned"):
+        super().__init__(f"elastic grow-back requested at step {step} "
+                         f"({reason})")
+        self.step = step
+        self.target_dp = target_dp   # 0 => the run's original DP degree
+        self.reason = reason
+
+
 @dataclasses.dataclass(frozen=True)
 class ElasticPlan:
-    """One shrink decision: the DP degree to restart at."""
+    """One elastic decision: the DP degree to restart at (and, for a
+    grow-back, the LR to restart with)."""
     old_dp: int
     new_dp: int
+    old_lr: float = 0.0
+    new_lr: float = 0.0
 
     @property
     def shrunk(self) -> bool:
         return self.new_dp < self.old_dp
+
+    @property
+    def grew(self) -> bool:
+        return self.new_dp > self.old_dp
 
 
 def plan_shrink(dp_total: int) -> ElasticPlan:
@@ -48,6 +70,23 @@ def plan_shrink(dp_total: int) -> ElasticPlan:
     if dp_total <= 1:
         return ElasticPlan(dp_total, dp_total)
     return ElasticPlan(dp_total, next_power_of_two_below(dp_total))
+
+
+def plan_grow_back(dp_total: int, target_dp: int, lr: float, *,
+                   lr_scale: float = 1.0) -> ElasticPlan:
+    """The reverse of `plan_shrink`, for when capacity returns: re-expand
+    DP to the largest power of two <= `target_dp`. New LR = lr *
+    lr_scale, where the caller computes lr_scale as the AdaScale gain of
+    the growth factor from live CombineStats (1.0 with no stats — per
+    §5.4 the run stays safe either way, the gain just recovers the
+    larger batch's efficiency). A target at or below the current degree
+    yields a no-op plan (`plan.grew` False)."""
+    new_dp = 1
+    while new_dp * 2 <= max(target_dp, 1):
+        new_dp *= 2
+    if new_dp <= dp_total:
+        return ElasticPlan(dp_total, dp_total, lr, lr)
+    return ElasticPlan(dp_total, new_dp, lr, float(lr * lr_scale))
 
 
 # ------------------------------------------------------- planned resize
@@ -72,8 +111,8 @@ class ResizeSignal(Exception):
 
 @dataclasses.dataclass(frozen=True)
 class ResizePlan:
-    """One controller growth decision, fully resolved: the batch/span/LR
-    to rebuild the session with."""
+    """One controller resize decision (growth or shrink), fully
+    resolved: the batch/span/LR to rebuild the session with."""
     old_batch: int
     new_batch: int
     old_span: int
@@ -86,6 +125,15 @@ class ResizePlan:
     def grew(self) -> bool:
         return (self.new_batch > self.old_batch
                 or self.new_span > self.old_span)
+
+    @property
+    def shrank(self) -> bool:
+        return self.new_batch < self.old_batch
+
+    @property
+    def changed(self) -> bool:
+        return (self.new_batch != self.old_batch
+                or self.new_span != self.old_span)
 
     def describe(self) -> str:
         return (f"batch {self.old_batch}->{self.new_batch}, "
@@ -130,5 +178,38 @@ def plan_grow(global_batch: int, span: int, dp_total: int, lr: float, *,
     if new_batch == global_batch:
         return ResizePlan(global_batch, global_batch, span, span, lr, lr,
                           reason="capped")
+    return ResizePlan(global_batch, new_batch, span, new_span, lr,
+                      float(lr * lr_scale), reason=reason)
+
+
+def plan_shrink_batch(global_batch: int, span: int, dp_total: int,
+                      lr: float, *, factor: int = 2,
+                      shrink_span: bool = True, min_global_batch: int = 0,
+                      lr_scale: float = 1.0,
+                      reason: str = "noise-low") -> ResizePlan:
+    """`plan_grow` in reverse — the controller's shrink direction when
+    the noise scale falls BELOW the hysteresis band (the batch is larger
+    than the gradient noise justifies, so smaller batches buy the same
+    progress per sample):
+
+      * new batch = old // factor, floored at max(min_global_batch, 1);
+      * span shrinks with it when `shrink_span` (floor 1), and the new
+        batch must stay divisible by the new span (lane rows stay
+        integral);
+      * new lr = lr * lr_scale — the caller computes lr_scale (1/gain
+        for adascale, 1/factor linear, 1.0 none).
+
+    When the floor binds the plan is a no-change no-op (`plan.changed`
+    False) and the controller stops planning shrinks.
+    """
+    assert factor >= 2, factor
+    new_batch = global_batch // factor
+    new_span = span
+    if shrink_span and span > 1:
+        new_span = max(1, span // factor)
+    floor = max(min_global_batch, 1)
+    if new_batch < floor or new_batch < new_span or new_batch % new_span:
+        return ResizePlan(global_batch, global_batch, span, span, lr, lr,
+                          reason="floored")
     return ResizePlan(global_batch, new_batch, span, new_span, lr,
                       float(lr * lr_scale), reason=reason)

@@ -1,0 +1,658 @@
+"""Chaos-injection + end-to-end resilience (repro.chaos and friends).
+
+The contract under test, per fault class:
+
+  * checkpoint corruption (bit-flip / torn write / missing leaf) ->
+    restore validates per-leaf crc32s, quarantines the bad step
+    (`*.bad`) and falls back to last-good — one clear ValueError when
+    nothing valid remains, never a raw KeyError/FileNotFoundError;
+  * capacity loss -> `fit_elastic` shrinks DP; capacity return
+    (`GrowBackSignal`) re-expands through the SAME save -> rebuild ->
+    resume machinery with the LR rescaled by the AdaScale gain, the
+    pure-(seed, step) stream staying contiguous across both directions;
+  * noise collapse -> the BatchController's shrink band halves
+    batch/span through the planned-resize machinery (growth's inverse);
+  * SIGTERM -> train exits 143 with a consistent last-good checkpoint
+    (including mid-elastic-rebuild); serve drains: in-flight requests
+    finish, queued ones end terminally;
+  * serve pressure -> deadlines kill overdue requests, retry budgets
+    bound preemption churn, the PressureLadder sheds speculation /
+    admissions / slots in order — and every submitted request is
+    ALWAYS terminal, with zero leaked KV pages after drain.
+"""
+import numpy as np
+import pytest
+
+from conftest import run_in_subprocess
+
+from repro.chaos import (ChaosSchedule, FaultEvent, bitflip_leaf,
+                         drop_leaf, drop_manifest, tear_leaf)
+from repro.checkpoint import CheckpointIntegrityError, CheckpointManager
+from repro.control.controller import BatchController, ControllerConfig
+from repro.runtime import plan_grow_back, plan_shrink_batch
+from repro.engine.serving.scheduler import PressureLadder
+
+
+def _state(seed=0):
+    rng = np.random.RandomState(seed)
+    return {"step": np.int64(seed),
+            "params": {"w": rng.randn(4, 3).astype(np.float32),
+                       "b": rng.randn(3).astype(np.float32)}}
+
+
+# ===================================================== checkpoint integrity
+class TestCheckpointIntegrity:
+    def _mgr(self, tmp_path, steps=(1, 2)):
+        mgr = CheckpointManager(tmp_path / "ck", keep=5)
+        for s in steps:
+            mgr.save(s, _state(s))
+        return mgr
+
+    def test_bitflip_quarantines_and_falls_back(self, tmp_path, capsys):
+        mgr = self._mgr(tmp_path)
+        assert bitflip_leaf(mgr.root) == 2
+        out = mgr.restore(_state())          # step=None: newest-first walk
+        assert int(out["step"]) == 1         # fell back to last-good
+        assert mgr.restore_fallbacks == 1
+        assert [q["step"] for q in mgr.quarantined] == [2]
+        assert (mgr.root / "step_00000002.bad").exists()
+        assert mgr.latest_step() == 1        # .bad invisible to listing
+        assert "checksum mismatch" in str(mgr.quarantined[0]["problems"])
+        assert "quarantined step 2" in capsys.readouterr().out
+
+    def test_torn_write_falls_back(self, tmp_path):
+        mgr = self._mgr(tmp_path)
+        assert tear_leaf(mgr.root) == 2
+        assert int(mgr.restore(_state())["step"]) == 1
+        assert "unreadable leaf" in str(mgr.quarantined[0]["problems"])
+
+    def test_missing_leaf_falls_back(self, tmp_path):
+        mgr = self._mgr(tmp_path)
+        assert drop_leaf(mgr.root) == 2
+        assert int(mgr.restore(_state())["step"]) == 1
+        assert "missing leaf" in str(mgr.quarantined[0]["problems"])
+
+    def test_drop_manifest_step_invisible(self, tmp_path):
+        mgr = self._mgr(tmp_path)
+        assert drop_manifest(mgr.root) == 2
+        # no manifest => the dir no longer matches all_steps at all:
+        # silent fallback, not quarantine
+        assert mgr.latest_step() == 1
+        assert int(mgr.restore(_state())["step"]) == 1
+        assert mgr.restore_fallbacks == 0 and not mgr.quarantined
+
+    def test_explicit_bad_step_raises_naming_step(self, tmp_path):
+        mgr = self._mgr(tmp_path)
+        bitflip_leaf(mgr.root)
+        with pytest.raises(CheckpointIntegrityError,
+                           match="step 2 failed integrity"):
+            mgr.restore(_state(), step=2)
+        # the explicit restore still quarantined it
+        assert (mgr.root / "step_00000002.bad").exists()
+
+    def test_all_corrupt_is_one_clear_valueerror(self, tmp_path):
+        mgr = self._mgr(tmp_path)
+        for d in mgr.root.glob("step_*"):    # tear a leaf in EVERY step
+            f = sorted(d.glob("leaf-*.npy"))[0]
+            f.write_bytes(f.read_bytes()[:8])
+        with pytest.raises(ValueError, match="no valid checkpoints"):
+            mgr.restore(_state())
+        assert len(mgr.quarantined) == 2
+
+    def test_empty_dir_is_valueerror(self, tmp_path):
+        mgr = CheckpointManager(tmp_path / "ck")
+        with pytest.raises(ValueError, match="no checkpoints under"):
+            mgr.restore(_state())
+
+    def test_restore_params_missing_leaves_named(self, tmp_path):
+        """Structural mismatch must be ONE ValueError naming the step
+        and the missing leaves — never a raw KeyError."""
+        mgr = self._mgr(tmp_path, steps=(3,))
+        template = {"w": np.zeros((4, 3), np.float32),
+                    "b": np.zeros(3, np.float32),
+                    "extra": np.zeros(2, np.float32),
+                    "more": np.zeros(2, np.float32)}
+        with pytest.raises(ValueError) as ei:
+            mgr.restore_params(template)
+        msg = str(ei.value)
+        assert "step 3" in msg and "2 params" in msg
+        assert "['extra']" in msg and "['more']" in msg
+        assert not isinstance(ei.value, KeyError)
+
+    def test_validate_step_lists_every_problem(self, tmp_path):
+        mgr = self._mgr(tmp_path, steps=(1,))
+        assert mgr.validate_step(1) == []
+        tear_leaf(mgr.root, index=0)
+        drop_leaf(mgr.root, index=1)
+        probs = mgr.validate_step(1)
+        assert len(probs) == 2
+        assert any("unreadable" in p for p in probs)
+        assert any("missing leaf" in p for p in probs)
+
+    def test_legacy_manifest_without_crc_tolerated(self, tmp_path):
+        import json
+        mgr = self._mgr(tmp_path, steps=(1,))
+        mf = mgr.root / "step_00000001" / "manifest.json"
+        meta = json.loads(mf.read_text())
+        for leaf in meta["leaves"]:
+            leaf.pop("crc32", None)
+        mf.write_text(json.dumps(meta))
+        assert mgr.validate_step(1) == []    # pre-integrity ckpt loads
+        assert int(mgr.restore(_state())["step"]) == 1
+
+
+# ========================================================== chaos schedule
+class TestChaosSchedule:
+    def test_seeded_generation_is_deterministic(self):
+        a = ChaosSchedule.generate(11, 200, rate=0.2)
+        b = ChaosSchedule.generate(11, 200, rate=0.2)
+        assert a.pending() == b.pending() and len(a) > 5
+        c = ChaosSchedule.generate(12, 200, rate=0.2)
+        assert a.pending() != c.pending()
+
+    def test_at_take_consume_events(self):
+        s = ChaosSchedule([FaultEvent(3, "node_loss"),
+                           FaultEvent(3, "comm_spike", 0.01),
+                           FaultEvent(5, "ckpt_bitflip")])
+        assert [e.kind for e in s.at(3, kinds=("node_loss",))] \
+            == ["node_loss"]
+        assert len(s) == 2                   # popped, not copied
+        e = s.take_one(("ckpt_bitflip", "ckpt_torn"))
+        assert e.kind == "ckpt_bitflip" and len(s) == 1
+        assert s.take_one(("ckpt_torn",)) is None
+        assert [e.kind for e in s.take(("comm_spike",))] == ["comm_spike"]
+        assert not s.pending() and len(s.applied) == 3
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            ChaosSchedule([FaultEvent(1, "meteor")])
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            ChaosSchedule.generate(0, 10, kinds=("meteor",))
+
+
+# =========================================================== elastic plans
+class TestElasticPlans:
+    def test_grow_back_to_power_of_two(self):
+        p = plan_grow_back(2, 8, 0.1, lr_scale=1.5)
+        assert (p.old_dp, p.new_dp) == (2, 8) and p.grew
+        assert p.new_lr == pytest.approx(0.15)
+        assert plan_grow_back(2, 7, 0.1).new_dp == 4   # largest pow2 <= 7
+
+    def test_grow_back_noop_at_or_below_current(self):
+        for target in (8, 4, 0):
+            p = plan_grow_back(8, target, 0.1)
+            assert not p.grew and p.new_dp == 8 and p.new_lr == 0.1
+
+    def test_shrink_batch_halves_batch_and_span(self):
+        p = plan_shrink_batch(16, 4, 8, 0.2, lr_scale=0.5)
+        assert (p.new_batch, p.new_span) == (8, 2) and p.shrank
+        assert p.new_lr == pytest.approx(0.1)
+        assert plan_shrink_batch(16, 4, 8, 0.2,
+                                 shrink_span=False).new_span == 4
+
+    def test_shrink_batch_floors(self):
+        p = plan_shrink_batch(8, 2, 8, 0.2, min_global_batch=8)
+        assert not p.changed and p.reason == "floored"
+        p = plan_shrink_batch(2, 2, 8, 0.2)   # new batch 1 < span 1? no:
+        assert p.changed and (p.new_batch, p.new_span) == (1, 1)
+        p = plan_shrink_batch(1, 1, 8, 0.2)   # nothing below 1
+        assert not p.changed
+
+
+# ======================================================== controller shrink
+class TestControllerShrink:
+    # ema=0.0: the EMA tracks the raw value, so scripted noise
+    # sequences drive the bands deterministically
+    CFG = ControllerConfig(grow_threshold=2.0, shrink_threshold=0.25,
+                           patience=2, cooldown=0, warmup=1, ema=0.0,
+                           lr_rescale="linear", min_global_batch=8)
+
+    def _ctrl(self, cfg=None):
+        return BatchController(cfg or self.CFG, global_batch=16, span=2,
+                               dp_total=8, lr=0.2)
+
+    def test_shrink_fires_below_band(self):
+        c = self._ctrl()
+        plans = [c.observe(s, {"noise_scale": 1.0}) for s in range(4)]
+        plan = next(p for p in plans if p)
+        assert plan.shrank and (plan.new_batch, plan.new_span) == (8, 1)
+        assert plan.new_lr == pytest.approx(0.1)     # linear: lr / factor
+        assert "ema_noise" in plan.reason and "<" in plan.reason
+
+    def test_reset_band_clears_shrink_patience(self):
+        c = self._ctrl()
+        assert c.observe(0, {"noise_scale": 1.0}) is None
+        # above 2x the shrink band: patience resets, so two more
+        # low-noise steps are needed before a plan fires
+        assert c.observe(1, {"noise_scale": 30.0}) is None
+        assert c.observe(2, {"noise_scale": 1.0}) is None
+        plan = c.observe(3, {"noise_scale": 1.0})
+        assert plan is not None and plan.shrank
+
+    def test_floor_stops_shrinking_grow_reenables(self):
+        c = self._ctrl()
+        plan = next(p for p in (c.observe(s, {"noise_scale": 1.0})
+                                for s in range(4)) if p)
+        c.notify_resized(plan)               # now at batch 8 == floor
+        for s in range(4, 10):
+            assert c.observe(s, {"noise_scale": 1.0}) is None
+        assert c._shrink_stopped
+        # high noise grows again, which re-arms the shrink direction
+        grow = next(p for p in (c.observe(s, {"noise_scale": 100.0})
+                                for s in range(10, 16)) if p)
+        assert grow.grew
+        c.notify_resized(grow)
+        assert not c._shrink_stopped
+
+    def test_shrink_reenables_exhausted_growth(self):
+        cfg = ControllerConfig(grow_threshold=2.0, shrink_threshold=0.25,
+                               patience=1, cooldown=0, warmup=1, ema=0.0,
+                               lr_rescale="none", max_global_batch=16)
+        c = self._ctrl(cfg)                  # already at the 16 cap
+        for s in range(3):
+            assert c.observe(s, {"noise_scale": 100.0}) is None
+        assert c._exhausted
+        plan = next(p for p in (c.observe(s, {"noise_scale": 1.0})
+                                for s in range(3, 8)) if p)
+        assert plan.shrank
+        c.notify_resized(plan)
+        assert not c._exhausted              # headroom under the cap again
+
+    def test_band_overlap_rejected(self):
+        with pytest.raises(AssertionError):
+            BatchController(
+                ControllerConfig(grow_threshold=2.0, shrink_threshold=2.0),
+                global_batch=8, span=1, dp_total=8, lr=0.1)
+
+    def test_engine_config_validation_and_cli(self):
+        from repro.engine import EngineConfig
+        with pytest.raises(ValueError, match="shrink_threshold"):
+            EngineConfig(shrink_threshold=-1.0).validate()
+        with pytest.raises(ValueError, match="oscillates"):
+            EngineConfig(grow_threshold=2.0,
+                         shrink_threshold=2.5).validate()
+        with pytest.raises(ValueError, match="min_global_batch"):
+            EngineConfig(min_global_batch=-4).validate()
+        cfg = EngineConfig.from_cli(
+            ["--arch", "hymba-1p5b", "--shrink-threshold", "0.5",
+             "--min-global-batch", "4", "--pressure-ladder"])
+        assert cfg.shrink_threshold == 0.5
+        assert cfg.min_global_batch == 4
+        assert cfg.pressure_ladder is True
+        assert EngineConfig.from_dict(cfg.to_dict()) == cfg
+
+
+# ========================================================== pressure ladder
+class TestPressureLadder:
+    def test_escalates_and_decays_with_hysteresis(self):
+        lad = PressureLadder(enter=(0.25, 0.10, 0.02), exit_margin=1.5)
+        up = lambda f, q=0: lad.update(free_frac=f, queue_len=q,
+                                       max_slots=4)
+        assert up(0.9) == 0 and lad.name == "normal"
+        assert up(0.2) == 1 and lad.name == "no_spec"
+        assert up(0.05) == 2 and lad.name == "no_admit"
+        assert up(0.0) == 3 and lad.name == "preempt"
+        # decay needs 1.5x the rung's entry margin, one rung at a time
+        assert up(0.025) == 3                # 0.025 < 0.02*1.5
+        assert up(0.05) == 2                 # >= 0.03: drop one rung
+        assert up(0.05) == 2                 # < 0.10*1.5: held
+        assert up(0.2) == 1
+        assert up(0.9) == 0
+        assert lad.changes == 6              # 3 up + 3 down
+
+    def test_queue_pressure_alone_degrades(self):
+        lad = PressureLadder(queue_factor=4)
+        assert lad.update(free_frac=1.0, queue_len=3, max_slots=1) == 0
+        assert lad.update(free_frac=1.0, queue_len=4, max_slots=1) == 1
+        # hot queue also blocks decay from a deeper rung
+        assert lad.update(free_frac=0.01, queue_len=4, max_slots=1) >= 2
+        assert lad.update(free_frac=1.0, queue_len=0, max_slots=1) < 2
+
+
+# ============================================== grow-back / shrink e2e (8dv)
+class TestElasticRoundTrip:
+    def test_shrink_then_grow_back_resumes_contiguous(self):
+        """Acceptance: node loss shrinks 8 -> 4; CapacityReturnCallback
+        grows back 4 -> 8 through the same machinery; the (seed, step)
+        stream is consumed exactly once in order; LR ends rescaled by
+        the logged AdaScale gain; run_metadata carries the counts."""
+        run_in_subprocess(r"""
+import numpy as np, tempfile
+from repro.chaos import CapacityReturnCallback
+from repro.engine import (EngineConfig, FailureInjectionCallback,
+                          LoggingCallback, StragglerCallback, fit_elastic)
+
+seen, dps = [], []
+class Record:
+    def on_fit_end(self, session, history): ...
+    def on_step_end(self, session, step, metrics, dt): ...
+    def on_fit_start(self, session, start):
+        dps.append((start, session.runtime.dp_total))
+    def on_step_start(self, session, step):
+        seen.append(step)
+
+with tempfile.TemporaryDirectory() as root:
+    cfg = EngineConfig(arch="hymba-1p5b", reduced=True, combine="adasum",
+                       seq_len=32, global_batch=8, lr=0.01,
+                       ckpt_dir=root + "/ck", ckpt_every=100,
+                       log_every=1, elastic=True, combine_stats=True)
+    cbs = [LoggingCallback(1), StragglerCallback(), Record(),
+           FailureInjectionCallback([2]), CapacityReturnCallback(delay=1)]
+    hist, sess = fit_elastic(cfg, 6, callbacks=cbs)
+
+    # 8 -> (loss at step 2) -> 4 -> (capacity back after step 2) -> 8
+    assert dps == [(0, 8), (2, 4), (3, 8)], dps
+    # stream contiguity: step 2 is recorded, aborted by the injected
+    # loss before executing, then replayed once after the rebuild —
+    # every step EXECUTES exactly once, in order
+    assert seen == [0, 1, 2, 2, 3, 4, 5], seen
+    assert [h["step"] for h in hist] == list(range(6))
+    assert np.isfinite([h["loss"] for h in hist]).all()
+    log = sess.elastic_log
+    assert log["restarts"] == 1 and log["grow_backs"] == 1
+    kinds = [p["kind"] for p in log["plans"]]
+    assert kinds == ["shrink", "grow_back"], kinds
+    gb = log["plans"][-1]
+    assert (gb["old_dp"], gb["new_dp"]) == (4, 8)
+    # LR restarted at exactly the planned gain-rescaled value
+    assert sess.config.lr == gb["new_lr"]
+    assert 1.0 <= gb["gain"] <= 2.0 + 1e-6, gb
+    md = sess.run_metadata()["resilience"]
+    assert md["restarts"] == 1 and md["grow_backs"] == 1
+    assert md["restore_fallbacks"] == 0 and md["quarantined_steps"] == []
+    sess.close()
+print("OK")
+""", devices=8, timeout=900)
+
+    def test_corrupt_boundary_checkpoint_restores_last_good(self):
+        """on_restart corrupts the just-written boundary checkpoint;
+        the rebuild must quarantine it, fall back to the previous save,
+        and REPLAY the lost steps — same final step set, fallback
+        counted in run_metadata."""
+        run_in_subprocess(r"""
+import numpy as np, tempfile
+from repro.chaos import ChaosSchedule, FaultEvent, make_chaos_on_restart
+from repro.engine import (CheckpointCallback, EngineConfig,
+                          FailureInjectionCallback, LoggingCallback,
+                          StragglerCallback, fit_elastic)
+
+seen = []
+class Record:
+    def on_fit_start(self, session, start): ...
+    def on_fit_end(self, session, history): ...
+    def on_step_end(self, session, step, metrics, dt): ...
+    def on_step_start(self, session, step):
+        seen.append(step)
+
+with tempfile.TemporaryDirectory() as root:
+    ck = root + "/ck"
+    cfg = EngineConfig(arch="hymba-1p5b", reduced=True, combine="adasum",
+                       seq_len=32, global_batch=8, ckpt_dir=ck,
+                       ckpt_every=2, log_every=1, elastic=True)
+    sched = ChaosSchedule([FaultEvent(0, "ckpt_bitflip")])
+    cbs = [LoggingCallback(1), StragglerCallback(), Record(),
+           CheckpointCallback(2), FailureInjectionCallback([3])]
+    hist, sess = fit_elastic(cfg, 5, callbacks=cbs,
+                             on_restart=make_chaos_on_restart(sched, ck))
+
+    # boundary save at step 3 was bit-flipped: restore quarantined it
+    # and resumed from the periodic step-2 save, replaying step 2
+    assert seen == [0, 1, 2, 3, 2, 3, 4], seen
+    # step 3's first attempt aborted at step START, so it has no
+    # history row; the replayed 2 does (recorded both times it ran)
+    assert [h["step"] for h in hist] == [0, 1, 2, 2, 3, 4], hist
+    res = sess.run_metadata()["resilience"]
+    assert res["restore_fallbacks"] == 1, res
+    assert res["quarantined_steps"] == [3], res
+    assert not sched.pending()
+    sess.close()
+print("OK")
+""", devices=8, timeout=900)
+
+    def test_sigterm_during_elastic_rebuild_window(self):
+        """SIGTERM landing between the shrink and the first resumed step
+        must exit 143 with the boundary checkpoint intact + valid."""
+        run_in_subprocess(r"""
+import os, signal, subprocess, sys, tempfile
+root = tempfile.mkdtemp()
+code = '''
+import os, signal
+from repro.engine import (Callback, EngineConfig, FailureInjectionCallback,
+                          LoggingCallback, StragglerCallback, fit_elastic)
+
+class TermInWindow(Callback):
+    # first step of the REBUILT (dp=4) session: the rebuild window
+    def on_step_start(self, session, step):
+        if session.runtime.dp_total < 8 and step == 2:
+            os.kill(os.getpid(), signal.SIGTERM)
+
+cfg = EngineConfig(arch="hymba-1p5b", reduced=True, combine="adasum",
+                   seq_len=32, global_batch=8, ckpt_dir=%r,
+                   ckpt_every=100, log_every=1, elastic=True,
+                   async_checkpoint=True)
+cbs = [LoggingCallback(1), StragglerCallback(), TermInWindow(),
+       FailureInjectionCallback([2])]
+fit_elastic(cfg, 6, callbacks=cbs)
+''' % (root + "/ck")
+env = dict(os.environ)
+env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+res = subprocess.run([sys.executable, "-c", code], env=env,
+                     capture_output=True, text=True, timeout=600)
+assert res.returncode == 143, (res.returncode, res.stdout, res.stderr)
+
+# the checkpoint left behind is consistent and restorable
+from repro.checkpoint import CheckpointManager
+mgr = CheckpointManager(root + "/ck")
+latest = mgr.latest_step()
+assert latest is not None and mgr.validate_step(latest) == [], latest
+print("OK")
+""", devices=1, timeout=900)
+
+    def test_grow_then_shrink_contiguity_through_resize_machinery(self):
+        """Regression (satellite): a scripted grow at step 3 then shrink
+        at step 7 both execute through the planned-resize machinery with
+        the stream contiguous and batch rows tracking the plans."""
+        run_in_subprocess(r"""
+import numpy as np, tempfile
+from repro.configs.base import ModelConfig
+from repro.engine import EngineConfig
+from repro.models import build_model
+from repro.launch.mesh import make_mesh_compat
+from repro.control import fit_adaptive
+from repro.control.controller import BatchController, ControllerConfig
+from repro.runtime.elastic import plan_grow, plan_shrink_batch
+
+mcfg = ModelConfig("ctl-tiny", "dense", 2, 64, 4, 2, 128, 257, head_dim=16)
+model = build_model(mcfg, attn_chunk=32)
+mesh = make_mesh_compat((8, 1), ("data", "model"))
+
+class Scripted(BatchController):
+    # deterministic plans at fixed steps: the machinery is under test,
+    # not the noise statistics
+    def observe(self, step, metrics):
+        if step == 3 and self.global_batch == 8:
+            return plan_grow(self.global_batch, self.span, self.dp_total,
+                             self.lr, lr_scale=2.0)
+        if step == 7 and self.global_batch == 16:
+            return plan_shrink_batch(self.global_batch, self.span,
+                                     self.dp_total, self.lr, lr_scale=0.5)
+        return None
+
+seen = []
+class Record:
+    def on_fit_start(self, session, start): ...
+    def on_fit_end(self, session, history): ...
+    def on_step_end(self, session, step, metrics, dt): ...
+    def on_step_start(self, session, step):
+        seen.append((step, session.config.global_batch))
+
+with tempfile.TemporaryDirectory() as ckpt:
+    cfg = EngineConfig(combine="adasum", span=2, backend="gspmd_tree",
+                       optimizer="momentum", lr=0.02, seq_len=32,
+                       global_batch=8, data_seed=11, steps=10,
+                       ckpt_dir=ckpt, ckpt_every=0, adaptive_batch=True)
+    ctrl = Scripted(ControllerConfig(), global_batch=8, span=2,
+                    dp_total=8, lr=0.02)
+    hist, sess = fit_adaptive(cfg, 10, callbacks=[Record()],
+                              controller=ctrl, model=model, mesh=mesh)
+    # contiguous: each step once, in order, across grow AND shrink
+    assert [s for s, _ in seen] == list(range(10)), seen
+    assert [h["step"] for h in hist] == list(range(10))
+    batches = dict(seen)
+    assert batches[3] == 8 and batches[4] == 16    # grew at boundary 4
+    assert batches[7] == 16 and batches[8] == 8    # shrank at boundary 8
+    assert sess.config.global_batch == 8
+    assert sess.config.lr == 0.02                  # 2.0 then 0.5: back
+    kinds = [("grow" if p["new_batch"] > p["old_batch"] else "shrink")
+             for p in sess.resize_log]
+    assert kinds == ["grow", "shrink"], sess.resize_log
+    assert np.isfinite([h["loss"] for h in hist]).all()
+    sess.close()
+print("OK")
+""", devices=8, timeout=900)
+
+
+# ================================================== serve-side resilience
+class TestServeResilience:
+    """In-process: tiny model, 1 host device is enough."""
+
+    def _engine(self, **cfg_kw):
+        import jax
+        import jax.numpy as jnp
+        from repro.configs.base import ModelConfig
+        from repro.engine import EngineConfig, ServeEngine
+        from repro.models import build_model
+        mcfg = ModelConfig("chaos-tiny", "dense", 2, 64, 4, 2, 128, 257,
+                           head_dim=16)
+        model = build_model(mcfg, compute_dtype=jnp.float32, attn_chunk=16)
+        params = model.init(jax.random.key(0))
+        cfg_kw.setdefault("max_slots", 2)
+        cfg_kw.setdefault("max_len", 48)
+        cfg_kw.setdefault("kv_layout", "paged")
+        return ServeEngine(EngineConfig(**cfg_kw), model, None, params)
+
+    def _req(self, n=8, gen=8, **kw):
+        from repro.engine import GenerationRequest
+        rng = np.random.RandomState(3)
+        return GenerationRequest(prompt=rng.randint(0, 257, n),
+                                 max_new_tokens=gen, **kw)
+
+    def test_deadline_kills_are_terminal(self):
+        from repro.chaos import slow_prefill
+        eng = self._engine()
+        undo = slow_prefill(eng, 0.05)
+        h = eng.submit(self._req(deadline_s=1e-6))
+        eng.drain()
+        undo()
+        assert h.done and h.failed and h.finish_reason == "deadline"
+        tp = eng.throughput()
+        assert tp["deadline_kills"] == 1 and tp["failed"] == 1
+        assert tp["completed"] == 0
+        assert eng.leaked_pages() == 0
+
+    def test_no_deadline_requests_unaffected(self):
+        eng = self._engine()
+        h = eng.submit(self._req())
+        eng.drain()
+        assert h.done and not h.failed and h.finish_reason == "length"
+        assert len(h.tokens) == 8
+
+    def test_retry_budget_bounds_preemption(self):
+        """max_retries=0: the first pool-pressure preemption fails the
+        request terminally instead of thrashing."""
+        eng = self._engine(max_slots=2, max_len=48, page_size=8,
+                           kv_pages=7)       # too few pages for 2 slots
+        a = eng.submit(self._req(16, 24))
+        eng.step()
+        b = eng.submit(self._req(16, 24, max_retries=0))
+        eng.drain()
+        assert a.done and not a.failed       # oldest ran to completion
+        assert b.done
+        tp = eng.throughput()
+        assert tp["preemptions"] >= 1
+        if b.failed:                         # b was the preemption victim
+            assert b.finish_reason == "retries"
+            assert tp["failed"] >= 1
+        assert eng.leaked_pages() == 0
+
+    def test_drain_terminates_queued_requests(self):
+        eng = self._engine(max_slots=1)
+        a = eng.submit(self._req(8, 4))
+        eng.step()                           # a admitted into the slot
+        b = eng.submit(self._req(8, 4))      # b stuck in the queue
+        eng.request_drain()
+        assert eng.draining
+        eng.drain()
+        assert a.done and not a.failed       # in-flight finished
+        assert b.done and b.failed and b.finish_reason == "drained"
+        tp = eng.throughput()
+        assert tp["drained"] == 1 and tp["failed"] == 1
+        assert eng.leaked_pages() == 0
+        eng.flush_prefix()
+        assert eng._pool.pages_used == 0     # zero-leak after full flush
+
+    def test_sigterm_handler_drains(self):
+        import os, signal
+        eng = self._engine(max_slots=1)
+        eng.install_drain_handler()
+        a = eng.submit(self._req(8, 4))
+        eng.step()
+        b = eng.submit(self._req(8, 4))
+        os.kill(os.getpid(), signal.SIGTERM)  # handled: drain, no exit
+        eng.drain()
+        signal.signal(signal.SIGTERM, signal.SIG_DFL)
+        assert a.done and not a.failed
+        assert b.failed and b.finish_reason == "drained"
+
+    def test_pressure_ladder_sheds_speculation_first(self):
+        """Ladder level >= 1 must gate _can_speculate; level history is
+        surfaced in throughput()."""
+        eng = self._engine(max_slots=2, max_len=48, page_size=8,
+                           kv_pages=9, pressure_ladder=True)
+        a = eng.submit(self._req(16, 20))
+        b = eng.submit(self._req(16, 20))
+        eng.drain()
+        tp = eng.throughput()
+        assert "degradation_level" in tp and "degradation_changes" in tp
+        assert tp["degradation_changes"] >= 1     # pressure was seen
+        assert a.done and b.done
+        assert eng.leaked_pages() == 0
+
+    def test_ladder_off_by_default_keeps_behavior(self):
+        eng = self._engine()
+        tp_keys_engine = eng.throughput().keys()
+        assert "degradation_level" not in tp_keys_engine
+        assert eng._ladder is None
+
+    def test_hot_reload_corrupt_step_falls_back(self, tmp_path):
+        """A bit-flipped newest checkpoint must be quarantined by the
+        reloader's poll, which falls back to the previous good step —
+        serving never sees the corrupt weights."""
+        import jax
+        from repro.chaos import bitflip_leaf
+        from repro.checkpoint import CheckpointManager
+        eng = self._engine()
+        mgr = CheckpointManager(tmp_path / "ck", keep=5)
+        p1 = jax.tree.map(lambda x: np.asarray(x) * 1.01, eng.params)
+        p2 = jax.tree.map(lambda x: np.asarray(x) * 1.02, eng.params)
+        mgr.save(1, {"params": p1})
+        mgr.save(2, {"params": p2})
+        bitflip_leaf(mgr.root)               # newest (step 2) corrupted
+        from repro.engine import HotReloader
+        eng._reloader = HotReloader(mgr, eng.params)
+        h = eng.submit(self._req(8, 4))
+        eng.drain()
+        assert h.done and not h.failed
+        assert eng.loaded_step == 1          # fell back past step 2
+        assert eng._reloader.fallbacks == 1
+        assert eng.throughput()["restore_fallbacks"] == 1
+        assert (mgr.root / "step_00000002.bad").exists()
+
+    def test_request_validation(self):
+        from repro.engine import GenerationRequest
+        with pytest.raises(ValueError):
+            GenerationRequest(prompt=np.arange(4), max_new_tokens=2,
+                              deadline_s=0.0)
+        with pytest.raises(ValueError):
+            GenerationRequest(prompt=np.arange(4), max_new_tokens=2,
+                              max_retries=-1)

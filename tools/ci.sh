@@ -54,4 +54,8 @@ echo "== speculative decoding smoke (spec-vs-plain bitwise, acceptance > 0) =="
 python -m benchmarks.serve_spec --smoke | grep -q "serve_spec smoke OK" || {
     echo "serve_spec smoke failed"; exit 1; }
 
+echo "== chaos soak smoke (seeded faults, resilience invariants) =="
+python -m benchmarks.chaos_soak --smoke | grep -q "chaos_soak smoke OK" || {
+    echo "chaos_soak smoke failed"; exit 1; }
+
 echo "== ci.sh OK =="
